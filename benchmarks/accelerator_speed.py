@@ -1,0 +1,25 @@
+"""Paper Fig. 8 — speedup of the bounded-RF accelerator over the
+conventional systolic accelerator [22], for N in {128, 256, 512}."""
+from __future__ import annotations
+
+from repro.core import perf_model as pm
+
+
+def run() -> list[str]:
+    rows = []
+    for n in (128, 256, 512):
+        wl = pm.DCLWorkload(n=n, m=n)
+        ours = pm.cycles_ours(wl, 0.005)
+        conv = pm.cycles_conventional(wl, 0.0)
+        s = pm.speedup(n, 0.005)
+        rows.append(
+            f"accelerator_speed/N={n},0,"
+            f"cycles_ours={ours:.3e};cycles_conv={conv:.3e};"
+            f"speedup={s:.2f}x")
+    rows.append("accelerator_speed/paper_claim,0,"
+                "5.28x(N=128)..17.25x(N=512)")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

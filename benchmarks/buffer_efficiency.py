@@ -1,0 +1,25 @@
+"""Paper Fig. 3 — input-buffer efficiency vs capacity at several lambda."""
+from __future__ import annotations
+
+from repro.core import perf_model as pm
+
+CAPS = [64 << 10, 128 << 10, 256 << 10, 512 << 10, 1 << 20, 4 << 20,
+        8 << 20, 14 << 20]
+
+
+def run() -> list[str]:
+    rows = []
+    for lam in (0.0, 0.0075, 0.005, 0.01):
+        effs = ";".join(f"{c >> 10}KiB={pm.buffer_efficiency(c, lam):.3f}"
+                        for c in CAPS)
+        rows.append(f"buffer_efficiency/lam={lam},0,{effs}")
+    rows.append(
+        "buffer_efficiency/stall_free,0,"
+        f"lam0={pm.stall_free_capacity(0.0) / 1e6:.1f}MB;"
+        f"lam005={pm.stall_free_capacity(0.005) / 1e6:.2f}MB;"
+        f"ratio={pm.stall_free_capacity(0.005) / pm.stall_free_capacity(0.0):.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,24 @@
+"""Paper Fig. 9 — energy of the conventional accelerator over ours."""
+from __future__ import annotations
+
+from repro.core import perf_model as pm
+
+
+def run() -> list[str]:
+    rows = []
+    for n in (128, 256, 512):
+        wl = pm.DCLWorkload(n=n, m=n)
+        ours5 = pm.energy_ours(wl, 0.005)
+        ours0 = pm.energy_ours(wl, 0.0)
+        conv = pm.energy_conventional(wl, 0.0)
+        rows.append(
+            f"energy/N={n},0,"
+            f"ours_lam005={ours5 / 1e9:.2f}mJ;ours_lam0={ours0 / 1e9:.2f}mJ;"
+            f"conv={conv / 1e9:.2f}mJ;"
+            f"saving={pm.energy_ratio(n, 0.005):.2f}x")
+    rows.append("energy/paper_claim,0,1.39x saving (combination)")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,64 @@
+"""Benchmark driver — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  * rf_regularizer      — Table I / Fig. 6 / Fig. 7 (lambda sweep)
+  * buffer_efficiency   — Fig. 3
+  * accelerator_speed   — Fig. 8
+  * energy              — Fig. 9
+  * kernel              — Pallas kernels + Eq. 6/7 tile model (Table II
+                          analogue: on TPU the "resources" are VMEM/CTC)
+  * roofline            — summary of the dry-run §Roofline table if the
+                          dry-run artifacts exist (run dryrun.py first)
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (accelerator_speed, buffer_efficiency, energy,
+                            kernel_bench, rf_regularizer)
+    sections = [
+        ("rf_regularizer", rf_regularizer.run),
+        ("buffer_efficiency", buffer_efficiency.run),
+        ("accelerator_speed", accelerator_speed.run),
+        ("energy", energy.run),
+        ("kernel", kernel_bench.run),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in sections:
+        try:
+            for row in fn():
+                print(row)
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"{name},nan,ERROR")
+            traceback.print_exc()
+
+    # roofline summary (optional: requires dry-run artifacts)
+    try:
+        from repro.launch.roofline import load_all
+        rows = load_all("single")
+        ok = [r for r in rows if "error" not in r]
+        if ok:
+            worst = min(ok, key=lambda r: r["roofline_fraction"])
+            best = max(ok, key=lambda r: r["roofline_fraction"])
+            doms = {}
+            for r in ok:
+                doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+            print(f"roofline/cells,0,n={len(ok)};dominant_counts={doms}")
+            print(f"roofline/worst,0,{worst['arch']}x{worst['shape']}="
+                  f"{worst['roofline_fraction']:.3f}")
+            print(f"roofline/best,0,{best['arch']}x{best['shape']}="
+                  f"{best['roofline_fraction']:.3f}")
+    except Exception:  # noqa: BLE001
+        print("roofline/summary,nan,SKIPPED (run repro.launch.dryrun first)")
+
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Multi-pod dry-run walkthrough for ONE cell — the minimal example of
+how the production launch path works (what `repro.launch.dryrun --all`
+does for every cell).
+
+    PYTHONPATH=src python examples/multipod_dryrun.py [--arch glm4-9b]
+
+NOTE: must run as its own process (the 512-device override must precede
+any other jax usage).
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse  # noqa: E402
+import pathlib  # noqa: E402
+import sys  # noqa: E402
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+import jax  # noqa: E402
+
+from repro.distributed.sharding import use_rules  # noqa: E402
+from repro.launch.dryrun import parse_collectives  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.steps import make_train_step  # noqa: E402
+from repro.models import registry as reg  # noqa: E402
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="glm4-9b")
+    ap.add_argument("--multi-pod", action="store_true", default=True)
+    args = ap.parse_args()
+
+    arch = reg.get(args.arch)
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    print(f"mesh: {dict(zip(mesh.axis_names, mesh.devices.shape))} "
+          f"({mesh.devices.size} chips)")
+
+    with use_rules(mesh=mesh):
+        step, in_sh, out_sh, abstract = make_train_step(arch, mesh)
+        lowered = jax.jit(step, in_shardings=in_sh,
+                          out_shardings=out_sh).lower(*abstract)
+        compiled = lowered.compile()
+
+    print("\nmemory analysis (per device):")
+    mem = compiled.memory_analysis()
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes"):
+        if hasattr(mem, k):
+            print(f"  {k:<28} {getattr(mem, k) / 1e9:8.2f} GB")
+
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    print(f"\ncost analysis: flops/device={cost.get('flops', 0):.3e} "
+          f"(scan body counted once; see dryrun.py extrapolation)")
+
+    coll = parse_collectives(compiled.as_text())
+    print("\ncollective schedule (per device program):")
+    for k, v in coll.items():
+        if isinstance(v, dict) and v["count"]:
+            print(f"  {k:<20} x{v['count']:>3}  {v['bytes'] / 1e9:8.3f} GB")
+    print(f"  {'TOTAL':<20} x{coll['total_count']:>3}  "
+          f"{coll['total_bytes'] / 1e9:8.3f} GB")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""Continuous-batching serving demo: stream requests through the engine.
+
+    PYTHONPATH=src python examples/serve_lm.py
+
+Trains a small LM briefly (so generations aren't pure noise), then
+serves a stream of prompts through the slot-based continuous-batching
+engine and verifies one output against naive greedy decoding.
+"""
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import LMDataConfig, lm_batch
+from repro.models.transformer import (ModelConfig, forward, init_params,
+                                      loss_fn)
+from repro.optim import adamw, constant
+from repro.serve import Request, ServeConfig, ServingEngine
+
+
+def main() -> None:
+    cfg = ModelConfig(name="serve-demo", n_layers=3, d_model=48, n_heads=4,
+                      kv_heads=2, d_ff=96, vocab=64, dtype=jnp.float32)
+    data = LMDataConfig(vocab=64, seq_len=48, global_batch=16, seed=0)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    opt = adamw(constant(3e-3))
+    state = opt.init(params)
+
+    @jax.jit
+    def step(p, s, batch, i):
+        (loss, _), g = jax.value_and_grad(
+            lambda pp: loss_fn(pp, cfg, batch), has_aux=True)(p)
+        p2, s2 = opt.update(g, s, p, i)
+        return p2, s2, loss
+
+    for i in range(60):
+        batch = {k: jnp.asarray(v) for k, v in lm_batch(data, i).items()}
+        params, state, loss = step(params, state, batch, jnp.asarray(i))
+    print(f"trained 60 steps, loss {float(loss):.3f}")
+
+    engine = ServingEngine(params, cfg, ServeConfig(slots=4, cache_len=96))
+    rng = np.random.RandomState(0)
+    for uid in range(10):
+        prompt = rng.randint(0, 64, rng.randint(4, 12)).astype(np.int32)
+        engine.submit(Request(uid=uid, prompt=prompt, max_new_tokens=16))
+
+    steps = 0
+    while engine.queue or any(r is not None for r in engine.active):
+        n_active = engine.step()
+        steps += 1
+        if steps % 5 == 0:
+            print(f"decode step {steps}: {n_active} active, "
+                  f"{len(engine.queue)} queued, "
+                  f"{len(engine.completed)} done")
+    print(f"\nserved {len(engine.completed)} requests in {steps} "
+          f"batched decode steps "
+          f"(vs {sum(16 for _ in range(10))} sequential steps)")
+
+    # verify continuous batching == naive greedy for one request
+    req = engine.completed[0]
+    cur = jnp.asarray(req.prompt, jnp.int32)[None]
+    ref = []
+    for _ in range(len(req.output)):
+        logits, _, _ = forward(params, cfg, tokens=cur, mode="train")
+        nxt = int(jnp.argmax(logits[0, -1]))
+        ref.append(nxt)
+        cur = jnp.concatenate([cur, jnp.asarray([[nxt]], jnp.int32)], 1)
+    assert req.output == ref, "continuous batching must match greedy"
+    print("continuous batching == naive greedy decode: OK")
+    print("sample output:", req.output)
+
+
+if __name__ == "__main__":
+    main()

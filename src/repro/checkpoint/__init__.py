@@ -1,0 +1,2 @@
+from .checkpoint import (  # noqa: F401
+    CheckpointManager, save_checkpoint, restore_checkpoint, latest_step)

@@ -1,0 +1,49 @@
+"""recurrentgemma-9b [arXiv:2402.19427]
+
+38L d_model=4096 16H (GQA kv=1, MQA) d_ff=12288 vocab=256000 —
+RG-LRU + local attention, 1 attention : 2 recurrent.
+
+Pattern: (rglru, rglru, attn) x 12 periods + 2 leading recurrent layers
+(= 38).  Local attention window 2048; GeGLU MLP; embeddings scaled by
+sqrt(d); d_rnn (lru width) 4096.
+
+DESIGN.md §Arch-applicability: the local-attention window is itself a
+*statically bounded receptive field* — the same co-design argument the
+paper makes for DCNs (bound the dynamic field so the dataflow tiles
+statically).  Noted as conceptually related; the DCL technique itself is
+conv-specific and not applied here.
+"""
+from repro.models.registry import ArchSpec, LM_SHAPES, register
+from repro.models.transformer import ModelConfig
+from repro.models.rglru import RGLRUConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-9b",
+    n_layers=38,
+    d_model=4096,
+    n_heads=16,
+    kv_heads=1,
+    d_ff=12288,
+    vocab=256000,
+    head_dim=256,
+    norm="rms",
+    act="geglu",
+    use_rope=True,
+    rope_theta=10000.0,
+    window=2048,
+    embed_scale=True,
+    tie_embeddings=True,
+    pattern=("rglru", "rglru", "attn"),
+    rglru=RGLRUConfig(d_model=4096, d_rnn=4096),
+    remat="full",
+)
+
+register(ArchSpec(
+    name="recurrentgemma-9b",
+    family="hybrid",
+    config=CONFIG,
+    shapes=dict(LM_SHAPES),
+    long_context_ok=True,   # windowed KV + LRU state: O(1) per step
+    source="arXiv:2402.19427",
+    notes="runs long_500k (windowed attention + recurrent state).",
+))

@@ -1,0 +1,12 @@
+"""The paper's primary contribution, as a composable JAX module set:
+
+* ``deform_conv``    — deformable convolution (Eq. 1-4) + RF algebra
+* ``rf_regularizer`` — the Eq. 5 loss (hard max + smooth-max variant)
+* ``tiling``         — Eq. 6/7 buffer model + VMEM-aware tile chooser
+* ``perf_model``     — calibrated FPGA cycle/energy model (Figs. 3/8/9)
+"""
+from .deform_conv import (  # noqa: F401
+    DCLConfig, dcl_forward, init_dcl_params, offset_abs_max,
+    receptive_field, sample_patches)
+from .rf_regularizer import (  # noqa: F401
+    OffsetStats, network_offset_max, regularized_loss)

@@ -1,0 +1,272 @@
+"""Analytic performance/energy model of the paper's FPGA evaluation.
+
+The container has no Virtex-7 (nor a TPU); the paper's Fig. 3 / Fig. 8 /
+Fig. 9 are reproduced from an analytic model of the two accelerators:
+
+* **conventional** — Wei et al. DAC'17 [22]: a systolic CNN accelerator
+  with no DCL-aware input buffering.  Bilinear samples that miss the
+  on-chip buffer issue irregular DRAM reads that stall the pipeline.
+* **ours** — the paper's accelerator: the Eq. 5-trained model has a
+  bounded receptive field, the Eq. 6-sized input buffer provably holds
+  every sample, all reads hit on-chip, and the two stages are pipelined.
+
+The model is *calibrated* against the paper's published numbers (13.8 MB
+stall-free buffer at lambda=0, 12.68x RF compression at lambda=0.005,
+5.28x-17.25x speedup for N in {128, 256, 512}, 1.39x energy saving) and
+is used by ``benchmarks/`` to regenerate the figures.  All constants are
+module-level and documented so the calibration is auditable.
+
+Offset-magnitude statistics are modelled as a half-normal distribution
+whose scale is set by the trained ``o_max`` for each lambda (paper
+Fig. 7 histogram); the buffer hit-rate of a capacity-C buffer is then
+the CDF of the coverage radius that C buys via Eq. 6.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from .tiling import input_buffer_size, receptive_field, PAPER_TILES
+
+# ---------------------------------------------------------------------------
+# Calibration constants
+# ---------------------------------------------------------------------------
+
+# Trained network-max offset per lambda (paper Fig. 6/7; lambda=0 chosen so
+# Eq. 6 gives the paper's 13.8 MB stall-free buffer with their tiling).
+O_MAX_BY_LAMBDA: dict[float, float] = {
+    0.0: 37.5,      # RF = 3 + 2*38 = 79  -> Eq.6 ~= 13.8 MB @ T_W=8, T_N=512
+    0.005: 1.6,     # RF = 7; 79/6.23 ... combined with tail mass ~= 12.68x
+    0.0075: 1.2,    # RF = 7
+    0.01: 0.9,      # RF = 5
+}
+
+# Half-normal scale as a fraction of the observed max (tail calibration):
+# P(|o| > o_max) ~ 1e-4 for the validation set => o_max ~= 3.9 sigma.
+_SIGMA_FRACTION = 1.0 / 3.9
+
+KERNEL_SIZE = 3
+FREQ_HZ = 200e6                   # paper-class HLS design frequency
+PE_MACS_PER_CYCLE = 2596 // 2     # ~2596 DSPs, 2 DSP per fp32 MAC
+DRAM_BW_BYTES_PER_S = 12.8e9      # DDR3-1600 x1 channel
+ONCHIP_BW_BYTES_PER_S = 4e9       # paper: "bandwidth between on-chip buffers was 4GB/s"
+DRAM_RANDOM_LATENCY_CYCLES = 130  # queueing + tRC row-cycle penalty @200 MHz
+DRAM_BURST_CYCLES = 1.0           # per 64-B burst once the row is open
+DRAM_BURST_BYTES = 64
+T_M_PASS = 64                     # output-channel tile (the paper's T_M)
+
+# Energy constants (Micron TN-41-01-class DDR3 + 28 nm on-chip estimates).
+E_DRAM_PJ_PER_BYTE_SEQ = 70.0
+E_DRAM_PJ_PER_BYTE_RAND = 120.0   # row-miss overhead on irregular access
+E_BRAM_PJ_PER_BYTE = 2.5          # at the reference 416 KiB capacity
+E_MAC_PJ = 4.5                    # fp32 MAC @28nm
+BRAM_REF_BYTES = 416 * 1024       # BRAM pJ/B scales ~sqrt(capacity/ref)
+
+CONV_BUFFER_BYTES = 416 * 1024    # conventional [22] input-buffer capacity
+
+
+def sigma_for_lambda(lam: float) -> float:
+    if lam not in O_MAX_BY_LAMBDA:
+        # interpolate in log-space of o_max over known lambdas
+        ks = sorted(O_MAX_BY_LAMBDA)
+        lo = max([k for k in ks if k <= lam], default=ks[0])
+        hi = min([k for k in ks if k >= lam], default=ks[-1])
+        if lo == hi:
+            o = O_MAX_BY_LAMBDA[lo]
+        else:
+            t = (lam - lo) / (hi - lo)
+            o = math.exp((1 - t) * math.log(O_MAX_BY_LAMBDA[lo])
+                         + t * math.log(O_MAX_BY_LAMBDA[hi]))
+    else:
+        o = O_MAX_BY_LAMBDA[lam]
+    return o * _SIGMA_FRACTION
+
+
+def o_max_for_lambda(lam: float) -> float:
+    return sigma_for_lambda(lam) / _SIGMA_FRACTION
+
+
+def halfnormal_cdf(x: float, sigma: float) -> float:
+    if sigma <= 0:
+        return 1.0
+    return math.erf(x / (sigma * math.sqrt(2.0)))
+
+
+# ---------------------------------------------------------------------------
+# Fig. 3 — input-buffer efficiency vs capacity
+# ---------------------------------------------------------------------------
+
+def rf_compression(lam: float, *, baseline_lam: float = 0.0) -> float:
+    """Paper abstract: 12.6x receptive-field compression (real-valued RF,
+    RF = K + 2*o_max, between lambda=0 and the given lambda)."""
+    rf0 = KERNEL_SIZE + 2 * o_max_for_lambda(baseline_lam)
+    rf1 = KERNEL_SIZE + 2 * o_max_for_lambda(lam)
+    return rf0 / rf1
+
+
+def coverage_radius(capacity_bytes: int, *, t_w: int = PAPER_TILES.t_w,
+                    t_n: int = PAPER_TILES.t_n, stride: int = 1,
+                    bytes_per_elem: int = 4) -> float:
+    """Largest offset radius r such that the Eq. 6 buffer for
+    RF = K + 2*ceil(r) fits in ``capacity_bytes``."""
+    r = 0
+    while True:
+        rf = receptive_field(KERNEL_SIZE, r + 1)
+        if input_buffer_size(rf, stride, t_w, t_n,
+                             bytes_per_elem=bytes_per_elem) > capacity_bytes:
+            return float(r)
+        r += 1
+        if r > 1 << 14:
+            return float(r)
+
+
+def buffer_efficiency(capacity_bytes: int, lam: float, **kw) -> float:
+    """Fig. 3: % of bilinear-interpolation reads served by the buffer."""
+    r = coverage_radius(capacity_bytes, **kw)
+    return halfnormal_cdf(r + 0.5, sigma_for_lambda(lam))
+
+
+def stall_free_capacity(lam: float, *, t_w: int = PAPER_TILES.t_w,
+                        t_n: int = PAPER_TILES.t_n, stride: int = 1,
+                        bytes_per_elem: int = 4) -> int:
+    """Buffer bytes needed for (numerically) stall-free operation —
+    paper: 13.8 MB at lambda=0, ~3% of that after regularization."""
+    rf = receptive_field(KERNEL_SIZE, o_max_for_lambda(lam))
+    return input_buffer_size(rf, stride, t_w, t_n,
+                             bytes_per_elem=bytes_per_elem)
+
+
+# ---------------------------------------------------------------------------
+# Fig. 8 — cycle model
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DCLWorkload:
+    """One DCL invocation (paper evaluates ResNet-50 DCLs by N)."""
+    h: int = 56
+    w: int = 56
+    n: int = 256          # input channels (the paper's N)
+    m: int = 256          # output channels
+    kernel_size: int = KERNEL_SIZE
+    stride: int = 1
+
+    @property
+    def out_pixels(self) -> int:
+        return (self.h // self.stride) * (self.w // self.stride)
+
+    @property
+    def macs(self) -> int:
+        k2 = self.kernel_size ** 2
+        conv = self.out_pixels * k2 * self.n * self.m
+        bilinear = self.out_pixels * k2 * self.n * 4
+        return conv + bilinear
+
+
+def _miss_rate(wl: DCLWorkload, lam: float, capacity: int) -> float:
+    """Fraction of bilinear corner reads that miss a capacity-C input
+    buffer when the layer is tiled T_N = N (the coverage radius shrinks
+    as N grows — deeper layers cache fewer rows)."""
+    r = coverage_radius(capacity, t_n=wl.n)
+    return 1.0 - halfnormal_cdf(r + 0.5, sigma_for_lambda(lam))
+
+
+def cycles_ours(wl: DCLWorkload, lam: float) -> float:
+    """Bounded-RF accelerator: fully pipelined; all samples hit on-chip.
+
+    The PE array is provisioned for the paper's T_N = 512 channel tile,
+    so at N < 512 it is underutilized — this is exactly why the paper's
+    Fig. 8 speedup grows with N ("improved by increasing the number of
+    data reuses").  Interpolated patches are computed ONCE and reused
+    across every output-channel pass.
+    """
+    util = min(1.0, wl.n / PAPER_TILES.t_n)
+    comp = wl.macs / (PE_MACS_PER_CYCLE * util)
+    bytes_seq = (wl.h * wl.w * wl.n + wl.out_pixels * wl.m
+                 + wl.kernel_size ** 2 * wl.n * wl.m) * 4
+    mem = bytes_seq / DRAM_BW_BYTES_PER_S * FREQ_HZ
+    # Residual misses for the Eq. 6-sized buffer of the trained bound
+    # (numerically ~0: the buffer is sized to cover the trained o_max).
+    miss = 1.0 - buffer_efficiency(stall_free_capacity(lam), lam)
+    stall = wl.out_pixels * wl.kernel_size ** 2 * 4 * miss \
+        * DRAM_RANDOM_LATENCY_CYCLES
+    return max(comp, mem) + stall
+
+
+def cycles_conventional(wl: DCLWorkload, lam: float) -> float:
+    """[22]-style accelerator: no DCL-aware buffering.  Every buffer miss
+    issues an irregular DRAM read (row-miss latency + channel bursts) and
+    stalls the pipeline; misses recur on EVERY output-channel tile pass
+    because interpolated patches are not reused (M/T_M passes)."""
+    comp = wl.macs / PE_MACS_PER_CYCLE        # [22] tiles T_N to the layer
+    miss = _miss_rate(wl, lam, CONV_BUFFER_BYTES)
+    passes = math.ceil(wl.m / T_M_PASS)
+    misses = wl.out_pixels * wl.kernel_size ** 2 * 4 * miss * passes
+    bursts = math.ceil(wl.n * 4 / DRAM_BURST_BYTES)
+    stall_per_miss = DRAM_RANDOM_LATENCY_CYCLES + bursts * DRAM_BURST_CYCLES
+    return comp + misses * stall_per_miss
+
+
+def speedup(n_channels: int, lam_ours: float, lam_conv: float = 0.0,
+            **kw) -> float:
+    """Fig. 8: 'combination of our algorithm and accelerator' (ours @
+    lam_ours) vs the conventional accelerator running the unregularized
+    model (lam_conv = 0)."""
+    wl = DCLWorkload(n=n_channels, m=n_channels, **kw)
+    return cycles_conventional(wl, lam_conv) / cycles_ours(wl, lam_ours)
+
+
+# ---------------------------------------------------------------------------
+# Fig. 9 — energy model
+# ---------------------------------------------------------------------------
+
+def _common_dynamic_energy(wl: DCLWorkload) -> float:
+    """Energy both designs pay: MACs, sequential in/weight/out streaming,
+    and the stage-1 -> stage-2 patch round-trip through DRAM.  NOTE: the
+    paper's OWN accelerator also stores interpolated inputs to DRAM
+    between stages (their Fig. 4); eliminating that round-trip is this
+    repo's beyond-paper fused-kernel optimization, accounted separately
+    in ``tiling.two_stage_extra_bytes`` — not claimed here."""
+    seq_bytes = (wl.h * wl.w * wl.n + wl.out_pixels * wl.m
+                 + wl.kernel_size ** 2 * wl.n * wl.m) * 4
+    patch_bytes = 2 * wl.out_pixels * wl.kernel_size ** 2 * wl.n * 4
+    return (seq_bytes + patch_bytes) * E_DRAM_PJ_PER_BYTE_SEQ \
+        + wl.macs * E_MAC_PJ
+
+
+def _bram_pj_per_byte(capacity_bytes: int) -> float:
+    """Larger SRAMs cost more per access (longer word/bit lines)."""
+    return E_BRAM_PJ_PER_BYTE * math.sqrt(
+        max(capacity_bytes, BRAM_REF_BYTES) / BRAM_REF_BYTES)
+
+
+def energy_ours(wl: DCLWorkload, lam: float) -> float:
+    """pJ for one DCL on the bounded-RF accelerator: all sampling reads
+    hit the Eq. 6-sized on-chip buffer.  At lam=0 that buffer is 13.8 MB
+    — the 'large on-chip buffer systems cause high energy consumption'
+    the paper warns about — captured by capacity-scaled pJ/B."""
+    onchip_bytes = wl.out_pixels * wl.kernel_size ** 2 * wl.n * 4 * 4
+    cap = stall_free_capacity(lam)
+    return _common_dynamic_energy(wl) + onchip_bytes * _bram_pj_per_byte(cap)
+
+
+def energy_conventional(wl: DCLWorkload, lam: float) -> float:
+    """pJ for the [22]-style dataflow.  Missed sample lines are fetched
+    from DRAM with row-miss (irregular) pricing; the fetched line is
+    inserted into the buffer so later output-channel passes hit on-chip
+    (the ENERGY view; the TIME view in ``cycles_conventional`` still
+    stalls every pass on pipeline refill)."""
+    miss = _miss_rate(wl, lam, CONV_BUFFER_BYTES)
+    misses = wl.out_pixels * wl.kernel_size ** 2 * 4 * miss
+    rand_bytes = misses * math.ceil(wl.n * 4 / DRAM_BURST_BYTES) \
+        * DRAM_BURST_BYTES
+    onchip_bytes = wl.out_pixels * wl.kernel_size ** 2 * wl.n * 4 * 4
+    return (_common_dynamic_energy(wl)
+            + rand_bytes * E_DRAM_PJ_PER_BYTE_RAND
+            + onchip_bytes * E_BRAM_PJ_PER_BYTE)
+
+
+def energy_ratio(n_channels: int, lam_ours: float, lam_conv: float = 0.0,
+                 **kw) -> float:
+    """Fig. 9: energy of conventional (unregularized model) over ours."""
+    wl = DCLWorkload(n=n_channels, m=n_channels, **kw)
+    return energy_conventional(wl, lam_conv) / energy_ours(wl, lam_ours)

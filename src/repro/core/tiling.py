@@ -1,0 +1,222 @@
+"""Loop-tiling buffer model (paper Eq. 6/7) and roofline-driven tile chooser.
+
+The paper sizes its on-chip buffers for the deformable convolutional
+layer (DCL) as
+
+    Input buffer size  = RF * (S*T_W + RF - S) * T_N          (Eq. 6)
+    Output buffer size = T_W * T_N * 2 * K_C^2                (Eq. 7)
+
+where ``RF = K_C + 2*ceil(B)`` is the (bounded) receptive field, ``S``
+the stride, ``T_W``/``T_N`` the tile width / input-channel tile, and the
+output buffer holds offsets + interpolated inputs (the factor ``2*K^2``:
+2 offset planes and the K^2-tap patch tensor share it double-buffered).
+
+On TPU the same algebra sizes the **VMEM** working set of the Pallas
+kernels in ``repro.kernels``: the input tile + halo must fit VMEM next
+to the weight tile and the output accumulator.  ``choose_tiles`` solves
+the paper's roofline-based tiling (Sec. 3.2, following Zhang FPGA'15)
+against TPU constants instead of FPGA BRAM:
+
+    attainable = min(peak_flops, CTC * hbm_bandwidth)
+
+maximising compute-to-communication ratio (CTC) subject to the Eq. 6/7
+VMEM bound and MXU alignment (8 sublanes x 128 lanes).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Iterable
+
+# ---------------------------------------------------------------------------
+# Hardware constants (TPU v5e target; the container only dry-runs these).
+# ---------------------------------------------------------------------------
+
+V5E_VMEM_BYTES = 128 * 1024 * 1024        # 128 MiB VMEM per core
+V5E_PEAK_FLOPS_BF16 = 197e12              # 197 TFLOP/s bf16
+V5E_HBM_BW = 819e9                        # 819 GB/s
+V5E_ICI_BW = 50e9                         # ~50 GB/s per link
+MXU_LANE = 128                            # lane (minor) alignment
+MXU_SUBLANE = 8                           # sublane alignment (fp32)
+
+
+# ---------------------------------------------------------------------------
+# Paper buffer algebra
+# ---------------------------------------------------------------------------
+
+def receptive_field(kernel_size: int, offset_bound: float) -> int:
+    """Eq. 4 (duplicated here so tiling is importable standalone)."""
+    return int(kernel_size + 2 * math.ceil(float(offset_bound)))
+
+
+def input_buffer_size(rf: int, stride: int, t_w: int, t_n: int,
+                      *, bytes_per_elem: int = 4) -> int:
+    """Eq. 6: bytes of input tile (+halo) needed for stall-free sampling."""
+    return rf * (stride * t_w + rf - stride) * t_n * bytes_per_elem
+
+
+def output_buffer_size(t_w: int, t_n: int, kernel_size: int,
+                       *, bytes_per_elem: int = 4) -> int:
+    """Eq. 7: bytes of output buffer (offsets + interpolated inputs)."""
+    return t_w * t_n * 2 * kernel_size * kernel_size * bytes_per_elem
+
+
+def weight_buffer_size(kernel_size: int, t_n: int, t_m: int,
+                       *, bytes_per_elem: int = 4) -> int:
+    """Weight tile for the dynamic-convolution stage (not in Eq. 6/7 —
+    the paper holds all weights of the tile on chip; we account for it
+    explicitly because VMEM is shared)."""
+    return kernel_size * kernel_size * t_n * t_m * bytes_per_elem
+
+
+@dataclasses.dataclass(frozen=True)
+class TileConfig:
+    """One loop-tiling point (the paper fixes T_N=512, T_M=64, T_H=1, T_W=8)."""
+    t_h: int
+    t_w: int
+    t_n: int   # input-channel tile
+    t_m: int   # output-channel tile
+
+    def vmem_bytes(self, rf: int, stride: int, kernel_size: int,
+                   *, bytes_per_elem: int = 4) -> int:
+        band_h = rf + stride * (self.t_h - 1)              # Eq. 6 row extent
+        inp = band_h * (stride * self.t_w + rf - stride) * self.t_n \
+            * bytes_per_elem
+        out = output_buffer_size(self.t_w * self.t_h, self.t_n, kernel_size,
+                                 bytes_per_elem=bytes_per_elem)
+        wgt = weight_buffer_size(kernel_size, self.t_n, self.t_m,
+                                 bytes_per_elem=bytes_per_elem)
+        acc = self.t_h * self.t_w * self.t_m * 4           # fp32 accumulator
+        return inp + out + wgt + acc
+
+
+PAPER_TILES = TileConfig(t_h=1, t_w=8, t_n=512, t_m=64)
+
+
+# ---------------------------------------------------------------------------
+# Roofline-driven tile chooser (Sec. 3.2 methodology on TPU constants)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LayerShape:
+    """Shape of one DCL invocation used to evaluate a tiling point."""
+    h: int
+    w: int
+    c_in: int
+    c_out: int
+    kernel_size: int = 3
+    stride: int = 1
+    offset_bound: float = 2.0
+
+    @property
+    def rf(self) -> int:
+        return receptive_field(self.kernel_size, self.offset_bound)
+
+
+def _align(v: int, a: int) -> int:
+    return max(a, (v // a) * a)
+
+
+def tile_candidates(shape: LayerShape) -> Iterable[TileConfig]:
+    """Enumerate MXU-aligned tile points that divide the layer cleanly
+    enough (we allow ragged edges; alignment matters more than divisibility)."""
+    for t_h in (1, 2, 4, 8):
+        for t_w in (8, 16, 32, 64):
+            for t_n in (128, 256, 512):
+                for t_m in (64, 128, 256):
+                    if t_n > shape.c_in * 2 or t_m > shape.c_out * 2:
+                        continue
+                    yield TileConfig(t_h, t_w, min(t_n, _align(shape.c_in, MXU_LANE)),
+                                     min(t_m, _align(shape.c_out, MXU_SUBLANE)))
+
+
+def tile_flops(shape: LayerShape, t: TileConfig) -> int:
+    """MACs*2 of one tile of the dynamic-convolution stage + bilinear stage."""
+    k2 = shape.kernel_size ** 2
+    conv = 2 * t.t_h * t.t_w * t.t_m * k2 * t.t_n
+    bilinear = t.t_h * t.t_w * k2 * t.t_n * 8      # 4 corners * (mul+add)
+    return conv + bilinear
+
+
+def tile_hbm_bytes(shape: LayerShape, t: TileConfig,
+                   *, bytes_per_elem: int = 2) -> int:
+    """HBM traffic per tile: input band (+halo), weight tile, output tile.
+
+    In the fused kernel the interpolated patches never travel to HBM —
+    this is the beyond-paper saving; ``two_stage_extra_bytes`` accounts
+    for the paper-faithful dataflow that round-trips them.
+    """
+    rf, s = shape.rf, shape.stride
+    band_h = rf + s * (t.t_h - 1)
+    inp = band_h * (s * t.t_w + rf - s) * t.t_n * bytes_per_elem
+    wgt = shape.kernel_size ** 2 * t.t_n * t.t_m * bytes_per_elem
+    out = t.t_h * t.t_w * t.t_m * bytes_per_elem
+    return inp + wgt + out
+
+
+def two_stage_extra_bytes(shape: LayerShape, t: TileConfig,
+                          *, bytes_per_elem: int = 2) -> int:
+    """Patches written + re-read by the paper's two-stage dataflow."""
+    k2 = shape.kernel_size ** 2
+    return 2 * t.t_h * t.t_w * k2 * t.t_n * bytes_per_elem
+
+
+@dataclasses.dataclass(frozen=True)
+class TileChoice:
+    tile: TileConfig
+    ctc: float                 # compute-to-communication ratio (flops/byte)
+    attainable_flops: float    # roofline-attainable performance
+    vmem_bytes: int
+
+    @property
+    def fits(self) -> bool:
+        return self.vmem_bytes <= V5E_VMEM_BYTES
+
+
+def evaluate_tile(shape: LayerShape, t: TileConfig, *, fused: bool = True,
+                  vmem_budget: int = V5E_VMEM_BYTES) -> TileChoice:
+    flops = tile_flops(shape, t)
+    traffic = tile_hbm_bytes(shape, t)
+    if not fused:
+        traffic += two_stage_extra_bytes(shape, t)
+    ctc = flops / max(traffic, 1)
+    attainable = min(V5E_PEAK_FLOPS_BF16, ctc * V5E_HBM_BW)
+    vmem = t.vmem_bytes(shape.rf, shape.stride, shape.kernel_size,
+                        bytes_per_elem=2)
+    return TileChoice(tile=t, ctc=ctc, attainable_flops=attainable,
+                      vmem_bytes=vmem)
+
+
+def choose_tiles(shape: LayerShape, *, fused: bool = True,
+                 vmem_budget: int = V5E_VMEM_BYTES) -> TileChoice:
+    """Pick the tiling point with the highest roofline-attainable perf
+    among those whose Eq. 6/7 working set fits VMEM (paper Sec. 3.2)."""
+    best: TileChoice | None = None
+    for t in tile_candidates(shape):
+        c = evaluate_tile(shape, t, fused=fused, vmem_budget=vmem_budget)
+        if c.vmem_bytes > vmem_budget:
+            continue
+        if best is None or (c.attainable_flops, c.ctc) > (best.attainable_flops, best.ctc):
+            best = c
+    if best is None:
+        raise ValueError(
+            f"no tile configuration fits VMEM budget {vmem_budget} for {shape}; "
+            f"receptive field {shape.rf} too large — train with a larger lambda")
+    return best
+
+
+def max_offset_bound_fitting(kernel_size: int, stride: int, t_w: int,
+                             t_n: int, vmem_budget: int = V5E_VMEM_BYTES,
+                             *, bytes_per_elem: int = 2) -> float:
+    """Inverse of Eq. 6: largest offset bound B whose input tile still
+    fits the budget.  This is what couples the Eq. 5 regularizer strength
+    to the hardware — the co-design knob of the paper."""
+    b = 0
+    while True:
+        rf = receptive_field(kernel_size, b + 1)
+        if input_buffer_size(rf, stride, t_w, t_n,
+                             bytes_per_elem=bytes_per_elem) > vmem_budget:
+            return float(b)
+        b += 1
+        if b > 4096:
+            return float(b)

@@ -1,0 +1,2 @@
+from .pipeline import (  # noqa: F401
+    LMDataConfig, lm_batch, DetectionDataConfig, detection_batch)

@@ -1,0 +1,4 @@
+from .sharding import (  # noqa: F401
+    AxisRules, use_rules, current_rules, logical_constraint, logical_spec,
+    DEFAULT_RULES,
+)

@@ -1,0 +1,160 @@
+"""Logical-axis sharding rules (MaxText-style) for the whole framework.
+
+Model code never names mesh axes directly; it tags tensor dimensions with
+*logical* names ('batch', 'ff', 'vocab', ...).  The active ``AxisRules``
+maps logical names to mesh axes, and every lookup is guarded by a
+divisibility check against the live mesh — a logical axis whose dimension
+does not divide evenly simply stays unsharded (GSPMD is then free to
+choose).  This is what lets one model definition serve 10 architectures
+whose head counts (24, 32, 48, 64...) do not all divide the 16-way model
+axis.
+
+Default mapping (single pod (data=16, model=16); multi-pod adds 'pod'):
+
+    batch   -> ('pod', 'data')     DP across pods and the data axis
+    seq     -> None                (SP variants map it to 'data')
+    embed   -> 'data'              ZeRO/FSDP: params+optimizer sharded on DP
+    heads   -> 'model'             TP attention
+    kv      -> 'model'             TP for KV heads when divisible
+    ff      -> 'model'             TP MLP
+    vocab   -> 'model'             TP embedding + logits
+    experts -> None                experts replicated, inner dims sharded
+                                   (tensor-parallel experts; EP variant in
+                                   EXPERIMENTS.md §Perf)
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisRules = Mapping[str, str | tuple[str, ...] | None]
+
+DEFAULT_RULES: AxisRules = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "seq_sp": "model",     # sequence-parallel attention fallback
+    "embed": "data",
+    "embed_no_fsdp": None,
+    "heads": "model",
+    "kv": "model",
+    "head_dim": None,
+    "ff": "model",
+    "vocab": "model",
+    "experts": None,
+    "model": "model",
+    "data": "data",
+    "conv_in": None,
+    # §Perf hillclimb (resnet50_dcn): channel-TP convs all-reduce every
+    # layer while the weights are only ~100 MB — replicate them and give
+    # the model axis to SPATIAL partitioning instead (GSPMD halo
+    # exchange), which divides the conv compute 16 further ways.
+    "conv_out": None,
+    "spatial": "model",
+    "rnn": "model",
+}
+
+# Serving rules (§Perf): decode/prefill re-gather FSDP-sharded params on
+# EVERY step — for one token that is pure waste.  When the TP shard of
+# the weights fits HBM next to the KV cache, serve with params
+# replicated across 'data' (sharded on 'model' only).
+SERVE_RULES: AxisRules = {**DEFAULT_RULES, "embed": None}
+
+SERVE_REPLICATION_BUDGET_BYTES = 8 << 30   # bf16 TP-shard budget
+
+
+def serve_rules_for(param_count: int, *, tp: int = 16,
+                    bytes_per_param: int = 2) -> AxisRules:
+    if param_count * bytes_per_param / tp <= SERVE_REPLICATION_BUDGET_BYTES:
+        return dict(SERVE_RULES)
+    return dict(DEFAULT_RULES)
+
+
+_state = threading.local()
+
+
+def _mesh_axis_sizes(mesh: Mesh | None) -> dict[str, int]:
+    if mesh is None:
+        return {}
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+@contextlib.contextmanager
+def use_rules(rules: AxisRules | None = None, mesh: Mesh | None = None):
+    """Activate logical->mesh rules (and the mesh for divisibility checks)."""
+    prev = getattr(_state, "ctx", None)
+    _state.ctx = (dict(DEFAULT_RULES if rules is None else rules), mesh)
+    try:
+        yield
+    finally:
+        _state.ctx = prev
+
+
+def current_rules() -> tuple[AxisRules, Mesh | None] | None:
+    return getattr(_state, "ctx", None)
+
+
+def _resolve_axis(logical: str | None, dim_size: int,
+                  rules: AxisRules, sizes: dict[str, int],
+                  used: set[str]) -> str | tuple[str, ...] | None:
+    """Map one logical name to mesh axes, dropping non-dividing or
+    already-used mesh axes (a mesh axis may appear once per spec)."""
+    if logical is None:
+        return None
+    target = rules.get(logical)
+    if target is None:
+        return None
+    axes = (target,) if isinstance(target, str) else tuple(target)
+    picked: list[str] = []
+    remaining = dim_size
+    for ax in axes:
+        n = sizes.get(ax)
+        if n is None or ax in used:
+            continue
+        if remaining % n != 0:
+            continue
+        picked.append(ax)
+        used.add(ax)
+        remaining //= n
+    if not picked:
+        return None
+    return picked[0] if len(picked) == 1 else tuple(picked)
+
+
+def logical_spec(shape: Sequence[int], axes: Sequence[str | None],
+                 *, rules: AxisRules | None = None,
+                 mesh: Mesh | None = None) -> P:
+    """Build a PartitionSpec for ``shape`` from logical axis names."""
+    ctx = current_rules()
+    if rules is None:
+        rules = ctx[0] if ctx else dict(DEFAULT_RULES)
+    if mesh is None:
+        mesh = ctx[1] if ctx else None
+    sizes = _mesh_axis_sizes(mesh)
+    used: set[str] = set()
+    assert len(shape) == len(axes), (shape, axes)
+    entries = [_resolve_axis(a, d, rules, sizes, used)
+               for d, a in zip(shape, axes)]
+    # Trailing Nones can be dropped but keeping them is harmless.
+    return P(*entries)
+
+
+def logical_constraint(x: jax.Array, *axes: str | None) -> jax.Array:
+    """with_sharding_constraint by logical axis names (no-op when no mesh
+    is active — CPU smoke tests run the same code path unconstrained)."""
+    ctx = current_rules()
+    if ctx is None or ctx[1] is None:
+        return x
+    rules, mesh = ctx
+    spec = logical_spec(x.shape, axes, rules=rules, mesh=mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(mesh: Mesh, shape: Sequence[int],
+                   axes: Sequence[str | None],
+                   rules: AxisRules | None = None) -> NamedSharding:
+    return NamedSharding(mesh, logical_spec(shape, axes, rules=rules,
+                                            mesh=mesh))

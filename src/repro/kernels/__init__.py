@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the compute hot spots (validated against the
+``ref.py`` oracles in interpret mode; TPU is the lowering target):
+
+* ``deform_sample``     — stage-1 bounded-halo bilinear sampling (Eq. 6)
+* ``deform_conv_fused`` — stage 1+2 fused in VMEM (beyond-paper)
+* ``flash_attention``   — blockwise online-softmax attention
+* ``matmul``            — tiled MXU matmul (the systolic-array analogue)
+
+Public entry points live in ``ops``.
+"""

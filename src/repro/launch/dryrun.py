@@ -1,0 +1,304 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# NOTE: the two lines above MUST stay first (before any jax import) —
+# jax locks the device count at first init.  That is also why this file
+# has no ``from __future__ import annotations``.
+
+DOC = """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay first: jax locks the device count at first
+init, and the production meshes need 512 placeholder host devices.  Do
+NOT import this module from tests (they must see 1 device).
+
+For every cell this script:
+  1. builds the production mesh (16x16 single pod / 2x16x16 multi-pod),
+  2. builds the cell's step function + shardings from ``launch.steps``,
+  3. ``jax.jit(...).lower(*abstract).compile()`` — proving the sharding
+     config is coherent end to end,
+  4. records memory_analysis / cost_analysis / per-collective bytes
+     (parsed from the post-SPMD HLO) to a JSON file for §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch grok-1-314b --shape train_4k
+  python -m repro.launch.dryrun --all [--mesh single|multi|both]
+"""
+
+import argparse
+import json
+import pathlib
+import re
+import time
+import traceback
+
+import jax
+
+from repro.distributed.sharding import use_rules
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import make_cell_step
+from repro.models import registry as reg
+
+RESULTS_DIR = pathlib.Path(__file__).resolve().parents[3] \
+    / "benchmarks" / "results" / "dryrun"
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|"
+                       r"s16|u16|s8|u8|pred)\[([0-9,]*)\]")
+
+
+def _bytes_of(fragment: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(fragment):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum result bytes of every collective op in the per-device HLO.
+    Async pairs are counted once (on -start); '-done' is skipped."""
+    out = {c: {"count": 0, "bytes": 0} for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        for c in _COLLECTIVES:
+            m = re.search(rf"= (.*?)\s*{c}(-start)?\(", line)
+            if m is None:
+                continue
+            if f"{c}-done" in line:
+                continue
+            out[c]["count"] += 1
+            out[c]["bytes"] += _bytes_of(m.group(1))
+            break
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items()
+                             if isinstance(v, dict))
+    out["total_count"] = sum(v["count"] for k, v in out.items()
+                             if isinstance(v, dict))
+    return out
+
+
+def _compile_cell(arch, shape_name: str, mesh, rules=None) -> tuple:
+    with use_rules(rules=rules, mesh=mesh):
+        step, in_sh, out_sh, abstract = make_cell_step(arch, shape_name, mesh,
+                                                       rules=rules)
+        jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh)
+        lowered = jitted.lower(*abstract)
+        compiled = lowered.compile()
+    return lowered, compiled
+
+
+def _analyses(compiled) -> tuple[dict, dict]:
+    try:
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+        cost = {k: float(v) for k, v in cost.items()
+                if isinstance(v, (int, float)) and (
+                    k in ("flops", "transcendentals")
+                    or k.startswith("bytes accessed"))}
+    except Exception as e:  # noqa: BLE001
+        cost = {"error": str(e)}
+    coll = parse_collectives(compiled.as_text())
+    return cost, coll
+
+
+def _unrolled_variant(arch, n_periods: int):
+    """Arch clone with an unrolled `n_periods`-period layer stack (no
+    While loop), used to measure exact per-period HLO flops/bytes."""
+    import dataclasses
+    cfg = arch.config
+    plen = len(cfg.pattern)
+    cfg2 = dataclasses.replace(cfg, n_layers=n_periods * plen,
+                               scan_layers=False, name=f"{cfg.name}@p{n_periods}")
+    return dataclasses.replace(arch, config=cfg2)
+
+
+def _extrapolate(full: dict, p1: dict, p2: dict, n_periods: int) -> dict:
+    """total = full_reported + (n_periods - 1) * (p2 - p1).
+
+    The While body is counted once in `full`; (p2 - p1) on the unrolled
+    variants isolates exactly one period (including remat recompute).
+    """
+    out = {}
+    keys = set(p1) & set(p2) & set(full)
+    for k in keys:
+        if not isinstance(full.get(k), (int, float)):
+            continue
+        delta = p2[k] - p1[k]
+        out[k] = full[k] + max(delta, 0.0) * (n_periods - 1)
+    return out
+
+
+def run_cell(arch_name: str, shape_name: str, mesh_kind: str,
+             *, keep_hlo: bool = False, rules: dict | None = None) -> dict:
+    arch = reg.get(arch_name)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    rec: dict = {"arch": arch_name, "shape": shape_name, "mesh": mesh_kind,
+                 "mesh_shape": list(mesh.devices.shape),
+                 "axes": list(mesh.axis_names)}
+    # Effective rules (explicit experiment > per-arch overrides > default)
+    # must ALSO govern the trace-time context: the in-model
+    # logical_constraint calls read the rules active during lower().
+    from repro.distributed.sharding import DEFAULT_RULES
+    from repro.launch.steps import _merged_rules
+    rules = _merged_rules(arch, rules)
+    if rules is not None:
+        rec["rule_overrides"] = {k: v for k, v in rules.items()
+                                 if DEFAULT_RULES.get(k) != v}
+    t0 = time.time()
+    with use_rules(rules=rules, mesh=mesh):
+        step, in_sh, out_sh, abstract = make_cell_step(arch, shape_name, mesh,
+                                                       rules=rules)
+        jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh)
+        lowered = jitted.lower(*abstract)
+        rec["lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 2)
+
+    try:
+        mem = compiled.memory_analysis()
+        rec["memory_analysis"] = {
+            k: int(getattr(mem, k)) for k in (
+                "argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "generated_code_size_in_bytes",
+                "alias_size_in_bytes")
+            if hasattr(mem, k)}
+    except Exception as e:  # noqa: BLE001 - backend-dependent
+        rec["memory_analysis"] = {"error": str(e)}
+
+    cost, coll = _analyses(compiled)
+    rec["cost_analysis"] = cost
+    rec["collectives"] = coll
+    hlo = compiled.as_text()
+    rec["hlo_bytes"] = len(hlo)
+    if keep_hlo:
+        rec["hlo_path"] = str(RESULTS_DIR / f"{arch_name}__{shape_name}__{mesh_kind}.hlo")
+        pathlib.Path(rec["hlo_path"]).write_text(hlo)
+
+    # --- While-loop FLOP accounting -------------------------------------
+    # XLA cost analysis counts the scan body ONCE; reconstruct the true
+    # totals from two small UNROLLED compiles (1 and 2 periods).
+    cfg = arch.config
+    if hasattr(cfg, "scan_layers") and cfg.n_periods > 1 \
+            and "error" not in cost:
+        try:
+            t2 = time.time()
+            _, c1 = _compile_cell(_unrolled_variant(arch, 1), shape_name,
+                                  mesh, rules)
+            _, c2 = _compile_cell(_unrolled_variant(arch, 2), shape_name,
+                                  mesh, rules)
+            cost1, coll1 = _analyses(c1)
+            cost2, coll2 = _analyses(c2)
+            rec["extrapolation"] = {
+                "method": "full + (n_periods-1) * (p2 - p1), unrolled",
+                "n_periods": cfg.n_periods,
+                "p1_cost": cost1, "p2_cost": cost2,
+                "p1_coll": coll1["total_bytes"],
+                "p2_coll": coll2["total_bytes"],
+                "extra_compile_s": round(time.time() - t2, 2),
+            }
+            rec["cost_total"] = _extrapolate(cost, cost1, cost2,
+                                             cfg.n_periods)
+            rec["collective_bytes_total"] = (
+                coll["total_bytes"]
+                + max(coll2["total_bytes"] - coll1["total_bytes"], 0)
+                * (cfg.n_periods - 1))
+        except Exception as e:  # noqa: BLE001
+            rec["extrapolation"] = {"error": str(e),
+                                    "traceback": traceback.format_exc()}
+            rec["cost_total"] = dict(cost)
+            rec["collective_bytes_total"] = coll["total_bytes"]
+    else:
+        rec["cost_total"] = dict(cost)
+        rec["collective_bytes_total"] = coll["total_bytes"]
+    return rec
+
+
+def save(rec: dict) -> pathlib.Path:
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    p = RESULTS_DIR / f"{rec['arch']}__{rec['shape']}__{rec['mesh']}.json"
+    p.write_text(json.dumps(rec, indent=1))
+    return p
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--keep-hlo", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--set-rule", action="append", default=[],
+                    help="override a logical->mesh rule, e.g. experts=model")
+    ap.add_argument("--tag", default="",
+                    help="suffix for result filenames (rule experiments)")
+    args = ap.parse_args()
+
+    rules = None
+    if args.set_rule:
+        from repro.distributed.sharding import DEFAULT_RULES
+        rules = dict(DEFAULT_RULES)
+        for kv in args.set_rule:
+            k, v = kv.split("=", 1)
+            rules[k] = None if v in ("none", "None") else v
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        cells = reg.runnable_cells()
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    failures = []
+    for arch_name, shape_name in cells:
+        for mesh_kind in meshes:
+            out = RESULTS_DIR / f"{arch_name}__{shape_name}__{mesh_kind}.json"
+            if args.skip_existing and out.exists():
+                prev = json.loads(out.read_text())
+                if "error" not in prev:
+                    print(f"[skip] {arch_name} {shape_name} {mesh_kind}")
+                    continue
+            tag = f"{arch_name} x {shape_name} x {mesh_kind}"
+            print(f"[dryrun] {tag} ...", flush=True)
+            try:
+                rec = run_cell(arch_name, shape_name, mesh_kind,
+                               keep_hlo=args.keep_hlo, rules=rules)
+                if args.tag:
+                    rec["shape"] = rec["shape"] + "@" + args.tag
+                p = save(rec)
+                ca = rec.get("cost_total", {})
+                print(f"  OK lower={rec['lower_s']}s compile={rec['compile_s']}s "
+                      f"flops={ca.get('flops', float('nan')):.3e} "
+                      f"coll={rec['collective_bytes_total']:.3e}B "
+                      f"-> {p.name}", flush=True)
+            except Exception as e:  # noqa: BLE001
+                failures.append((tag, str(e)))
+                save({"arch": arch_name, "shape": shape_name,
+                      "mesh": mesh_kind, "error": str(e),
+                      "traceback": traceback.format_exc()})
+                print(f"  FAIL {e}", flush=True)
+
+    print(f"\n{len(cells) * len(meshes) - len(failures)} ok, "
+          f"{len(failures)} failed, "
+          f"{len(reg.skipped_cells())} recorded skips "
+          f"(long_500k on full-attention archs)")
+    if failures:
+        for tag, err in failures:
+            print(f"  FAIL {tag}: {err.splitlines()[0] if err else ''}")
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,151 @@
+"""Roofline analysis over the dry-run artifacts (§Roofline deliverable).
+
+For every (arch x shape x mesh) JSON produced by ``launch.dryrun``:
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+    memory term     = HLO_bytes_per_device / HBM_bw
+    collective term = collective_bytes_per_device / link_bw
+
+(The per-device HLO numbers already divide by the chip count — the
+formulas in the assignment divide global totals by chips; both give the
+same per-chip seconds.)  Also reports MODEL_FLOPS = 6*N(active)*D (train)
+/ 2*N*D (prefill) / 2*N*B (decode) and the MODEL/HLO ratio — the
+"useful compute" fraction that catches remat/dispatch waste.
+
+Notes recorded with the table:
+* HLO FLOPs/bytes come from the While-corrected totals (see dryrun.py
+  extrapolation) of the post-SPMD per-device module;
+* 'bytes accessed' is XLA's pre-fusion operand+result traffic — an
+  UPPER bound on HBM bytes (TPU fusion removes much of it), so the
+  memory term is pessimistic; the compute and collective terms are the
+  decision-grade numbers.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Any
+
+from repro.core.tiling import (V5E_HBM_BW, V5E_ICI_BW, V5E_PEAK_FLOPS_BF16)
+from repro.models import registry as reg
+from repro.models.resnet_dcn import ResNetDCNConfig
+
+RESULTS_DIR = pathlib.Path(__file__).resolve().parents[3] \
+    / "benchmarks" / "results" / "dryrun"
+
+
+def _model_flops_per_device(arch, shape_name: str, chips: int) -> float:
+    cfg = arch.config
+    shape = arch.shapes[shape_name]
+    if isinstance(cfg, ResNetDCNConfig):
+        # conv backbone: analytic MACs of the reduced-stride graph
+        from repro.launch.steps import arch_param_count
+        n = arch_param_count(arch)
+        # rough dense-equivalent: 2 * MACs ~ 2 * params * (H/32 * W/32)
+        cells = (cfg.img_size // 32) ** 2
+        mult = 6 if shape.kind == "train_det" else 2
+        return mult * n * cells * shape.global_batch / chips
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        toks = shape.global_batch * shape.seq_len
+        return 6 * n_active * toks / chips
+    if shape.kind == "prefill":
+        toks = shape.global_batch * shape.seq_len
+        return 2 * n_active * toks / chips
+    if shape.kind == "decode":
+        return 2 * n_active * shape.global_batch / chips
+    raise ValueError(shape.kind)
+
+
+def analyze_cell(rec: dict) -> dict | None:
+    if "error" in rec:
+        return {"arch": rec["arch"], "shape": rec["shape"],
+                "mesh": rec["mesh"], "error": rec["error"]}
+    arch = reg.get(rec["arch"])
+    chips = 1
+    for d in rec["mesh_shape"]:
+        chips *= d
+    cost = rec.get("cost_total", {})
+    flops = cost.get("flops", float("nan"))
+    # NOTE: 'bytes accessed' is the TOTAL; 'bytes accessedN{}' keys are
+    # its per-operand breakdown — summing them double-counts.
+    hbm_bytes = cost.get("bytes accessed", float("nan"))
+    coll_bytes = rec.get("collective_bytes_total", 0)
+
+    compute_s = flops / V5E_PEAK_FLOPS_BF16
+    memory_s = hbm_bytes / V5E_HBM_BW
+    collective_s = coll_bytes / V5E_ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=lambda k: terms[k])
+    model_flops = _model_flops_per_device(arch, rec["shape"], chips)
+    step_s = max(terms.values())
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "chips": chips,
+        "flops_per_device": flops,
+        "hbm_bytes_per_device": hbm_bytes,
+        "collective_bytes_per_device": coll_bytes,
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dominant,
+        "model_flops_per_device": model_flops,
+        "model_over_hlo": model_flops / flops if flops else float("nan"),
+        # roofline fraction: useful-FLOPs time at peak over the step's
+        # bounding term — the score the perf loop drives up.
+        "roofline_fraction": (model_flops / V5E_PEAK_FLOPS_BF16) / step_s
+        if step_s > 0 else float("nan"),
+        "memory_analysis": rec.get("memory_analysis", {}),
+    }
+
+
+def load_all(mesh: str | None = "single",
+             results_dir: pathlib.Path | str | None = None) -> list[dict]:
+    out = []
+    for p in sorted(pathlib.Path(results_dir or RESULTS_DIR).glob("*.json")):
+        rec = json.loads(p.read_text())
+        if mesh is not None and rec.get("mesh") != mesh:
+            continue
+        a = analyze_cell(rec)
+        if a is not None:
+            out.append(a)
+    return out
+
+
+def markdown_table(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | mesh | compute s | memory s | collective s | "
+           "dominant | MODEL/HLO | roofline frac |\n"
+           "|---|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in rows:
+        if "error" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"ERROR: {r['error'][:40]} | | | | | |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compute_s']:.3e} | {r['memory_s']:.3e} "
+            f"| {r['collective_s']:.3e} | **{r['dominant']}** "
+            f"| {r['model_over_hlo']:.2f} | {r['roofline_fraction']:.3f} |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--out")
+    ap.add_argument("--dir", default=None,
+                    help="dry-run results dir (default: latest)")
+    args = ap.parse_args()
+    rows = load_all(None if args.mesh == "all" else args.mesh, args.dir)
+    md = markdown_table(rows)
+    print(md)
+    if args.out:
+        pathlib.Path(args.out).write_text(md + "\n")
+    (RESULTS_DIR.parent / "roofline.json").write_text(
+        json.dumps(rows, indent=1))
+
+
+if __name__ == "__main__":
+    main()

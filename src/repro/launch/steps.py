@@ -1,0 +1,252 @@
+"""Step-function builders shared by the dry-run, trainer, and server.
+
+Each builder returns (step_fn, in_sharding_tree, out_sharding_tree,
+abstract_inputs) for one (arch, shape) cell — everything ``jax.jit``
+needs to lower without allocating a single parameter.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.distributed.sharding import use_rules
+from repro.models import registry as reg
+from repro.models import resnet_dcn
+from repro.models.registry import ArchSpec
+from repro.models.transformer import (ModelConfig, abstract_params,
+                                      decode_step, loss_fn, param_specs,
+                                      prefill)
+from repro.models.resnet_dcn import ResNetDCNConfig
+from repro.optim import (abstract_opt_state, default_optimizer_for,
+                         opt_state_specs)
+from repro.models import layers as NL
+
+Array = jax.Array
+
+
+def _named(mesh, tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def _cnn_abstract_params(cfg: ResNetDCNConfig):
+    defs = resnet_dcn.model_def(cfg)
+    return NL.abstract_tree(defs)
+
+
+def _cnn_param_specs(cfg: ResNetDCNConfig):
+    defs = resnet_dcn.model_def(cfg)
+    return NL.spec_tree(defs)
+
+
+def arch_abstract_params(arch: ArchSpec):
+    cfg = arch.config
+    if isinstance(cfg, ResNetDCNConfig):
+        return _cnn_abstract_params(cfg)
+    return abstract_params(cfg)
+
+
+def arch_param_specs(arch: ArchSpec):
+    cfg = arch.config
+    if isinstance(cfg, ResNetDCNConfig):
+        return _cnn_param_specs(cfg)
+    return param_specs(cfg)
+
+
+def arch_param_count(arch: ArchSpec) -> int:
+    import math
+    cfg = arch.config
+    if isinstance(cfg, ResNetDCNConfig):
+        leaves = jax.tree_util.tree_leaves(_cnn_abstract_params(cfg))
+        return sum(math.prod(x.shape) for x in leaves)
+    return cfg.param_count()
+
+
+def _merged_rules(arch: ArchSpec, rules=None):
+    """Explicit rules (experiments) > per-arch overrides > defaults."""
+    from repro.distributed.sharding import DEFAULT_RULES
+    if rules is not None:
+        return rules
+    if arch.rules_overrides:
+        return {**DEFAULT_RULES, **arch.rules_overrides}
+    return None
+
+
+def make_train_step(arch: ArchSpec, mesh, *, optimizer=None, rules=None):
+    """Full production train step: fwd + bwd + optimizer update."""
+    cfg = arch.config
+    rules = _merged_rules(arch, rules)
+    with use_rules(rules=rules, mesh=mesh):
+        p_abs = arch_abstract_params(arch)
+        p_specs = arch_param_specs(arch)
+        opt = optimizer or default_optimizer_for(
+            arch.name, arch_param_count(arch))
+        o_abs = abstract_opt_state(opt, p_abs)
+        o_specs = opt_state_specs(opt, p_specs)
+        in_specs = reg.input_specs(arch, _train_shape_name(arch))
+        in_shard = reg.input_shardings(arch, _train_shape_name(arch), mesh)
+
+    if isinstance(cfg, ResNetDCNConfig):
+        lam = 0.005 if cfg.offset_bound is not None else 0.0
+
+        def lf(params, batch):
+            return resnet_dcn.train_loss(params, cfg, batch, lam=lam)
+    else:
+        def lf(params, batch):
+            return loss_fn(params, cfg, batch)
+
+    # Gradient accumulation: big models cannot hold a full global-batch
+    # activation set even remat'ed (grok-1: ~26 GB/device of layer-
+    # boundary checkpoints at batch 256 x 4k).  Microbatching bounds the
+    # live activations; the per-microbatch batch dim stays mesh-sharded.
+    n_params = arch_param_count(arch)
+    micro = 8 if n_params >= 90e9 else (4 if n_params >= 20e9 else 1)
+
+    def train_step(params, opt_state, step, batch):
+        if micro > 1:
+            def one(carry, mb):
+                from repro.distributed.sharding import logical_constraint
+                mb = {kk: logical_constraint(
+                    vv, "batch", *([None] * (vv.ndim - 1)))
+                    for kk, vv in mb.items()}
+                acc, loss_acc = carry
+                (loss, _), g = jax.value_and_grad(
+                    lf, has_aux=True)(params, mb)
+                acc = jax.tree_util.tree_map(
+                    lambda a, b_: a + b_.astype(jnp.float32), acc, g)
+                return (acc, loss_acc + loss), None
+
+            mbs = jax.tree_util.tree_map(
+                lambda t: t.reshape((micro, t.shape[0] // micro)
+                                    + t.shape[1:]), batch)
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, loss_sum), _ = jax.lax.scan(
+                one, (zeros, jnp.zeros((), jnp.float32)), mbs)
+            grads = jax.tree_util.tree_map(lambda g_: g_ / micro, gsum)
+            loss = loss_sum / micro
+        else:
+            (loss, _), grads = jax.value_and_grad(
+                lf, has_aux=True)(params, batch)
+        new_params, new_opt = opt.update(grads, opt_state, params, step)
+        return new_params, new_opt, step + 1, loss
+
+    rep = P()
+    in_shardings = (p_specs, o_specs, rep, in_shard["batch"])
+    out_shardings = (p_specs, o_specs, rep, rep)
+    abstract_in = (p_abs, o_abs, jax.ShapeDtypeStruct((), jnp.int32),
+                   in_specs["batch"])
+    return (train_step, _named(mesh, in_shardings),
+            _named(mesh, out_shardings), abstract_in)
+
+
+def _train_shape_name(arch: ArchSpec) -> str:
+    for name, s in arch.shapes.items():
+        if s.kind in ("train", "train_det"):
+            return name
+    raise ValueError(f"{arch.name} has no train shape")
+
+
+def _serve_rules(arch: ArchSpec):
+    from repro.distributed.sharding import serve_rules_for
+    rules = serve_rules_for(arch_param_count(arch))
+    if arch.rules_overrides:
+        rules = {**rules, **arch.rules_overrides}
+    return rules
+
+
+def make_prefill_step(arch: ArchSpec, shape_name: str, mesh):
+    cfg = arch.config
+    shape = arch.shapes[shape_name]
+    with use_rules(rules=_serve_rules(arch), mesh=mesh):
+        p_abs = arch_abstract_params(arch)
+        p_specs = arch_param_specs(arch)
+        in_specs = reg.input_specs(arch, shape_name)
+        in_shard = reg.input_shardings(arch, shape_name, mesh)
+        from repro.models.transformer import cache_specs
+        c_specs = cache_specs(cfg, shape.global_batch, shape.seq_len)
+
+    def prefill_step(params, tokens, frontend=None):
+        logits, caches = prefill(params, cfg, tokens,
+                                 cache_len=shape.seq_len, frontend=frontend)
+        if cfg.codebooks > 1:
+            next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, caches
+
+    tok_spec = in_shard["tokens"]
+    rep = P()
+    args = [p_specs, tok_spec]
+    abstract = [p_abs, in_specs["tokens"]]
+    if cfg.frontend_embeds:
+        args.append(in_shard["frontend"])
+        abstract.append(in_specs["frontend"])
+    out_shardings = (rep, c_specs)
+    return (prefill_step, _named(mesh, tuple(args)),
+            _named(mesh, out_shardings), tuple(abstract))
+
+
+def make_decode_step(arch: ArchSpec, shape_name: str, mesh):
+    cfg = arch.config
+    shape = arch.shapes[shape_name]
+    with use_rules(rules=_serve_rules(arch), mesh=mesh):
+        p_abs = arch_abstract_params(arch)
+        p_specs = arch_param_specs(arch)
+        in_specs = reg.input_specs(arch, shape_name)
+        in_shard = reg.input_shardings(arch, shape_name, mesh)
+
+    def serve_step(params, caches, tokens, pos):
+        logits, new_caches = decode_step(params, cfg, tokens, caches, pos)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, new_caches
+
+    rep = P()
+    in_shardings = (p_specs, in_shard["caches"], in_shard["tokens"],
+                    in_shard["pos"])
+    out_shardings = (rep, in_shard["caches"])
+    abstract = (p_abs, in_specs["caches"], in_specs["tokens"],
+                in_specs["pos"])
+    return (serve_step, _named(mesh, in_shardings),
+            _named(mesh, out_shardings), abstract)
+
+
+def make_infer_step(arch: ArchSpec, shape_name: str, mesh):
+    """CNN batch inference (resnet50_dcn infer_det)."""
+    cfg = arch.config
+    assert isinstance(cfg, ResNetDCNConfig)
+    shape = arch.shapes[shape_name]
+    with use_rules(mesh=mesh):
+        p_abs = arch_abstract_params(arch)
+        p_specs = arch_param_specs(arch)
+        from repro.distributed.sharding import logical_spec
+        b, hw = shape.global_batch, cfg.img_size
+        img_abs = jax.ShapeDtypeStruct((b, hw, hw, 3), jnp.float32)
+        img_spec = logical_spec((b, hw, hw, 3),
+                                ("batch", None, None, None), mesh=mesh)
+
+    def infer_step(params, images):
+        outputs, o_maxes = resnet_dcn.forward(params, cfg, images)
+        return outputs["cls"], outputs["box"]
+
+    rep = P()
+    return (infer_step, _named(mesh, (p_specs, img_spec)),
+            _named(mesh, (rep, rep)), (p_abs, img_abs))
+
+
+def make_cell_step(arch: ArchSpec, shape_name: str, mesh, rules=None):
+    """Dispatch to the right builder for a (arch, shape) dry-run cell."""
+    kind = arch.shapes[shape_name].kind
+    if kind in ("train", "train_det"):
+        return make_train_step(arch, mesh, rules=rules)
+    if kind == "prefill":
+        return make_prefill_step(arch, shape_name, mesh)
+    if kind == "decode":
+        return make_decode_step(arch, shape_name, mesh)
+    if kind == "infer_det":
+        return make_infer_step(arch, shape_name, mesh)
+    raise ValueError(kind)

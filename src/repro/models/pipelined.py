@@ -1,0 +1,67 @@
+"""Pipeline-parallel transformer forward (GPipe over the layer stack).
+
+Turns `distributed.pipeline.gpipe_forward` into a first-class model
+feature: the scanned period stack is split into ``n_stages`` contiguous
+chunks, each resident on one rank of a 'stage' mesh axis; microbatches
+stream through with the GPipe schedule.  Embedding / final norm /
+unembedding run outside the pipeline (their params are replicated and
+cheap relative to the stack).
+
+Scope: train/eval forward (no KV caches), homogeneous configs with no
+prefix layers, ``n_periods % n_stages == 0``.  MoE aux-loss is not
+threaded through the pipeline (single-activation stages); use the
+standard data/tensor-parallel path when the aux term matters.
+Correctness vs ``transformer.forward`` is asserted in
+``examples/pipeline_demo.py`` / ``tests/test_pipeline.py``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.pipeline import gpipe_forward
+from . import layers as L
+from .transformer import _LAYER_APPLY, _logits, _embed, ModelConfig
+
+Array = jax.Array
+
+
+def split_stage_params(params, cfg: ModelConfig, n_stages: int):
+    """(n_periods, ...) stacked layers -> (n_stages, periods/stage, ...)."""
+    assert not cfg.prefix, "pipelined path requires no prefix layers"
+    assert cfg.n_periods % n_stages == 0, (cfg.n_periods, n_stages)
+    pp = cfg.n_periods // n_stages
+    return jax.tree_util.tree_map(
+        lambda a: a.reshape((n_stages, pp) + a.shape[1:]), params["layers"])
+
+
+def pipelined_forward(params, cfg: ModelConfig, tokens: Array, *, mesh,
+                      n_stages: int, microbatches: int,
+                      axis_name: str = "stage") -> Array:
+    """Returns logits (B, S, V); B must divide into ``microbatches``."""
+    b, s = tokens.shape[0], tokens.shape[1]
+    assert b % microbatches == 0
+    stage_params = split_stage_params(params, cfg, n_stages)
+
+    x = _embed(params, cfg, tokens, None)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    xs = x.reshape((microbatches, b // microbatches) + x.shape[1:])
+    pos_mb = positions[: b // microbatches]
+
+    def stage_fn(stage_p, act):
+        def body(carry, per_params):
+            h = carry
+            for j, kind in enumerate(cfg.pattern):
+                h, _, _ = _LAYER_APPLY[kind](
+                    per_params[f"m{j}"], h, cfg, mode="train", cache=None,
+                    positions=pos_mb, cache_len=None)
+            return h, None
+
+        out, _ = jax.lax.scan(body, act, stage_p)
+        return out
+
+    y = gpipe_forward(stage_fn, stage_params, xs, mesh=mesh,
+                      axis_name=axis_name)
+    y = y.reshape((b,) + y.shape[2:])
+    y = L.apply_norm(params["final_norm"], y, cfg.norm)
+    return _logits(params, cfg, y)

@@ -1,0 +1,242 @@
+"""ResNet-50 backbone with deformable convolutional layers + detection head.
+
+This is the paper's own model family: "Faster R-CNN ... which uses 12
+DCLs in ResNet-50 as a backbone" (Sec. 4.1).  We reproduce the backbone
+faithfully — the last ``num_dcn`` 3x3 convolutions of the c3/c4/c5
+bottlenecks are replaced by DCLs (12 by default: c3's last 3, all 6 of
+c4, all 3 of c5) — and attach a single-scale dense detection head
+(objectness + class + box per stride-32 cell).  The two-stage Faster
+R-CNN RPN/RoI machinery is out of scope for the accelerator study: the
+paper's experiments hinge on the *offset statistics of the backbone
+DCLs* under the Eq. 5 regularizer, which this model exposes per layer.
+
+Norms are GroupNorm(32) (batch-stat-free, standard for detection).
+Layout NHWC.  ``use_kernel=True`` routes every DCL through the Pallas
+fused kernel (``repro.kernels.ops.deform_conv``); the default pure-JAX
+path is the training reference.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.deform_conv import (DCLConfig, conv2d, dcl_forward,
+                                    offset_abs_max)
+from .layers import ParamDef
+
+Array = jax.Array
+
+GN_GROUPS = 32
+
+
+@dataclasses.dataclass(frozen=True)
+class ResNetDCNConfig:
+    name: str = "resnet50_dcn"
+    stage_sizes: tuple[int, ...] = (3, 4, 6, 3)
+    widths: tuple[int, ...] = (256, 512, 1024, 2048)
+    stem_width: int = 64
+    num_dcn: int = 12              # last N 3x3 convs become DCLs
+    offset_bound: float | None = None   # hardware-friendly clamp (Eq. 4)
+    num_classes: int = 16
+    img_size: int = 256
+    dtype: Any = jnp.float32
+    use_kernel: bool = False       # route DCLs through the Pallas kernel
+
+    @property
+    def total_blocks(self) -> int:
+        return sum(self.stage_sizes)
+
+    def is_dcn(self, block_index: int) -> bool:
+        """block_index counts bottleneck blocks from 0 (first c2 block)."""
+        return block_index >= self.total_blocks - self.num_dcn
+
+
+def _conv_def(kh, kw, cin, cout, *, scale=None):
+    return ParamDef((kh, kw, cin, cout), (None, None, None, "conv_out"),
+                    scale=scale)
+
+
+def _gn_def(c):
+    return {"scale": ParamDef((c,), (None,), init="ones"),
+            "bias": ParamDef((c,), (None,), init="zeros")}
+
+
+def group_norm(x: Array, params, *, groups: int = GN_GROUPS,
+               eps: float = 1e-5) -> Array:
+    n, h, w, c = x.shape
+    g = min(groups, c)
+    while c % g:
+        g -= 1
+    xf = x.astype(jnp.float32).reshape(n, h, w, g, c // g)
+    mu = jnp.mean(xf, axis=(1, 2, 4), keepdims=True)
+    var = jnp.var(xf, axis=(1, 2, 4), keepdims=True)
+    y = ((xf - mu) * jax.lax.rsqrt(var + eps)).reshape(n, h, w, c)
+    return (y * params["scale"] + params["bias"]).astype(x.dtype)
+
+
+def _dcl_def(cin, cout, k=3):
+    return {
+        "w_offset": ParamDef((k, k, cin, 2 * k * k), (None, None, None, None),
+                             init="zeros"),
+        "b_offset": ParamDef((2 * k * k,), (None,), init="zeros"),
+        "w_deform": _conv_def(k, k, cin, cout),
+        "b_deform": ParamDef((cout,), (None,), init="zeros"),
+    }
+
+
+def _block_def(cfg: ResNetDCNConfig, cin, width, block_index,
+               *, downsample: bool):
+    mid = width // 4
+    d = {
+        "conv1": _conv_def(1, 1, cin, mid), "gn1": _gn_def(mid),
+        "gn2": _gn_def(mid),
+        "conv3": _conv_def(1, 1, mid, width), "gn3": _gn_def(width),
+    }
+    if cfg.is_dcn(block_index):
+        d["dcl"] = _dcl_def(mid, mid)
+    else:
+        d["conv2"] = _conv_def(3, 3, mid, mid)
+    if downsample or cin != width:
+        d["proj"] = _conv_def(1, 1, cin, width)
+        d["gn_proj"] = _gn_def(width)
+    return d
+
+
+def model_def(cfg: ResNetDCNConfig) -> dict:
+    defs: dict[str, Any] = {
+        "stem": {"conv": _conv_def(7, 7, 3, cfg.stem_width),
+                 "gn": _gn_def(cfg.stem_width)},
+    }
+    cin = cfg.stem_width
+    bi = 0
+    for s, (n_blocks, width) in enumerate(zip(cfg.stage_sizes, cfg.widths)):
+        for b in range(n_blocks):
+            defs[f"s{s}b{b}"] = _block_def(
+                cfg, cin, width, bi, downsample=(b == 0))
+            cin = width
+            bi += 1
+    c = cfg.widths[-1]
+    defs["head"] = {
+        "conv": _conv_def(3, 3, c, 256), "gn": _gn_def(256),
+        "cls": _conv_def(1, 1, 256, cfg.num_classes + 1),   # +1 objectness
+        "box": _conv_def(1, 1, 256, 4),
+    }
+    return defs
+
+
+def init_params(key: Array, cfg: ResNetDCNConfig):
+    from .layers import init_tree
+    return init_tree(key, model_def(cfg))
+
+
+def _apply_dcl(params, x: Array, cfg: ResNetDCNConfig, *, stride=1):
+    mid = x.shape[-1]
+    dcl_cfg = DCLConfig(in_channels=mid, out_channels=mid, stride=stride,
+                        offset_bound=cfg.offset_bound, dtype=cfg.dtype)
+    if cfg.use_kernel and cfg.offset_bound is not None:
+        from repro.kernels import ops
+        offsets = conv2d(x, params["w_offset"].astype(x.dtype),
+                         stride=stride, padding=dcl_cfg.pad)
+        offsets = offsets + params["b_offset"].astype(x.dtype)
+        o_max = offset_abs_max(offsets)
+        k = dcl_cfg.kernel_size
+        w = params["w_deform"].astype(x.dtype).reshape(k * k, mid, mid)
+        y = ops.deform_conv(x, offsets, w, stride=stride,
+                            offset_bound=cfg.offset_bound)
+        y = y + params["b_deform"].astype(x.dtype)
+        return y, o_max
+    y, stats = dcl_forward(params, x, dcl_cfg)
+    return y, stats["o_max"]
+
+
+def _apply_block(params, x: Array, cfg: ResNetDCNConfig, *, stride: int,
+                 is_dcn: bool):
+    h = conv2d(x, params["conv1"].astype(x.dtype))
+    h = jax.nn.relu(group_norm(h, params["gn1"]))
+    o_max = None
+    if is_dcn:
+        h, o_max = _apply_dcl(params["dcl"], h, cfg, stride=stride)
+    else:
+        h = conv2d(h, params["conv2"].astype(x.dtype), stride=stride)
+    h = jax.nn.relu(group_norm(h, params["gn2"]))
+    h = conv2d(h, params["conv3"].astype(x.dtype))
+    h = group_norm(h, params["gn3"])
+    if "proj" in params:
+        x = conv2d(x, params["proj"].astype(x.dtype), stride=stride)
+        x = group_norm(x, params["gn_proj"])
+    return jax.nn.relu(x + h), o_max
+
+
+def forward(params, cfg: ResNetDCNConfig, images: Array):
+    """images: (N, H, W, 3) -> (outputs, o_max dict per DCL)."""
+    x = images.astype(cfg.dtype)
+    x = conv2d(x, params["stem"]["conv"].astype(x.dtype), stride=2,
+               padding=3)
+    x = jax.nn.relu(group_norm(x, params["stem"]["gn"]))
+    x = jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 3, 3, 1), (1, 2, 2, 1),
+        [(0, 0), (1, 1), (1, 1), (0, 0)])
+
+    o_maxes: dict[str, Array] = {}
+    bi = 0
+    for s, (n_blocks, width) in enumerate(zip(cfg.stage_sizes, cfg.widths)):
+        for b in range(n_blocks):
+            stride = 2 if (b == 0 and s > 0) else 1
+            x, o_max = _apply_block(params[f"s{s}b{b}"], x, cfg,
+                                    stride=stride, is_dcn=cfg.is_dcn(bi))
+            if o_max is not None:
+                o_maxes[f"s{s}b{b}"] = o_max
+            bi += 1
+
+    h = conv2d(x, params["head"]["conv"].astype(x.dtype))
+    h = jax.nn.relu(group_norm(h, params["head"]["gn"]))
+    cls = conv2d(h, params["head"]["cls"].astype(x.dtype))
+    box = conv2d(h, params["head"]["box"].astype(x.dtype))
+    return {"cls": cls, "box": box, "features": x}, o_maxes
+
+
+def detection_loss(outputs: dict, targets: dict) -> tuple[Array, dict]:
+    """Dense single-scale detection loss.
+
+    targets: obj (N,Hc,Wc) {0,1}, cls (N,Hc,Wc) int, box (N,Hc,Wc,4).
+    Classification: sigmoid BCE on objectness + CE on class for positive
+    cells; box: L1 on positive cells.
+    """
+    cls_logits = outputs["cls"].astype(jnp.float32)
+    box_pred = outputs["box"].astype(jnp.float32)
+    obj_logit = cls_logits[..., 0]
+    cls_logit = cls_logits[..., 1:]
+    obj = targets["obj"].astype(jnp.float32)
+
+    bce = jnp.mean(
+        jnp.maximum(obj_logit, 0) - obj_logit * obj
+        + jnp.log1p(jnp.exp(-jnp.abs(obj_logit))))
+
+    pos = obj
+    n_pos = jnp.maximum(jnp.sum(pos), 1.0)
+    logp = jax.nn.log_softmax(cls_logit, axis=-1)
+    gold = jnp.take_along_axis(logp, targets["cls"][..., None], axis=-1)[..., 0]
+    ce = -jnp.sum(gold * pos) / n_pos
+    l1 = jnp.sum(jnp.abs(box_pred - targets["box"]) * pos[..., None]) / n_pos
+    loss = bce + ce + 0.5 * l1
+    return loss, {"bce": bce, "ce": ce, "l1": l1}
+
+
+def train_loss(params, cfg: ResNetDCNConfig, batch: dict, *,
+               lam: float = 0.0, smoothness: float = 0.0):
+    """Full paper objective: Eq. 5 over the detection loss."""
+    from repro.core.rf_regularizer import regularized_loss
+    outputs, o_maxes = forward(params, cfg, batch["images"])
+    task, metrics = detection_loss(outputs, batch)
+    if lam > 0.0 and o_maxes:
+        loss = regularized_loss(task, list(o_maxes.values()), lam,
+                                smoothness=smoothness)
+    else:
+        loss = task
+    metrics = dict(metrics)
+    if o_maxes:
+        metrics["o_max"] = jnp.max(jnp.stack(list(o_maxes.values())))
+    return loss, metrics

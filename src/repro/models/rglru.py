@@ -1,0 +1,146 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Recurrence (per channel of width d_rnn):
+
+    r_t = sigmoid(W_a x_t + b_a)          recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)          input gate
+    log a_t = -c * softplus(Lambda) * r_t  (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The block wraps the LRU with a width-4 temporal conv and a GeLU gate
+branch (Griffin's "recurrent block").  Training uses
+``jax.lax.associative_scan`` (parallel prefix — the TPU-native way to
+run a linear recurrence in O(log S) depth); decode carries (h, conv
+taps) as state.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import logical_constraint
+from .layers import ParamDef
+
+Array = jax.Array
+
+LRU_C = 8.0
+CONV_WIDTH = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class RGLRUConfig:
+    d_model: int
+    d_rnn: int            # lru width (RecurrentGemma-9B: 4096)
+
+
+def rglru_block_def(cfg: RGLRUConfig) -> dict[str, ParamDef]:
+    d, dr = cfg.d_model, cfg.d_rnn
+    return {
+        # Griffin recurrent block: two input branches
+        "w_gate_in": ParamDef((d, dr), ("embed", "rnn")),     # GeLU branch
+        "w_rec_in": ParamDef((d, dr), ("embed", "rnn")),      # conv+LRU branch
+        "conv_w": ParamDef((CONV_WIDTH, dr), (None, "rnn"), scale=0.1),
+        "conv_b": ParamDef((dr,), ("rnn",), init="zeros"),
+        # RG-LRU gates
+        "w_a": ParamDef((dr, dr), ("rnn", None)),
+        "b_a": ParamDef((dr,), (None,), init="zeros"),
+        "w_x": ParamDef((dr, dr), ("rnn", None)),
+        "b_x": ParamDef((dr,), (None,), init="zeros"),
+        "lam": ParamDef((dr,), (None,), init="ones", scale=None),
+        "w_out": ParamDef((dr, d), ("rnn", "embed")),
+    }
+
+
+def _log_a(params, x: Array, r: Array) -> Array:
+    lam = jax.nn.softplus(params["lam"].astype(jnp.float32))
+    return -LRU_C * lam * r.astype(jnp.float32)
+
+
+def rg_lru_scan(params, x: Array, h0: Array | None = None):
+    """x: (B, S, d_rnn).  Returns (y (B,S,d_rnn), h_final (B,d_rnn))."""
+    b, s, dr = x.shape
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ params["w_a"].astype(jnp.float32)
+                       + params["b_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(xf @ params["w_x"].astype(jnp.float32)
+                       + params["b_x"].astype(jnp.float32))
+    log_a = _log_a(params, x, r)                       # (B, S, dr), <= 0
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * (i * xf)
+
+    # h_t = a_t h_{t-1} + b_t  via associative scan on (a, b) pairs.
+    if h0 is not None:
+        # fold the carried state in as a virtual step 0
+        a = jnp.concatenate([jnp.ones((b, 1, dr), a.dtype), a], axis=1)
+        gated = jnp.concatenate([h0.astype(jnp.float32)[:, None], gated], 1)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    aa, hh = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    if h0 is not None:
+        hh = hh[:, 1:]
+    return hh.astype(x.dtype), hh[:, -1]
+
+
+def rg_lru_step(params, x: Array, h: Array):
+    """Decode: x (B, d_rnn), h (B, d_rnn) -> (y, h')."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ params["w_a"].astype(jnp.float32)
+                       + params["b_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(xf @ params["w_x"].astype(jnp.float32)
+                       + params["b_x"].astype(jnp.float32))
+    log_a = _log_a(params, x, r)
+    a = jnp.exp(log_a)
+    h = a * h.astype(jnp.float32) \
+        + jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * xf)
+    return h.astype(x.dtype), h
+
+
+def _causal_conv(x: Array, w: Array, b: Array,
+                 state: Array | None = None):
+    """Width-4 depthwise causal conv.  x: (B, S, dr).
+    state: (B, CONV_WIDTH-1, dr) trailing inputs from the previous call."""
+    bsz, s, dr = x.shape
+    if state is None:
+        state = jnp.zeros((bsz, CONV_WIDTH - 1, dr), x.dtype)
+    xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i:i + s] * w[i].astype(x.dtype)
+              for i in range(CONV_WIDTH))
+    new_state = xp[:, -(CONV_WIDTH - 1):]
+    return out + b.astype(x.dtype), new_state
+
+
+def rglru_block_apply(params, x: Array, cfg: RGLRUConfig, *,
+                      state: dict | None = None):
+    """Griffin recurrent block.  x: (B, S, D).
+    state: {'h': (B, d_rnn), 'conv': (B, 3, d_rnn)} or None.
+    Returns (y, new_state)."""
+    gate = jax.nn.gelu(x @ params["w_gate_in"].astype(x.dtype))
+    u = x @ params["w_rec_in"].astype(x.dtype)
+    u = logical_constraint(u, "batch", "seq", "rnn")
+    conv_state = state["conv"] if state else None
+    u, conv_state = _causal_conv(u, params["conv_w"], params["conv_b"],
+                                 conv_state)
+    h0 = state["h"] if state else None
+    y, h = rg_lru_scan(params, u, h0)
+    y = y * gate
+    out = y @ params["w_out"].astype(x.dtype)
+    out = logical_constraint(out, "batch", "seq", "embed_no_fsdp")
+    return out, {"h": h, "conv": conv_state}
+
+
+def rglru_block_step(params, x: Array, cfg: RGLRUConfig, *, state: dict):
+    """Decode one token.  x: (B, D)."""
+    gate = jax.nn.gelu(x @ params["w_gate_in"].astype(x.dtype))
+    u = x @ params["w_rec_in"].astype(x.dtype)
+    u3, conv_state = _causal_conv(u[:, None], params["conv_w"],
+                                  params["conv_b"], state["conv"])
+    y, h = rg_lru_step(params, u3[:, 0], state["h"])
+    out = (y * gate) @ params["w_out"].astype(x.dtype)
+    return out, {"h": h, "conv": conv_state}

@@ -1,0 +1,256 @@
+"""RWKV-6 "Finch" blocks (arXiv:2404.05892): attention-free time mixing
+with *data-dependent decay*, plus the squared-ReLU channel mix.
+
+Faithful core mechanism; two documented simplifications:
+* token-shift lerp coefficients are static (full Finch uses an extra
+  LoRA on the mix weights); the decay LoRA — Finch's headline
+  contribution — is implemented in full.
+* log-decay is clamped to [-2.5, -1e-6] so the chunked scan's
+  exp-factorized form stays in fp32 range (chunk 32 -> max exponent 80).
+  Trained RWKV decays live well inside this range.
+
+The chunked scan is the TPU-native formulation: intra-chunk work is an
+MXU matmul over (chunk, chunk) decay-weighted scores, inter-chunk state
+is carried by a lax.scan — O(S * chunk) instead of O(S^2), which is what
+makes the ``long_500k`` dry-run cell feasible for this family.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import logical_constraint
+from .layers import ParamDef, rms_norm
+
+Array = jax.Array
+
+LOG_DECAY_MIN = -2.5
+LOG_DECAY_MAX = -1e-6
+CHUNK = 32
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKVConfig:
+    d_model: int
+    d_ff: int
+    head_dim: int = 64
+    decay_lora_rank: int = 64
+
+    @property
+    def n_heads(self) -> int:
+        assert self.d_model % self.head_dim == 0
+        return self.d_model // self.head_dim
+
+
+def time_mix_def(cfg: RWKVConfig) -> dict[str, ParamDef]:
+    d, r = cfg.d_model, cfg.decay_lora_rank
+    # Flat (d, d) projections: 2560 divides the 16-way model axis even
+    # though 40 heads do not — sharding the flat channel dim wins over
+    # head-dim (dv) sharding, which §Perf F measured and REJECTED
+    # (collective halved but r/k replication raised the memory term).
+    return {
+        "mu_r": ParamDef((d,), (None,), init="zeros"),
+        "mu_k": ParamDef((d,), (None,), init="zeros"),
+        "mu_v": ParamDef((d,), (None,), init="zeros"),
+        "mu_w": ParamDef((d,), (None,), init="zeros"),
+        "mu_g": ParamDef((d,), (None,), init="zeros"),
+        "w_r": ParamDef((d, d), ("embed", "heads")),
+        "w_k": ParamDef((d, d), ("embed", "heads")),
+        "w_v": ParamDef((d, d), ("embed", "heads")),
+        "w_g": ParamDef((d, d), ("embed", "heads")),
+        "w_o": ParamDef((d, d), ("heads", "embed")),
+        # data-dependent decay: lw = -exp(w0 + tanh(x @ A) @ B)
+        "decay_w0": ParamDef((d,), (None,), init="zeros"),
+        "decay_A": ParamDef((d, r), ("embed", None), scale=0.01),
+        "decay_B": ParamDef((r, d), (None, None), scale=0.01),
+        "bonus_u": ParamDef((d,), (None,), init="zeros"),
+        "ln_x": ParamDef((d,), (None,), init="zeros"),  # per-head norm scale
+    }
+
+
+def channel_mix_def(cfg: RWKVConfig) -> dict[str, ParamDef]:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "mu_k": ParamDef((d,), (None,), init="zeros"),
+        "mu_r": ParamDef((d,), (None,), init="zeros"),
+        "w_k": ParamDef((d, f), ("embed", "ff")),
+        "w_v": ParamDef((f, d), ("ff", "embed")),
+        "w_r": ParamDef((d, d), ("embed", None)),
+    }
+
+
+def _token_shift(x: Array, prev: Array | None) -> Array:
+    """x_{t-1} with an optional carried state for the first position."""
+    shifted = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    if prev is not None:
+        shifted = shifted.at[:, 0].set(prev)
+    return shifted
+
+
+def _lerp(x: Array, x_prev: Array, mu: Array) -> Array:
+    m = mu.astype(x.dtype)
+    return x + (x_prev - x) * m
+
+
+def _log_decay(params, xw: Array) -> Array:
+    lora = jnp.einsum(
+        "bsd,dr->bsr", jnp.tanh(xw @ params["decay_A"].astype(xw.dtype)),
+        params["decay_B"].astype(xw.dtype))
+    raw = params["decay_w0"].astype(jnp.float32) + lora.astype(jnp.float32)
+    return jnp.clip(-jnp.exp(raw), LOG_DECAY_MIN, LOG_DECAY_MAX)
+
+
+def wkv_chunked(r: Array, k: Array, v: Array, lw: Array, u: Array,
+                state: Array | None = None,
+                chunk: int = CHUNK) -> tuple[Array, Array]:
+    """Chunked WKV scan.
+
+    r,k,v: (B, S, H, Dh); lw: (B, S, H, Dh) log-decay (<=0); u: (H, Dh).
+    state: (B, H, Dh, Dh) initial [key, value] state.
+    Returns (out (B,S,H,Dh) fp32, final state).
+
+    o_t = r_t @ S_{t-1} + (r_t . (u*k_t)) v_t
+    S_t = diag(exp(lw_t)) S_{t-1} + k_t (x) v_t
+    """
+    b, s, h, dh = r.shape
+    assert s % chunk == 0, (s, chunk)
+    n = s // chunk
+    rf = r.astype(jnp.float32).reshape(b, n, chunk, h, dh)
+    kf = k.astype(jnp.float32).reshape(b, n, chunk, h, dh)
+    vf = v.astype(jnp.float32).reshape(b, n, chunk, h, dh)
+    lwf = lw.astype(jnp.float32).reshape(b, n, chunk, h, dh)
+
+    c_incl = jnp.cumsum(lwf, axis=2)                 # c_j (inclusive)
+    c_excl = c_incl - lwf                            # c_{j-1}
+    c_tot = c_incl[:, :, -1:]                        # chunk total
+
+    r_in = rf * jnp.exp(c_excl)                      # r'_i
+    k_out = kf * jnp.exp(-c_incl)                    # k'_j  (bounded by clamp)
+    k_end = kf * jnp.exp(c_tot - c_incl)             # decay to chunk end
+
+    # intra-chunk scores: A[i, j] = r'_i . k'_j for j < i, bonus at j == i.
+    scores = jnp.einsum("bnihd,bnjhd->bnhij", r_in, k_out)
+    tri = jnp.tril(jnp.ones((chunk, chunk), jnp.float32), -1)
+    scores = scores * tri[None, None, None]
+    bonus = jnp.einsum("bnihd,hd,bnihd->bnih", rf, u.astype(jnp.float32), kf)
+    o_intra = jnp.einsum("bnhij,bnjhd->bnihd", scores, vf) \
+        + bonus[..., None] * vf
+
+    # inter-chunk: carry S across chunks with a scan.
+    kv_end = jnp.einsum("bnjhd,bnjhe->bnhde", k_end, vf)  # sum_j decayed k(x)v
+
+    def step(S, inputs):
+        r_in_c, kv_end_c, c_tot_c = inputs
+        o_inter = jnp.einsum("bihd,bhde->bihe", r_in_c, S)
+        S = jnp.exp(c_tot_c)[:, 0, :, :, None] * S + kv_end_c
+        return S, o_inter
+
+    S0 = state.astype(jnp.float32) if state is not None else \
+        jnp.zeros((b, h, dh, dh), jnp.float32)
+    xs = (jnp.moveaxis(r_in, 1, 0), jnp.moveaxis(kv_end, 1, 0),
+          jnp.moveaxis(c_tot, 1, 0))
+    S_fin, o_inter = jax.lax.scan(step, S0, xs)
+    o = o_intra + jnp.moveaxis(o_inter, 0, 1)
+    return o.reshape(b, s, h, dh), S_fin
+
+
+def wkv_step(r: Array, k: Array, v: Array, lw: Array, u: Array,
+             state: Array) -> tuple[Array, Array]:
+    """Single-token recurrence (decode).  r,k,v,lw: (B, H, Dh)."""
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    lwf = lw.astype(jnp.float32)
+    out = jnp.einsum("bhd,bhde->bhe", rf, state) \
+        + jnp.einsum("bhd,hd,bhd,bhe->bhe", rf, u.astype(jnp.float32), kf, vf)
+    state = jnp.exp(lwf)[..., None] * state \
+        + jnp.einsum("bhd,bhe->bhde", kf, vf)
+    return out, state
+
+
+def time_mix_apply(params, x: Array, cfg: RWKVConfig, *,
+                   shift_state: Array | None = None,
+                   wkv_state: Array | None = None,
+                   chunk: int = CHUNK):
+    """Returns (y, (new_shift_state, new_wkv_state))."""
+    b, s, d = x.shape
+    h, dh = cfg.n_heads, cfg.head_dim
+    xp = _token_shift(x, shift_state)
+    xr = _lerp(x, xp, params["mu_r"])
+    xk = _lerp(x, xp, params["mu_k"])
+    xv = _lerp(x, xp, params["mu_v"])
+    xw = _lerp(x, xp, params["mu_w"])
+    xg = _lerp(x, xp, params["mu_g"])
+
+    r = (xr @ params["w_r"].astype(x.dtype)).reshape(b, s, h, dh)
+    k = (xk @ params["w_k"].astype(x.dtype)).reshape(b, s, h, dh)
+    v = (xv @ params["w_v"].astype(x.dtype)).reshape(b, s, h, dh)
+    g = jax.nn.silu(xg @ params["w_g"].astype(x.dtype)).reshape(b, s, h, dh)
+    lw = _log_decay(params, xw).reshape(b, s, h, dh)
+    u = params["bonus_u"].reshape(h, dh)
+
+    r = logical_constraint(r, "batch", "seq", "heads", None)
+    k = logical_constraint(k, "batch", "seq", "heads", None)
+    v = logical_constraint(v, "batch", "seq", "heads", None)
+
+    pad = (-s) % chunk
+    if pad:
+        rp = jnp.pad(r, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        lwp = jnp.pad(lw, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    else:
+        rp, kp, vp, lwp = r, k, v, lw
+    o, S = wkv_chunked(rp, kp, vp, lwp, u, state=wkv_state, chunk=chunk)
+    o = o[:, :s]
+
+    # per-head group norm, then gate and project out
+    o = rms_norm(o.astype(x.dtype), params["ln_x"].reshape(h, dh))
+    y = ((o * g).reshape(b, s, d)) @ params["w_o"].astype(x.dtype)
+    y = logical_constraint(y, "batch", "seq", "embed_no_fsdp")
+    return y, (x[:, -1], S)
+
+
+def time_mix_step(params, x: Array, cfg: RWKVConfig, *, shift_state: Array,
+                  wkv_state: Array):
+    """Decode: x (B, D) one token.  Returns (y, (shift, wkv))."""
+    b, d = x.shape
+    h, dh = cfg.n_heads, cfg.head_dim
+    xp = shift_state
+    xr = _lerp(x, xp, params["mu_r"])
+    xk = _lerp(x, xp, params["mu_k"])
+    xv = _lerp(x, xp, params["mu_v"])
+    xw = _lerp(x, xp, params["mu_w"])
+    xg = _lerp(x, xp, params["mu_g"])
+    r = (xr @ params["w_r"].astype(x.dtype)).reshape(b, h, dh)
+    k = (xk @ params["w_k"].astype(x.dtype)).reshape(b, h, dh)
+    v = (xv @ params["w_v"].astype(x.dtype)).reshape(b, h, dh)
+    g = jax.nn.silu(xg @ params["w_g"].astype(x.dtype)).reshape(b, h, dh)
+    lw = _log_decay(params, xw[:, None])[:, 0].reshape(b, h, dh)
+    u = params["bonus_u"].reshape(h, dh)
+    o, S = wkv_step(r, k, v, lw, u, wkv_state.astype(jnp.float32))
+    o = rms_norm(o.astype(x.dtype), params["ln_x"].reshape(h, dh))
+    y = ((o * g).reshape(b, d)) @ params["w_o"].astype(x.dtype)
+    return y, (x, S)
+
+
+def channel_mix_apply(params, x: Array, cfg: RWKVConfig, *,
+                      shift_state: Array | None = None):
+    xp = _token_shift(x, shift_state)
+    xk = _lerp(x, xp, params["mu_k"])
+    xr = _lerp(x, xp, params["mu_r"])
+    k = jnp.square(jax.nn.relu(xk @ params["w_k"].astype(x.dtype)))
+    k = logical_constraint(k, "batch", "seq", "ff")
+    kv = k @ params["w_v"].astype(x.dtype)
+    y = jax.nn.sigmoid(xr @ params["w_r"].astype(x.dtype)) * kv
+    return logical_constraint(y, "batch", "seq", "embed_no_fsdp"), x[:, -1]
+
+
+def channel_mix_step(params, x: Array, cfg: RWKVConfig, *,
+                     shift_state: Array):
+    xk = _lerp(x, shift_state, params["mu_k"])
+    xr = _lerp(x, shift_state, params["mu_r"])
+    k = jnp.square(jax.nn.relu(xk @ params["w_k"].astype(x.dtype)))
+    kv = k @ params["w_v"].astype(x.dtype)
+    y = jax.nn.sigmoid(xr @ params["w_r"].astype(x.dtype)) * kv
+    return y, x

@@ -1,0 +1,601 @@
+"""Unified decoder model covering all 10 assigned architectures.
+
+One config drives: dense GQA transformers (command-r, tinyllama, glm4,
+deepseek, pixtral backbone), MoE transformers (dbrx, grok-1), multi-
+codebook audio decoders (musicgen), attention-free RWKV-6, and the
+RG-LRU/attention hybrid (recurrentgemma) — via a periodic layer
+``pattern`` of mixer kinds ('attn' | 'rwkv6' | 'rglru').
+
+Layers are *scanned*: parameters of one pattern period are stacked along
+a leading axis and the stack is consumed by ``lax.scan`` — compile time
+and HLO size stay O(period), not O(n_layers), which is what makes 80
+dry-run compiles of up-to-314B-parameter models tractable.  Hybrid
+patterns scan whole periods (e.g. (rglru, rglru, attn)); a remainder
+prefix runs unscanned.
+
+Three modes share the same layer code: 'train' (full seq, no cache),
+'prefill' (full seq, emits caches), 'decode' (one token, carries caches).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import logical_constraint
+from . import layers as L
+from .layers import ParamDef
+from .moe import MoEConfig, moe_apply, moe_def
+from .rwkv6 import (RWKVConfig, channel_mix_apply, channel_mix_def,
+                    channel_mix_step, time_mix_apply, time_mix_def,
+                    time_mix_step)
+from .rglru import (RGLRUConfig, rglru_block_apply, rglru_block_def,
+                    rglru_block_step, CONV_WIDTH)
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int | None = None
+    norm: str = "rms"                  # rms | layer
+    act: str = "swiglu"
+    parallel_block: bool = False       # command-r: attn and mlp in parallel
+    qkv_bias: bool = False
+    out_bias: bool = False
+    mlp_bias: bool = False
+    use_rope: bool = True
+    rope_theta: float = 10000.0
+    rope_fraction: float = 1.0
+    window: int | None = None          # sliding window for attn layers
+    attn_softcap: float | None = None
+    logits_softcap: float | None = None
+    logit_scale: float = 1.0
+    embed_scale: bool = False          # multiply embeddings by sqrt(d)
+    tie_embeddings: bool = True
+    qk_norm: bool = False
+    pattern: tuple[str, ...] = ("attn",)
+    moe: MoEConfig | None = None
+    rwkv: RWKVConfig | None = None
+    rglru: RGLRUConfig | None = None
+    codebooks: int = 1                 # musicgen: 4 parallel codebooks
+    frontend_embeds: bool = False      # pixtral: extra (B, P, D) embeds input
+    dtype: Any = jnp.bfloat16
+    remat: str = "none"                # none | full | dots
+    moe_aux_coef: float = 0.01
+    # False unrolls the layer stack into straight-line HLO.  Used by the
+    # dry-run's 1-period/2-period FLOP-extrapolation compiles (XLA cost
+    # analysis counts a While body once, so the scanned model's FLOPs
+    # must be reconstructed from an unrolled delta).
+    scan_layers: bool = True
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def n_periods(self) -> int:
+        return self.n_layers // len(self.pattern)
+
+    @property
+    def prefix(self) -> tuple[str, ...]:
+        return self.pattern[: self.n_layers % len(self.pattern)]
+
+    def attn_cfg(self) -> L.AttnConfig:
+        return L.AttnConfig(
+            d_model=self.d_model, n_heads=self.n_heads,
+            kv_heads=self.kv_heads, head_dim=self.hd,
+            rope_theta=self.rope_theta, rope_fraction=self.rope_fraction,
+            use_rope=self.use_rope, qkv_bias=self.qkv_bias,
+            out_bias=self.out_bias, window=self.window,
+            softcap=self.attn_softcap, qk_norm=self.qk_norm)
+
+    def mlp_cfg(self) -> L.MLPConfig:
+        return L.MLPConfig(d_model=self.d_model, d_ff=self.d_ff,
+                           kind=self.act, bias=self.mlp_bias)
+
+    def param_count(self) -> int:
+        defs = model_def(self)
+        leaves = jax.tree_util.tree_leaves(
+            defs, is_leaf=lambda x: isinstance(x, ParamDef))
+        total = sum(math.prod(d.shape) for d in leaves)
+        # stacked period layers count n_periods times; prefix once; the
+        # stacking is applied at init, so account for it here.
+        per_period = sum(
+            math.prod(d.shape) for d in jax.tree_util.tree_leaves(
+                _period_def(self), is_leaf=lambda x: isinstance(x, ParamDef)))
+        return total + per_period * (self.n_periods - 1)
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top_k of num_experts)."""
+        if self.moe is None:
+            return self.param_count()
+        full = self.param_count()
+        moe_leaves = [d for k, d in _flat_defs(moe_def(self.moe)).items()
+                      if k != "w_router"]
+        per_layer_moe = sum(math.prod(d.shape) for d in moe_leaves)
+        n_moe_layers = self.n_layers  # every layer is MoE in dbrx/grok
+        inactive = per_layer_moe * n_moe_layers \
+            * (1 - self.moe.top_k / self.moe.num_experts)
+        return int(full - inactive)
+
+
+def _flat_defs(d, prefix=""):
+    out = {}
+    for k, v in d.items():
+        if isinstance(v, ParamDef):
+            out[prefix + k] = v
+        else:
+            out.update(_flat_defs(v, prefix + k + "/"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Layer definitions per mixer kind
+# ---------------------------------------------------------------------------
+
+def _layer_def(cfg: ModelConfig, kind: str) -> dict:
+    d = cfg.d_model
+    if kind == "attn":
+        out = {"norm1": L.norm_def(d, cfg.norm),
+               "attn": L.attn_def(cfg.attn_cfg())}
+        if not cfg.parallel_block:
+            out["norm2"] = L.norm_def(d, cfg.norm)
+        out["ffn"] = moe_def(cfg.moe) if cfg.moe else L.mlp_def(cfg.mlp_cfg())
+        return out
+    if kind == "rwkv6":
+        return {"norm1": L.norm_def(d, cfg.norm),
+                "tm": time_mix_def(cfg.rwkv),
+                "norm2": L.norm_def(d, cfg.norm),
+                "cm": channel_mix_def(cfg.rwkv)}
+    if kind == "rglru":
+        return {"norm1": L.norm_def(d, cfg.norm),
+                "rec": rglru_block_def(cfg.rglru),
+                "norm2": L.norm_def(d, cfg.norm),
+                "ffn": L.mlp_def(cfg.mlp_cfg())}
+    raise ValueError(kind)
+
+
+def _period_def(cfg: ModelConfig) -> dict:
+    return {f"m{i}": _layer_def(cfg, kind)
+            for i, kind in enumerate(cfg.pattern)}
+
+
+def model_def(cfg: ModelConfig) -> dict:
+    """ParamDef tree (period layers declared ONCE; stacked at init)."""
+    d, v = cfg.d_model, cfg.vocab
+    defs: dict[str, Any] = {}
+    if cfg.codebooks > 1:
+        defs["embed"] = {"embedding": ParamDef(
+            (cfg.codebooks, v, d), (None, "vocab", None),
+            init="embed", scale=0.02)}
+        defs["heads"] = {"unembedding": ParamDef(
+            (cfg.codebooks, d, v), (None, None, "vocab"))}
+    else:
+        defs["embed"] = L.embed_def(v, d)
+        if not cfg.tie_embeddings:
+            defs["unembed"] = L.unembed_def(v, d)
+    defs["final_norm"] = L.norm_def(d, cfg.norm)
+    for i, kind in enumerate(cfg.prefix):
+        defs[f"prefix{i}"] = _layer_def(cfg, kind)
+    defs["period"] = _period_def(cfg)
+    return defs
+
+
+def init_params(key: Array, cfg: ModelConfig):
+    defs = model_def(cfg)
+    period_defs = defs.pop("period")
+    params = L.init_tree(key, defs)
+    keys = jax.random.split(jax.random.fold_in(key, 7), cfg.n_periods)
+    params["layers"] = jax.vmap(
+        lambda k: L.init_tree(k, period_defs))(keys)
+    return params
+
+
+def param_specs(cfg: ModelConfig):
+    """PartitionSpec tree matching ``init_params`` (uses active rules)."""
+    defs = model_def(cfg)
+    period_defs = defs.pop("period")
+    specs = L.spec_tree(defs)
+    period_specs = L.spec_tree(period_defs)
+    specs["layers"] = jax.tree_util.tree_map(
+        lambda s: P(*((None,) + tuple(s))), period_specs,
+        is_leaf=lambda x: isinstance(x, P))
+    return specs
+
+
+def abstract_params(cfg: ModelConfig, dtype=None):
+    """ShapeDtypeStruct tree matching ``init_params`` (no allocation)."""
+    defs = model_def(cfg)
+    period_defs = defs.pop("period")
+    absd = L.abstract_tree(defs, dtype)
+    period_abs = L.abstract_tree(period_defs, dtype)
+    absd["layers"] = jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct((cfg.n_periods,) + s.shape, s.dtype),
+        period_abs)
+    return absd
+
+
+# ---------------------------------------------------------------------------
+# Cache definitions (decode / prefill state)
+# ---------------------------------------------------------------------------
+
+def _layer_cache_def(cfg: ModelConfig, kind: str, batch: int,
+                     cache_len: int) -> dict:
+    d = cfg.d_model
+    if kind == "attn":
+        return L.attn_cache_def(cfg.attn_cfg(), batch, cache_len,
+                                dtype=cfg.dtype)
+    if kind == "rwkv6":
+        h, dh = cfg.rwkv.n_heads, cfg.rwkv.head_dim
+        return {
+            "shift_tm": ParamDef((batch, d), ("batch", None), init="zeros",
+                                 dtype=cfg.dtype),
+            "wkv": ParamDef((batch, h, dh, dh), ("batch", "heads", None, None),
+                            init="zeros", dtype=jnp.float32),
+            "shift_cm": ParamDef((batch, d), ("batch", None), init="zeros",
+                                 dtype=cfg.dtype),
+        }
+    if kind == "rglru":
+        dr = cfg.rglru.d_rnn
+        return {
+            "h": ParamDef((batch, dr), ("batch", "rnn"), init="zeros",
+                          dtype=jnp.float32),
+            "conv": ParamDef((batch, CONV_WIDTH - 1, dr),
+                             ("batch", None, "rnn"), init="zeros",
+                             dtype=cfg.dtype),
+        }
+    raise ValueError(kind)
+
+
+def cache_def(cfg: ModelConfig, batch: int, cache_len: int) -> dict:
+    defs: dict[str, Any] = {}
+    for i, kind in enumerate(cfg.prefix):
+        defs[f"prefix{i}"] = _layer_cache_def(cfg, kind, batch, cache_len)
+    defs["period"] = {f"m{i}": _layer_cache_def(cfg, kind, batch, cache_len)
+                      for i, kind in enumerate(cfg.pattern)}
+    return defs
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int):
+    defs = cache_def(cfg, batch, cache_len)
+    period_defs = defs.pop("period")
+    cache = L.init_tree(jax.random.PRNGKey(0), defs)
+    period = L.init_tree(jax.random.PRNGKey(0), period_defs)
+    cache["layers"] = jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a, (cfg.n_periods,) + a.shape), period)
+    return cache
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, cache_len: int):
+    defs = cache_def(cfg, batch, cache_len)
+    period_defs = defs.pop("period")
+    absd = L.abstract_tree(defs)
+    period_abs = L.abstract_tree(period_defs)
+    absd["layers"] = jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct((cfg.n_periods,) + s.shape, s.dtype),
+        period_abs)
+    return absd
+
+
+def cache_specs(cfg: ModelConfig, batch: int, cache_len: int):
+    defs = cache_def(cfg, batch, cache_len)
+    period_defs = defs.pop("period")
+    specs = L.spec_tree(defs)
+    period_specs = L.spec_tree(period_defs)
+    specs["layers"] = jax.tree_util.tree_map(
+        lambda s: P(*((None,) + tuple(s))), period_specs,
+        is_leaf=lambda x: isinstance(x, P))
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Layer application (one code path for train / prefill / decode)
+# ---------------------------------------------------------------------------
+
+def _attn_prefill_cache(cfg: ModelConfig, k: Array, v: Array,
+                        cache_len: int) -> dict:
+    """Pack full-sequence K/V into the decode cache layout (ring-aware)."""
+    b, s, kv, dh = k.shape
+    if s >= cache_len:
+        k_last = k[:, s - cache_len:]
+        v_last = v[:, s - cache_len:]
+        shift = s % cache_len
+        k_c = jnp.roll(k_last, shift, axis=1)
+        v_c = jnp.roll(v_last, shift, axis=1)
+    else:
+        pad = ((0, 0), (0, cache_len - s), (0, 0), (0, 0))
+        k_c, v_c = jnp.pad(k, pad), jnp.pad(v, pad)
+    return {"k": k_c.astype(cfg.dtype), "v": v_c.astype(cfg.dtype)}
+
+
+def _apply_attn_layer(params, x, cfg: ModelConfig, *, mode, cache,
+                      positions, cache_len):
+    acfg = cfg.attn_cfg()
+    aux = jnp.zeros((), jnp.float32)
+    h = L.apply_norm(params["norm1"], x, cfg.norm)
+    new_cache = None
+    if mode == "decode":
+        a, new_cache = L.attn_decode(params["attn"], h, acfg, cache=cache,
+                                     pos=positions[:, 0])
+    else:
+        # train/prefill share the full-seq path
+        b, s, _ = h.shape
+        q, k, v = L._qkv(params["attn"], h, acfg, positions)
+        ekv = k.shape[2]
+        qg = q.reshape(b, s, ekv, acfg.n_heads // ekv, acfg.head_dim)
+        o = L.attention(qg, k, v, positions, positions,
+                        window=acfg.window, softcap=acfg.softcap)
+        if L.seq_parallel_attention(acfg):
+            # SP: the score/context tensors shard on the q-seq dim
+            o = logical_constraint(o, "batch", "seq_sp", None, None, None)
+        o = o.reshape(b, s, acfg.n_heads, acfg.head_dim)
+        a = jnp.einsum("bshk,hkd->bsd", o, params["attn"]["wo"].astype(x.dtype))
+        if acfg.out_bias:
+            a = a + params["attn"]["bo"].astype(x.dtype)
+        if mode == "prefill":
+            new_cache = _attn_prefill_cache(cfg, k, v, cache_len)
+    full_cap = (mode == "decode")
+    if cfg.parallel_block:
+        if cfg.moe:
+            f, aux = moe_apply(params["ffn"], h, cfg.moe,
+                               full_capacity=full_cap)
+        else:
+            f = L.mlp_apply(params["ffn"], h, cfg.mlp_cfg())
+        x = x + a + f
+    else:
+        x = x + a
+        h2 = L.apply_norm(params["norm2"], x, cfg.norm)
+        if cfg.moe:
+            f, aux = moe_apply(params["ffn"], h2, cfg.moe,
+                               full_capacity=full_cap)
+        else:
+            f = L.mlp_apply(params["ffn"], h2, cfg.mlp_cfg())
+        x = x + f
+    return x, new_cache, aux
+
+
+def _apply_rwkv_layer(params, x, cfg: ModelConfig, *, mode, cache,
+                      positions, cache_len):
+    aux = jnp.zeros((), jnp.float32)
+    h = L.apply_norm(params["norm1"], x, cfg.norm)
+    if mode == "decode":
+        y, (sh_tm, wkv) = time_mix_step(
+            params["tm"], h[:, 0], cfg.rwkv,
+            shift_state=cache["shift_tm"], wkv_state=cache["wkv"])
+        x = x + y[:, None]
+        h2 = L.apply_norm(params["norm2"], x, cfg.norm)
+        y2, sh_cm = channel_mix_step(params["cm"], h2[:, 0], cfg.rwkv,
+                                     shift_state=cache["shift_cm"])
+        x = x + y2[:, None]
+        new_cache = {"shift_tm": sh_tm.astype(cfg.dtype), "wkv": wkv,
+                     "shift_cm": sh_cm.astype(cfg.dtype)}
+        return x, new_cache, aux
+    init_tm = cache["shift_tm"] if mode == "prefill" and cache else None
+    y, (sh_tm, wkv) = time_mix_apply(params["tm"], h, cfg.rwkv,
+                                     shift_state=None, wkv_state=None)
+    x = x + y
+    h2 = L.apply_norm(params["norm2"], x, cfg.norm)
+    y2, sh_cm = channel_mix_apply(params["cm"], h2, cfg.rwkv)
+    x = x + y2
+    new_cache = None
+    if mode == "prefill":
+        new_cache = {"shift_tm": sh_tm.astype(cfg.dtype), "wkv": wkv,
+                     "shift_cm": sh_cm.astype(cfg.dtype)}
+    del init_tm
+    return x, new_cache, aux
+
+
+def _apply_rglru_layer(params, x, cfg: ModelConfig, *, mode, cache,
+                       positions, cache_len):
+    aux = jnp.zeros((), jnp.float32)
+    h = L.apply_norm(params["norm1"], x, cfg.norm)
+    if mode == "decode":
+        y, new_state = rglru_block_step(params["rec"], h[:, 0], cfg.rglru,
+                                        state=cache)
+        x = x + y[:, None]
+    else:
+        y, new_state = rglru_block_apply(params["rec"], h, cfg.rglru,
+                                         state=None)
+        x = x + y
+    h2 = L.apply_norm(params["norm2"], x, cfg.norm)
+    x = x + L.mlp_apply(params["ffn"], h2, cfg.mlp_cfg())
+    new_cache = None
+    if mode in ("decode", "prefill"):
+        new_cache = {"h": new_state["h"],
+                     "conv": new_state["conv"].astype(cfg.dtype)}
+    return x, new_cache, aux
+
+
+_LAYER_APPLY = {
+    "attn": _apply_attn_layer,
+    "rwkv6": _apply_rwkv_layer,
+    "rglru": _apply_rglru_layer,
+}
+
+
+# ---------------------------------------------------------------------------
+# Full model forward
+# ---------------------------------------------------------------------------
+
+def _embed(params, cfg: ModelConfig, tokens: Array | None,
+           frontend: Array | None):
+    if cfg.codebooks > 1:
+        emb = params["embed"]["embedding"].astype(cfg.dtype)  # (CB, V, D)
+        x = sum(jnp.take(emb[i], tokens[..., i], axis=0)
+                for i in range(cfg.codebooks))
+    else:
+        x = L.embed_apply(params["embed"], tokens, cfg.dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), cfg.dtype)
+    if frontend is not None:
+        x = jnp.concatenate([frontend.astype(cfg.dtype), x], axis=1)
+    return x
+
+
+def _logits(params, cfg: ModelConfig, x: Array):
+    if cfg.codebooks > 1:
+        w = params["heads"]["unembedding"].astype(x.dtype)  # (CB, D, V)
+        logits = jnp.einsum("bsd,cdv->bscv", x, w,
+                            preferred_element_type=jnp.float32)
+    elif cfg.tie_embeddings:
+        logits = L.logits_apply(params["embed"], x)
+    else:
+        logits = L.unembed_apply(params["unembed"], x)
+    logits = logits * cfg.logit_scale
+    if cfg.logits_softcap is not None:
+        logits = jnp.tanh(logits / cfg.logits_softcap) * cfg.logits_softcap
+    return logits
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    if cfg.remat == "full":
+        return jax.checkpoint(fn, policy=None)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return fn
+
+
+def forward(params, cfg: ModelConfig, *, tokens: Array | None = None,
+            frontend: Array | None = None, mode: str = "train",
+            caches=None, positions: Array | None = None,
+            cache_len: int | None = None, return_hidden: bool = False):
+    """Returns (logits_or_hidden, new_caches, aux_loss).
+
+    ``return_hidden`` skips the unembedding (the training loss uses the
+    chunked CE path instead — the full (B, S, V) logits tensor is never
+    materialized).  Prefill slices to the LAST position before the
+    unembedding for the same reason.
+    """
+    x = _embed(params, cfg, tokens, frontend)
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = logical_constraint(x, "batch", "seq", "embed_no_fsdp")
+
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches: dict[str, Any] = {}
+
+    for i, kind in enumerate(cfg.prefix):
+        c = caches.get(f"prefix{i}") if caches else None
+        x, nc, aux = _LAYER_APPLY[kind](
+            params[f"prefix{i}"], x, cfg, mode=mode, cache=c,
+            positions=positions, cache_len=cache_len)
+        aux_total += aux
+        if nc is not None:
+            new_caches[f"prefix{i}"] = nc
+
+    def period_body(carry, per):
+        x, aux_acc = carry
+        per_params, per_cache = per
+        per_new_cache = {}
+        for j, kind in enumerate(cfg.pattern):
+            c = per_cache.get(f"m{j}") if per_cache is not None else None
+            x, nc, aux = _LAYER_APPLY[kind](
+                per_params[f"m{j}"], x, cfg, mode=mode, cache=c,
+                positions=positions, cache_len=cache_len)
+            aux_acc += aux
+            if nc is not None:
+                per_new_cache[f"m{j}"] = nc
+        x = logical_constraint(x, "batch", "seq", "embed_no_fsdp")
+        return (x, aux_acc), (per_new_cache or None)
+
+    body = _maybe_remat(period_body, cfg)
+    layer_caches = caches["layers"] if caches else None
+    if cfg.scan_layers:
+        (x, aux_total), stacked_caches = jax.lax.scan(
+            body, (x, aux_total), (params["layers"], layer_caches))
+    else:
+        outs = []
+        for i in range(cfg.n_periods):
+            take = lambda t: jax.tree_util.tree_map(lambda a: a[i], t)
+            (x, aux_total), c = body(
+                (x, aux_total),
+                (take(params["layers"]),
+                 take(layer_caches) if layer_caches is not None else None))
+            outs.append(c)
+        stacked_caches = None if outs and outs[0] is None else \
+            jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *outs) \
+            if outs else None
+    if stacked_caches is not None:
+        new_caches["layers"] = stacked_caches
+
+    x = L.apply_norm(params["final_norm"], x, cfg.norm)
+    if return_hidden:
+        return x, (new_caches or None), aux_total
+    if mode == "prefill":
+        x = x[:, -1:]
+    logits = _logits(params, cfg, x)
+    return logits, (new_caches or None), aux_total
+
+
+# ---------------------------------------------------------------------------
+# Public entry points
+# ---------------------------------------------------------------------------
+
+def loss_fn(params, cfg: ModelConfig, batch: dict):
+    """batch: tokens (B,S[,CB]), targets (B,S[,CB]), optional mask (B,S),
+    optional frontend (B,P,D).  Returns (loss, metrics).
+
+    Uses the chunked-CE path: the (B, S, V) logits tensor never exists.
+    """
+    frontend = batch.get("frontend")
+    hidden, _, aux = forward(params, cfg, tokens=batch["tokens"],
+                             frontend=frontend, mode="train",
+                             return_hidden=True)
+    targets = batch["targets"]
+    mask = batch.get("mask")
+    if frontend is not None:
+        # loss only on the text positions (after the frontend prefix)
+        p = frontend.shape[1]
+        hidden = hidden[:, p:]
+    if cfg.codebooks > 1:
+        w = params["heads"]["unembedding"]         # (CB, D, V)
+        ce = sum(
+            L.chunked_cross_entropy(hidden, w[i], targets[..., i], mask,
+                                    tied=False, logit_scale=cfg.logit_scale,
+                                    softcap=cfg.logits_softcap)
+            for i in range(cfg.codebooks)) / cfg.codebooks
+    else:
+        if cfg.tie_embeddings:
+            w, tied = params["embed"]["embedding"], True
+        else:
+            w, tied = params["unembed"]["unembedding"], False
+        ce = L.chunked_cross_entropy(hidden, w, targets, mask, tied=tied,
+                                     logit_scale=cfg.logit_scale,
+                                     softcap=cfg.logits_softcap)
+    loss = ce + cfg.moe_aux_coef * aux
+    return loss, {"ce": ce, "moe_aux": aux}
+
+
+def prefill(params, cfg: ModelConfig, tokens: Array, *,
+            cache_len: int, frontend: Array | None = None):
+    """Returns (last-position logits, caches)."""
+    logits, caches, _ = forward(params, cfg, tokens=tokens,
+                                frontend=frontend, mode="prefill",
+                                cache_len=cache_len)
+    return logits[:, -1], caches
+
+
+def decode_step(params, cfg: ModelConfig, tokens: Array, caches,
+                pos: Array):
+    """One decode step.  tokens: (B,) (or (B, CB) multi-codebook);
+    pos: (B,) absolute positions.  Returns (logits (B, V[, CB]), caches)."""
+    t = tokens[:, None] if cfg.codebooks == 1 else tokens[:, None, :]
+    logits, new_caches, _ = forward(
+        params, cfg, tokens=t, mode="decode", caches=caches,
+        positions=pos[:, None], cache_len=None)
+    return logits[:, 0], new_caches

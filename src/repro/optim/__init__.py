@@ -1,0 +1,4 @@
+from .optimizers import (  # noqa: F401
+    Optimizer, sgd, adamw, adafactor, chain_clip, global_norm,
+    abstract_opt_state, opt_state_specs, default_optimizer_for)
+from .schedules import warmup_cosine, constant  # noqa: F401

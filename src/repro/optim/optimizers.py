@@ -1,0 +1,230 @@
+"""Optimizers: SGD+momentum (the paper's), AdamW, Adafactor (>=100B).
+
+Minimal optax-style API: ``Optimizer(init, update)`` where
+``update(grads, state, params, step) -> (new_params, new_state)``.
+Optimizer state mirrors the param pytree, so the same PartitionSpecs
+shard it (ZeRO-style: moments inherit the FSDP 'embed'->data sharding).
+
+``adafactor`` keeps factored second moments for rank>=2 leaves — the
+memory that lets grok-1 (316B params) train on 16 GB/chip meshes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, Array], tuple[Any, Any]]
+    # mirror of init for ShapeDtypeStruct trees (dry-run, no allocation)
+    abstract_init: Callable[[Any], Any]
+
+
+def global_norm(tree) -> Array:
+    return jnp.sqrt(sum(
+        jnp.sum(jnp.square(x.astype(jnp.float32)))
+        for x in jax.tree_util.tree_leaves(tree)))
+
+
+def _clipped(grads, max_norm: float | None):
+    if max_norm is None:
+        return grads
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads)
+
+
+# ---------------------------------------------------------------------------
+# SGD + momentum (the paper trains with SGD, lr 0.005, momentum 0.9)
+# ---------------------------------------------------------------------------
+
+def sgd(lr_fn, *, momentum: float = 0.9, weight_decay: float = 0.0,
+        max_norm: float | None = None) -> Optimizer:
+    def init(params):
+        return {"mu": jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+    def abstract_init(params):
+        return {"mu": jax.tree_util.tree_map(
+            lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), params)}
+
+    def update(grads, state, params, step):
+        grads = _clipped(grads, max_norm)
+        lr = lr_fn(step)
+
+        def upd(g, mu, p):
+            g = g.astype(jnp.float32)
+            if weight_decay:
+                g = g + weight_decay * p.astype(jnp.float32)
+            mu = momentum * mu + g
+            return (p.astype(jnp.float32) - lr * mu).astype(p.dtype), mu
+
+        flat = jax.tree_util.tree_map(upd, grads, state["mu"], params)
+        new_p = jax.tree_util.tree_map(lambda t: t[0], flat,
+                                       is_leaf=lambda t: isinstance(t, tuple))
+        new_mu = jax.tree_util.tree_map(lambda t: t[1], flat,
+                                        is_leaf=lambda t: isinstance(t, tuple))
+        return new_p, {"mu": new_mu}
+
+    return Optimizer("sgd", init, update, abstract_init)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw(lr_fn, *, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1,
+          max_norm: float | None = 1.0) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree_util.tree_map(z, params),
+                "v": jax.tree_util.tree_map(z, params)}
+
+    def abstract_init(params):
+        z = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+        return {"m": jax.tree_util.tree_map(z, params),
+                "v": jax.tree_util.tree_map(z, params)}
+
+    def update(grads, state, params, step):
+        grads = _clipped(grads, max_norm)
+        lr = lr_fn(step)
+        t = step.astype(jnp.float32) + 1.0
+        c1 = 1.0 - b1 ** t
+        c2 = 1.0 - b2 ** t
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * jnp.square(g)
+            step_ = (m / c1) / (jnp.sqrt(v / c2) + eps)
+            if weight_decay:
+                step_ = step_ + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * step_).astype(p.dtype), m, v
+
+        flat = jax.tree_util.tree_map(upd, grads, state["m"], state["v"],
+                                      params)
+        pick = lambda i: jax.tree_util.tree_map(
+            lambda t_: t_[i], flat, is_leaf=lambda t_: isinstance(t_, tuple))
+        return pick(0), {"m": pick(1), "v": pick(2)}
+
+    return Optimizer("adamw", init, update, abstract_init)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moments; memory for 100B+ models)
+# ---------------------------------------------------------------------------
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+
+def adafactor(lr_fn, *, decay_pow: float = 0.8, eps: float = 1e-30,
+              clip_rms: float = 1.0, weight_decay: float = 0.0,
+              max_norm: float | None = 1.0) -> Optimizer:
+    def _state_for(p, abstract: bool):
+        mk = (lambda s: jax.ShapeDtypeStruct(s, jnp.float32)) if abstract \
+            else (lambda s: jnp.zeros(s, jnp.float32))
+        if _factored(p.shape):
+            return {"vr": mk(p.shape[:-1]), "vc": mk(p.shape[:-2] +
+                                                     (p.shape[-1],))}
+        return {"v": mk(p.shape)}
+
+    def init(params):
+        return {"f": jax.tree_util.tree_map(
+            lambda p: _state_for(p, False), params)}
+
+    def abstract_init(params):
+        return {"f": jax.tree_util.tree_map(
+            lambda p: _state_for(p, True), params)}
+
+    def update(grads, state, params, step):
+        grads = _clipped(grads, max_norm)
+        lr = lr_fn(step)
+        t = step.astype(jnp.float32) + 1.0
+        beta2 = 1.0 - t ** (-decay_pow)
+
+        def upd(g, s, p):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if "vr" in s:
+                vr = beta2 * s["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+                vc = beta2 * s["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+                r = vr / jnp.maximum(
+                    jnp.mean(vr, axis=-1, keepdims=True), eps)
+                u = g / (jnp.sqrt(r)[..., None] * jnp.sqrt(vc)[..., None, :]
+                         + eps)
+                ns = {"vr": vr, "vc": vc}
+            else:
+                v = beta2 * s["v"] + (1 - beta2) * g2
+                u = g / (jnp.sqrt(v) + eps)
+                ns = {"v": v}
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+            u = u / jnp.maximum(1.0, rms / clip_rms)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), ns
+
+        is_state = lambda x: isinstance(x, dict) and ("v" in x or "vr" in x)
+        flat = jax.tree_util.tree_map(
+            upd, grads, state["f"], params,
+            is_leaf=lambda x: isinstance(x, jax.Array))
+        # tree_map above maps over grads' structure; state leaves are dicts
+        # aligned one-to-one, so unpack the resulting tuples.
+        new_p = jax.tree_util.tree_map(
+            lambda t_: t_[0], flat, is_leaf=lambda t_: isinstance(t_, tuple))
+        new_s = jax.tree_util.tree_map(
+            lambda t_: t_[1], flat, is_leaf=lambda t_: isinstance(t_, tuple))
+        del is_state
+        return new_p, {"f": new_s}
+
+    return Optimizer("adafactor", init, update, abstract_init)
+
+
+# ---------------------------------------------------------------------------
+# Helpers
+# ---------------------------------------------------------------------------
+
+def chain_clip(opt: Optimizer) -> Optimizer:     # kept for API symmetry
+    return opt
+
+
+def abstract_opt_state(opt: Optimizer, abstract_params):
+    return opt.abstract_init(abstract_params)
+
+
+def opt_state_specs(opt: Optimizer, params_specs):
+    """Optimizer-state PartitionSpecs derived from the param specs."""
+    from jax.sharding import PartitionSpec as P
+    if opt.name == "sgd":
+        return {"mu": params_specs}
+    if opt.name == "adamw":
+        return {"m": params_specs, "v": params_specs}
+    # adafactor: factored moments drop the last / second-to-last dim.
+    def spec_for(s):
+        ent = tuple(s)
+        if len(ent) >= 2:
+            return {"vr": P(*ent[:-1]), "vc": P(*(ent[:-2] + (ent[-1],)))}
+        return {"v": P(*ent)}
+    return {"f": jax.tree_util.tree_map(
+        spec_for, params_specs, is_leaf=lambda x: isinstance(x, P))}
+
+
+def default_optimizer_for(arch_name: str, param_count: int, lr_fn=None):
+    """>=100B -> Adafactor; CNN (paper model) -> SGD(0.005, 0.9); else AdamW."""
+    from .schedules import constant
+    lr_fn = lr_fn or constant(1e-4)
+    if arch_name.startswith("resnet50_dcn"):
+        return sgd(constant(0.005), momentum=0.9, weight_decay=1e-4)
+    if param_count >= 90e9:
+        return adafactor(lr_fn)
+    return adamw(lr_fn)

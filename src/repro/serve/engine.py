@@ -1,0 +1,145 @@
+"""Slot-based continuous-batching serving engine.
+
+A fixed decode batch of ``slots`` runs every step; requests stream in
+and out of slots without stopping the batch (continuous batching à la
+Orca/vLLM, on a static-shape TPU-friendly layout):
+
+* admit: a free slot gets the new request — its prompt is prefilled
+  with batch=1 and the resulting caches are written into the slot's
+  batch row (static shapes; one ``dynamic_update_slice`` per cache leaf);
+* step: ONE jitted decode step advances all active slots (inactive
+  slots decode garbage that is masked out — the static-batch trade);
+* retire: slots finishing (EOS or max_tokens) free immediately.
+
+The decode step is the same ``decode_step`` the dry-run lowers, so what
+is served here is exactly what the multi-pod config compiles.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer import (ModelConfig, decode_step, init_cache,
+                                      prefill)
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray              # (S,) int32
+    max_new_tokens: int = 16
+    eos_id: int | None = None
+    # filled by the engine:
+    output: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    slots: int = 4
+    cache_len: int = 256
+
+
+class ServingEngine:
+    def __init__(self, params, cfg: ModelConfig, serve_cfg: ServeConfig):
+        self.params = params
+        self.cfg = cfg
+        self.scfg = serve_cfg
+        b, L = serve_cfg.slots, serve_cfg.cache_len
+        self.caches = init_cache(cfg, b, L)
+        self.pos = np.zeros((b,), np.int32)
+        self.last_tok = np.zeros((b,), np.int32)
+        self.active: list[Request | None] = [None] * b
+        self.queue: deque[Request] = deque()
+        self.completed: list[Request] = []
+
+        def _step(p, c, t, pos):
+            logits, new_c = decode_step(p, cfg, t, c, pos)
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32), new_c
+
+        self._decode = jax.jit(_step)
+        self._prefill = jax.jit(
+            lambda p, t: prefill(p, cfg, t, cache_len=L))
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _write_slot(self, slot: int, slot_caches: Any) -> None:
+        """Insert a batch=1 cache tree into batch row ``slot``.  The
+        batch axis is located structurally: it is the first axis whose
+        extent differs between the slot tree (1) and the engine tree
+        (slots) — robust across prefix leaves (batch leading) and
+        stacked period leaves (period axis leading)."""
+        flat_full, treedef = jax.tree_util.tree_flatten(self.caches)
+        flat_one = jax.tree_util.tree_flatten(slot_caches)[0]
+        out = []
+        for f, o in zip(flat_full, flat_one):
+            # align ranks: both trees have identical structure; batch is
+            # the first axis whose size differs (slots vs 1).
+            start = [0] * f.ndim
+            for ax in range(f.ndim):
+                if f.shape[ax] != o.shape[ax]:
+                    start[ax] = slot
+                    break
+            out.append(jax.lax.dynamic_update_slice(
+                f, o.astype(f.dtype), tuple(start)))
+        self.caches = jax.tree_util.tree_unflatten(treedef, out)
+
+    def _admit(self) -> None:
+        for slot in range(self.scfg.slots):
+            if self.active[slot] is not None or not self.queue:
+                continue
+            req = self.queue.popleft()
+            prompt = jnp.asarray(req.prompt, jnp.int32)[None]
+            logits, caches1 = self._prefill(self.params, prompt)
+            tok = int(jnp.argmax(logits[0], axis=-1))
+            req.output.append(tok)
+            self._write_slot(slot, caches1)
+            self.pos[slot] = len(req.prompt)
+            self.last_tok[slot] = tok
+            self.active[slot] = req
+
+    def _retire(self, slot: int) -> None:
+        req = self.active[slot]
+        req.done = True
+        self.completed.append(req)
+        self.active[slot] = None
+
+    def step(self) -> int:
+        """Admit + one decode step for all active slots.  Returns the
+        number of active requests after the step."""
+        self._admit()
+        if not any(r is not None for r in self.active):
+            return 0
+        toks, self.caches = self._decode(
+            self.params, self.caches,
+            jnp.asarray(self.last_tok), jnp.asarray(self.pos))
+        toks = np.asarray(toks)
+        for slot, req in enumerate(self.active):
+            if req is None:
+                continue
+            tok = int(toks[slot])
+            req.output.append(tok)
+            self.pos[slot] += 1
+            self.last_tok[slot] = tok
+            hit_eos = req.eos_id is not None and tok == req.eos_id
+            full = self.pos[slot] + 1 >= self.scfg.cache_len
+            if len(req.output) >= req.max_new_tokens or hit_eos or full:
+                self._retire(slot)
+        return sum(r is not None for r in self.active)
+
+    def run_until_drained(self, max_steps: int = 10_000) -> list[Request]:
+        steps = 0
+        while (self.queue or any(r is not None for r in self.active)) \
+                and steps < max_steps:
+            self.step()
+            steps += 1
+        return self.completed

@@ -1,0 +1,9 @@
+import os
+
+# Tests must see the plain host device(s); the 512-device override is
+# strictly dryrun.py's (set there before any jax import).
+os.environ.pop("XLA_FLAGS", None)
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,98 @@
+"""Checkpointing: bit-exact roundtrip, atomicity, keep-k, async, elastic."""
+import json
+import os
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (CheckpointManager, latest_step,
+                              restore_checkpoint, save_checkpoint)
+
+
+def _tree(key):
+    k1, k2 = jax.random.split(key)
+    return {"a": jax.random.normal(k1, (8, 16)),
+            "b": {"c": jnp.arange(5, dtype=jnp.int32),
+                  "d": jax.random.normal(k2, (3,)).astype(jnp.bfloat16)}}
+
+
+def test_roundtrip_bit_exact(tmp_path):
+    tree = _tree(jax.random.PRNGKey(0))
+    save_checkpoint(tmp_path, 7, tree)
+    like = jax.tree_util.tree_map(jnp.zeros_like, tree)
+    restored, step = restore_checkpoint(tmp_path, like)
+    assert step == 7
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(restored)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_keep_k_gc(tmp_path):
+    tree = _tree(jax.random.PRNGKey(1))
+    for s in range(6):
+        save_checkpoint(tmp_path, s, tree, keep=2)
+    names = sorted(p.name for p in tmp_path.iterdir())
+    assert names == ["step_00000004", "step_00000005"]
+
+
+def test_latest_ignores_partial(tmp_path):
+    tree = _tree(jax.random.PRNGKey(2))
+    save_checkpoint(tmp_path, 3, tree)
+    # simulate a crash mid-write: tmp dir + incomplete final dir
+    (tmp_path / "step_00000009.tmp").mkdir()
+    (tmp_path / "step_00000010").mkdir()   # no manifest -> incomplete
+    assert latest_step(tmp_path) == 3
+
+
+def test_async_manager_and_wait(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=3, async_write=True)
+    tree = _tree(jax.random.PRNGKey(3))
+    mgr.save(11, tree)
+    mgr.wait()
+    assert mgr.latest_step() == 11
+    restored, step = mgr.restore(jax.tree_util.tree_map(
+        jnp.zeros_like, tree))
+    np.testing.assert_array_equal(restored["a"], tree["a"])
+
+
+def test_elastic_restore_with_sharding(tmp_path):
+    """Restore with explicit shardings (the elastic path: the restart
+    mesh may differ from the save mesh)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mesh = jax.make_mesh((1,), ("data",))
+    tree = {"w": jnp.arange(16, dtype=jnp.float32).reshape(4, 4)}
+    save_checkpoint(tmp_path, 1, tree)
+    sh = {"w": NamedSharding(mesh, P("data", None))}
+    restored, _ = restore_checkpoint(tmp_path, tree, shardings=sh)
+    assert restored["w"].sharding == sh["w"]
+    np.testing.assert_array_equal(restored["w"], tree["w"])
+
+
+def test_save_is_atomic_under_failure(tmp_path, monkeypatch):
+    """If serialization dies mid-way, the previous checkpoint survives
+    and the partial write is invisible to latest_step."""
+    tree = _tree(jax.random.PRNGKey(4))
+    save_checkpoint(tmp_path, 1, tree)
+
+    calls = {"n": 0}
+    orig = np.save
+
+    def failing_save(path, arr):
+        calls["n"] += 1
+        if calls["n"] > 2:
+            raise IOError("disk died")
+        orig(path, arr)
+
+    monkeypatch.setattr(np, "save", failing_save)
+    with pytest.raises(IOError):
+        save_checkpoint(tmp_path, 2, tree)
+    monkeypatch.setattr(np, "save", orig)
+    assert latest_step(tmp_path) == 1
+    restored, _ = restore_checkpoint(tmp_path, jax.tree_util.tree_map(
+        jnp.zeros_like, tree))
+    np.testing.assert_array_equal(restored["a"], tree["a"])

@@ -1,0 +1,116 @@
+"""DCL semantics (paper Eq. 1-4) — unit + hypothesis property tests."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.deform_conv import (DCLConfig, conv2d, dcl_forward,
+                                    init_dcl_params, offset_abs_max,
+                                    receptive_field, sample_patches)
+
+
+def _x(key, n=1, h=10, w=10, c=4):
+    return jax.random.normal(key, (n, h, w, c), jnp.float32)
+
+
+def test_zero_offsets_equal_standard_conv():
+    """Property: with o == 0, the DCL *is* a standard convolution."""
+    key = jax.random.PRNGKey(0)
+    cfg = DCLConfig(in_channels=4, out_channels=8)
+    params = init_dcl_params(key, cfg)
+    x = _x(jax.random.fold_in(key, 1))
+    # w_offset init is zeros => offsets are exactly zero at init
+    y, stats = dcl_forward(params, x, cfg)
+    y_ref = conv2d(x, params["w_deform"], padding=cfg.pad) \
+        + params["b_deform"]
+    np.testing.assert_allclose(y, y_ref, rtol=1e-4, atol=1e-4)
+    assert float(stats["o_max"]) == 0.0
+
+
+def test_integer_offsets_equal_shifted_gather():
+    """Integer offsets sample exact pixels (bilinear degenerates)."""
+    key = jax.random.PRNGKey(1)
+    cfg = DCLConfig(in_channels=2, out_channels=2)
+    x = _x(key, h=8, w=8, c=2)
+    # constant offset (dy, dx) = (1, -1) for every tap
+    offs = jnp.zeros((1, 8, 8, 9, 2)).at[..., 0].set(1.0).at[..., 1].set(-1.0)
+    got = sample_patches(x, offs, cfg)
+    zero = jnp.zeros_like(offs)
+    base = sample_patches(x, zero, cfg)
+    # got[n, i, j] should equal base[n, i+1, j-1] where in range
+    np.testing.assert_allclose(got[0, 2:-2, 2:-2], base[0, 3:-1, 1:-3],
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_outside_image_is_zero():
+    cfg = DCLConfig(in_channels=1, out_channels=1)
+    x = jnp.ones((1, 4, 4, 1))
+    offs = jnp.full((1, 4, 4, 9, 2), 100.0)    # way outside
+    patches = sample_patches(x, offs, cfg)
+    np.testing.assert_allclose(patches, 0.0)
+
+
+def test_clamping_bounds_receptive_field():
+    """offset_bound clamps what the layer actually samples (Eq. 4)."""
+    key = jax.random.PRNGKey(2)
+    cfg = DCLConfig(in_channels=2, out_channels=2, offset_bound=1.0)
+    params = init_dcl_params(key, cfg)
+    # force huge offsets through the offset conv bias
+    params["b_offset"] = jnp.full_like(params["b_offset"], 50.0)
+    x = _x(key, c=2)
+    y_bounded, stats = dcl_forward(params, x, cfg)
+    # reference: clamp offsets manually to [-1, 1] then sample
+    o = conv2d(x, params["w_offset"], padding=cfg.pad) + params["b_offset"]
+    offs = jnp.clip(o.reshape(1, 10, 10, 9, 2), -1.0, 1.0)
+    patches = sample_patches(x, offs, cfg)
+    w = params["w_deform"].reshape(9, 2, 2)
+    y_ref = jnp.einsum("nhwkc,kcm->nhwm", patches, w) + params["b_deform"]
+    np.testing.assert_allclose(y_bounded, y_ref, rtol=1e-4, atol=1e-4)
+    # Eq. 3 stat reports the UNCLAMPED max (what the Eq. 5 loss sees)
+    assert float(stats["o_max"]) == 50.0
+
+
+@given(k=st.sampled_from([1, 3, 5, 7]),
+       o=st.floats(min_value=0.0, max_value=64.0,
+                   allow_nan=False, allow_infinity=False))
+@settings(max_examples=50, deadline=None)
+def test_rf_algebra(k, o):
+    """Eq. 4: RF = K + 2*ceil(o_max); monotone, >= K, odd-preserving."""
+    rf = receptive_field(k, o)
+    assert rf == k + 2 * math.ceil(o)
+    assert rf >= k
+    assert (rf - k) % 2 == 0
+    assert receptive_field(k, o + 1.0) >= rf
+
+
+@given(st.lists(st.floats(min_value=-8, max_value=8), min_size=1,
+                max_size=16))
+@settings(max_examples=50, deadline=None)
+def test_offset_abs_max(vals):
+    arr = jnp.asarray(vals, jnp.float32)
+    assert float(offset_abs_max(arr)) == pytest.approx(
+        max(abs(v) for v in vals), rel=1e-6, abs=1e-6)
+
+
+def test_gradients_flow_through_offsets():
+    """Bilinear sampling must be differentiable w.r.t. offsets — that is
+    what makes the Eq. 5 regularizer trainable."""
+    key = jax.random.PRNGKey(3)
+    cfg = DCLConfig(in_channels=2, out_channels=2)
+    params = init_dcl_params(key, cfg)
+    # non-degenerate offsets (grad of floor is zero at integers)
+    params["b_offset"] = jnp.full_like(params["b_offset"], 0.3)
+    x = _x(key, c=2)
+
+    def loss(p):
+        y, stats = dcl_forward(p, x, cfg)
+        return jnp.sum(jnp.square(y)) + stats["o_max"]
+
+    g = jax.grad(loss)(params)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(v))
+                         for v in jax.tree_util.tree_leaves(g)))
+    assert jnp.isfinite(gnorm) and gnorm > 0
+    assert float(jnp.max(jnp.abs(g["w_offset"]))) > 0

@@ -1,0 +1,39 @@
+"""Elastic scaling: checkpoint on a 4-device mesh, resume on 8 devices.
+
+Each phase needs its own process (device count locks at jax init), so
+the test drives ``examples/elastic_restart.py`` twice.  Phase 2 itself
+asserts that the elastically-resumed parameters match a straight run.
+"""
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def _run(phase: int, devices: int, ckpt: str):
+    return subprocess.run(
+        [sys.executable, str(ROOT / "examples" / "elastic_restart.py"),
+         "--phase", str(phase), "--ckpt", ckpt],
+        capture_output=True, text=True, timeout=600,
+        env={"PYTHONPATH": str(ROOT / "src"), "PATH": "/usr/bin:/bin",
+             "HOME": "/tmp",
+             "XLA_FLAGS":
+                 f"--xla_force_host_platform_device_count={devices}"},
+    )
+
+
+@pytest.mark.slow
+def test_elastic_mesh_change(tmp_path):
+    ckpt = str(tmp_path / "elastic")
+    p1 = _run(1, 4, ckpt)
+    assert p1.returncode == 0, p1.stderr[-3000:]
+    assert "mesh {'data': 2, 'model': 2}" in p1.stdout
+
+    p2 = _run(2, 8, ckpt)
+    assert p2.returncode == 0, p2.stderr[-3000:]
+    assert "mesh {'data': 4, 'model': 2}" in p2.stdout
+    assert "resumed at step 10" in p2.stdout
+    assert "elastic resume == straight run: OK" in p2.stdout

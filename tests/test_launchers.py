@@ -1,0 +1,47 @@
+"""CLI launchers: train (with resume) and serve, end to end."""
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+ENV = {"PYTHONPATH": str(ROOT / "src"), "PATH": "/usr/bin:/bin",
+       "HOME": "/tmp"}
+
+
+def _run(args, timeout=420):
+    return subprocess.run([sys.executable, "-m", *args],
+                          capture_output=True, text=True, timeout=timeout,
+                          env=ENV, cwd=ROOT)
+
+
+@pytest.mark.slow
+def test_train_launcher_and_resume(tmp_path):
+    ckpt = str(tmp_path / "ck")
+    p = _run(["repro.launch.train", "--arch", "tinyllama-1.1b",
+              "--steps", "12", "--ckpt-every", "6", "--ckpt", ckpt])
+    assert p.returncode == 0, p.stderr[-2000:]
+    assert "'step': 10" in p.stdout
+    # resume picks up from the checkpoint
+    p2 = _run(["repro.launch.train", "--arch", "tinyllama-1.1b",
+               "--steps", "14", "--ckpt-every", "6", "--ckpt", ckpt])
+    assert p2.returncode == 0, p2.stderr[-2000:]
+    assert "resumed from step 12" in p2.stdout
+
+
+@pytest.mark.slow
+def test_serve_launcher():
+    p = _run(["repro.launch.serve", "--arch", "tinyllama-1.1b",
+              "--requests", "4", "--max-new-tokens", "4"])
+    assert p.returncode == 0, p.stderr[-2000:]
+    assert "served 4 requests / 16 tokens" in p.stdout
+
+
+@pytest.mark.slow
+def test_train_launcher_dcn_with_lambda(tmp_path):
+    p = _run(["repro.launch.train", "--arch", "resnet50_dcn_bounded",
+              "--steps", "4", "--ckpt", str(tmp_path / "ck2"),
+              "--global-batch", "2", "--lam", "0.1"])
+    assert p.returncode == 0, p.stderr[-2000:]
+    assert "'step': 0" in p.stdout

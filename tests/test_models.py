@@ -1,0 +1,173 @@
+"""Model-core invariants: attention paths, decode==train, mixers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import layers as L
+from repro.models.transformer import (ModelConfig, decode_step, forward,
+                                      init_params, prefill)
+from repro.models.rwkv6 import RWKVConfig, wkv_chunked, wkv_step
+from repro.models.rglru import (RGLRUConfig, rg_lru_scan, rg_lru_step,
+                                rglru_block_apply, rglru_block_step)
+from repro.models.moe import MoEConfig
+
+V = 64
+
+
+def _toks(key, b, s):
+    return jax.random.randint(key, (b, s), 0, V)
+
+
+# ---------------------------------------------------------------------------
+# Attention implementations agree
+# ---------------------------------------------------------------------------
+
+@given(s=st.sampled_from([17, 32, 50, 64]),
+       window=st.sampled_from([None, 8, 16]),
+       softcap=st.sampled_from([None, 5.0]))
+@settings(max_examples=20, deadline=None)
+def test_attention_impls_agree(s, window, softcap):
+    key = jax.random.PRNGKey(s)
+    B, KV, G, Dh = 2, 2, 2, 8
+    q = jax.random.normal(key, (B, s, KV, G, Dh))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, s, KV, Dh))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, s, KV, Dh))
+    pos = jnp.broadcast_to(jnp.arange(s), (B, s))
+    dense = L.attention(q, k, v, pos, pos, window=window, softcap=softcap,
+                        impl="dense")
+    chunk = L.attention(q, k, v, pos, pos, window=window, softcap=softcap,
+                        impl="chunked")
+    np.testing.assert_allclose(dense, chunk, rtol=3e-5, atol=3e-5)
+    if window is not None:
+        wb = L.attention(q, k, v, pos, pos, window=window, softcap=softcap,
+                         impl="window")
+        np.testing.assert_allclose(dense, wb, rtol=3e-5, atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode == train for every mixer family
+# ---------------------------------------------------------------------------
+
+def _configs():
+    yield ModelConfig(name="dense", n_layers=4, d_model=32, n_heads=4,
+                      kv_heads=2, d_ff=64, vocab=V, dtype=jnp.float32)
+    yield ModelConfig(name="win", n_layers=2, d_model=32, n_heads=4,
+                      kv_heads=2, d_ff=64, vocab=V, dtype=jnp.float32,
+                      window=8)
+    yield ModelConfig(name="par", n_layers=2, d_model=32, n_heads=4,
+                      kv_heads=2, d_ff=64, vocab=V, dtype=jnp.float32,
+                      parallel_block=True, norm="layer",
+                      logit_scale=0.0625)
+    yield ModelConfig(name="rwkv", n_layers=3, d_model=32, n_heads=2,
+                      kv_heads=2, d_ff=64, vocab=V, dtype=jnp.float32,
+                      pattern=("rwkv6",), use_rope=False,
+                      rwkv=RWKVConfig(d_model=32, d_ff=64, head_dim=16,
+                                      decay_lora_rank=8))
+    yield ModelConfig(name="hyb", n_layers=5, d_model=32, n_heads=4,
+                      kv_heads=1, d_ff=64, vocab=V, dtype=jnp.float32,
+                      pattern=("rglru", "rglru", "attn"), window=8,
+                      rglru=RGLRUConfig(d_model=32, d_rnn=32))
+    # capacity_factor high enough that the train pass drops nothing —
+    # decode uses drop-free capacity, so they only agree drop-free.
+    yield ModelConfig(name="moe", n_layers=2, d_model=32, n_heads=4,
+                      kv_heads=4, d_ff=64, vocab=V, dtype=jnp.float32,
+                      moe=MoEConfig(d_model=32, d_ff=64, num_experts=4,
+                                    top_k=2, capacity_factor=8.0))
+
+
+@pytest.mark.parametrize("cfg", list(_configs()), ids=lambda c: c.name)
+def test_decode_matches_train(cfg):
+    key = jax.random.PRNGKey(0)
+    B, S = 2, 12
+    toks = _toks(key, B, S + 3)
+    params = init_params(key, cfg)
+    full, _, _ = forward(params, cfg, tokens=toks, mode="train")
+    cache_len = 8 if cfg.window else 32
+    lg, caches = prefill(params, cfg, toks[:, :S], cache_len=cache_len)
+    np.testing.assert_allclose(lg, full[:, S - 1], rtol=3e-3, atol=3e-3)
+    for i in range(3):
+        lg, caches = decode_step(params, cfg, toks[:, S + i], caches,
+                                 jnp.full((B,), S + i, jnp.int32))
+        np.testing.assert_allclose(lg, full[:, S + i], rtol=3e-3, atol=3e-3)
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 chunked scan == recurrence (hypothesis)
+# ---------------------------------------------------------------------------
+
+@given(s=st.sampled_from([32, 64, 96]), seed=st.integers(0, 2**16))
+@settings(max_examples=12, deadline=None)
+def test_wkv_chunked_equals_recurrence(s, seed):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 5)
+    B, H, D = 1, 2, 8
+    r, k, v = (jax.random.normal(ks[i], (B, s, H, D)) for i in range(3))
+    lw = jnp.clip(-jnp.exp(jax.random.normal(ks[3], (B, s, H, D)) * 0.5),
+                  -2.5, -1e-6)
+    u = jax.random.normal(ks[4], (H, D)) * 0.1
+    st_ = jnp.zeros((B, H, D, D))
+    outs = []
+    for t in range(s):
+        o, st_ = wkv_step(r[:, t], k[:, t], v[:, t], lw[:, t], u, st_)
+        outs.append(o)
+    naive = jnp.stack(outs, 1)
+    got, S_fin = wkv_chunked(r, k, v, lw, u, chunk=32)
+    np.testing.assert_allclose(got, naive, rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(S_fin, st_, rtol=5e-4, atol=5e-4)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU associative scan == step recurrence
+# ---------------------------------------------------------------------------
+
+def test_rglru_scan_equals_step():
+    cfg = RGLRUConfig(d_model=16, d_rnn=16)
+    from repro.models.layers import init_tree
+    from repro.models.rglru import rglru_block_def
+    params = init_tree(jax.random.PRNGKey(0), rglru_block_def(cfg))
+    key = jax.random.PRNGKey(1)
+    B, S = 2, 20
+    x = jax.random.normal(key, (B, S, 16))
+    y_scan, state = rglru_block_apply(params, x, cfg)
+    # step-by-step from fresh state
+    st_ = {"h": jnp.zeros((B, 16)),
+           "conv": jnp.zeros((B, 3, 16))}
+    outs = []
+    for t in range(S):
+        o, st_ = rglru_block_step(params, x[:, t], cfg, state=st_)
+        outs.append(o)
+    y_step = jnp.stack(outs, 1)
+    np.testing.assert_allclose(y_scan, y_step, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(state["h"], st_["h"], rtol=2e-4, atol=2e-4)
+
+
+def test_rglru_decay_bounded():
+    """RG-LRU is contractive: |a_t| <= 1 always (stability at 500k)."""
+    cfg = RGLRUConfig(d_model=8, d_rnn=8)
+    from repro.models.layers import init_tree
+    from repro.models.rglru import rglru_block_def
+    params = init_tree(jax.random.PRNGKey(0), rglru_block_def(cfg))
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 512, 8)) * 10
+    y, _ = rg_lru_scan(params, x)
+    assert bool(jnp.all(jnp.isfinite(y)))
+
+
+# ---------------------------------------------------------------------------
+# Chunked CE == dense CE
+# ---------------------------------------------------------------------------
+
+@given(s=st.sampled_from([7, 16, 33]), tied=st.booleans())
+@settings(max_examples=10, deadline=None)
+def test_chunked_ce(s, tied):
+    key = jax.random.PRNGKey(s)
+    B, D, Vv = 2, 8, 32
+    x = jax.random.normal(key, (B, s, D))
+    w = jax.random.normal(jax.random.fold_in(key, 1),
+                          (Vv, D) if tied else (D, Vv))
+    t = jax.random.randint(jax.random.fold_in(key, 2), (B, s), 0, Vv)
+    got = L.chunked_cross_entropy(x, w, t, tied=tied, chunk=8)
+    logits = jnp.einsum("bsd,vd->bsv" if tied else "bsd,dv->bsv", x, w)
+    want = L.cross_entropy(logits, t)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)

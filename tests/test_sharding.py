@@ -1,0 +1,106 @@
+"""Logical-axis sharding rules: divisibility fallbacks, spec/param
+structure agreement — the invariants behind the 40-cell dry-run."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import (DEFAULT_RULES, logical_spec,
+                                        use_rules)
+from repro.models import registry as reg
+from repro.models.registry import reduced_config
+from repro.models.resnet_dcn import ResNetDCNConfig
+
+
+class FakeMesh:
+    """Mesh stand-in exposing axis_names/devices.shape only."""
+    def __init__(self, shape, names):
+        self.axis_names = names
+        import numpy as np
+        self.devices = np.zeros(shape)
+
+
+MESH1 = FakeMesh((16, 16), ("data", "model"))
+MESH2 = FakeMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def test_divisible_dims_shard():
+    s = logical_spec((256, 22528), ("embed", "ff"), mesh=MESH1)
+    assert s == P("data", "model")
+
+
+def test_non_divisible_dims_stay_replicated():
+    # 24 heads don't divide the 16-way model axis (musicgen case)
+    s = logical_spec((2048, 24, 64), ("embed", "heads", None), mesh=MESH1)
+    assert s == P("data", None, None)
+
+
+def test_partial_composite_axes():
+    # batch -> ('pod', 'data'): single-pod mesh has no 'pod' axis
+    s1 = logical_spec((256, 4096), ("batch", "seq"), mesh=MESH1)
+    assert s1 == P("data", None)
+    s2 = logical_spec((256, 4096), ("batch", "seq"), mesh=MESH2)
+    assert s2 == P(("pod", "data"), None)
+    # batch=2 divides pod(2) but not data(16): only pod used
+    s3 = logical_spec((2, 4096), ("batch", "seq"), mesh=MESH2)
+    assert s3 == P("pod", None)
+
+
+def test_mesh_axis_used_once_per_spec():
+    # both dims map to 'model': the second one must stay unsharded
+    s = logical_spec((64, 32), ("heads", "kv"), mesh=MESH1)
+    assert s == P("model", None)
+
+
+def test_no_mesh_is_fully_replicated():
+    s = logical_spec((8, 8), ("embed", "ff"), mesh=None)
+    assert s == P(None, None)
+
+
+@pytest.mark.parametrize("name", reg.names())
+def test_param_specs_match_param_structure(name):
+    """Every param leaf must have exactly one PartitionSpec of the same
+    tree path and rank — for ALL architectures (full-size configs; no
+    allocation: abstract trees only)."""
+    arch = reg.get(name)
+    with use_rules(rules=DEFAULT_RULES, mesh=MESH2):
+        if isinstance(arch.config, ResNetDCNConfig):
+            from repro.models import resnet_dcn as R
+            from repro.models.layers import abstract_tree, spec_tree
+            defs = R.model_def(arch.config)
+            absd, specs = abstract_tree(defs), spec_tree(defs)
+        else:
+            from repro.models.transformer import abstract_params, param_specs
+            absd = abstract_params(arch.config)
+            specs = param_specs(arch.config)
+    flat_a, tda = jax.tree_util.tree_flatten(absd)
+    flat_s, tds = jax.tree_util.tree_flatten(
+        specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_a) == len(flat_s)
+    for a, s in zip(flat_a, flat_s):
+        assert len(s) <= len(a.shape), (a.shape, s)
+        # every named axis divides its dim
+        sizes = dict(zip(MESH2.axis_names, MESH2.devices.shape))
+        for dim, entry in zip(a.shape, tuple(s) + (None,) * 8):
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            n = 1
+            for ax in axes:
+                n *= sizes[ax]
+            assert dim % n == 0, (name, a.shape, s)
+
+
+@pytest.mark.parametrize("name", reg.names())
+def test_cache_specs_match_cache_structure(name):
+    arch = reg.get(name)
+    if isinstance(arch.config, ResNetDCNConfig):
+        pytest.skip("CNN has no decode cache")
+    from repro.models.transformer import abstract_cache, cache_specs
+    with use_rules(rules=DEFAULT_RULES, mesh=MESH2):
+        absd = abstract_cache(arch.config, 128, 1024)
+        specs = cache_specs(arch.config, 128, 1024)
+    na = len(jax.tree_util.tree_leaves(absd))
+    ns = len(jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, P)))
+    assert na == ns

@@ -1,0 +1,69 @@
+"""Eq. 6/7 buffer algebra + the VMEM-aware tile chooser."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import tiling as T
+
+
+def test_eq6_paper_point():
+    """Paper Fig. 3: ~13.8 MB input buffer at lambda=0 (RF 79, their
+    tiling T_W=8, T_N=512, fp32)."""
+    size = T.input_buffer_size(79, 1, 8, 512, bytes_per_elem=4)
+    assert size == 79 * (8 + 79 - 1) * 512 * 4
+    assert 13.0e6 < size < 14.5e6
+
+
+def test_eq7_output_buffer():
+    assert T.output_buffer_size(8, 512, 3, bytes_per_elem=4) \
+        == 8 * 512 * 2 * 9 * 4
+
+
+@given(rf=st.integers(3, 81), s=st.sampled_from([1, 2]),
+       tw=st.sampled_from([4, 8, 16]), tn=st.sampled_from([64, 256, 512]))
+@settings(max_examples=60, deadline=None)
+def test_eq6_monotone(rf, s, tw, tn):
+    base = T.input_buffer_size(rf, s, tw, tn)
+    assert T.input_buffer_size(rf + 2, s, tw, tn) > base
+    assert T.input_buffer_size(rf, s, tw + 1, tn) > base
+    assert T.input_buffer_size(rf, s, tw, tn + 1) > base
+
+
+def test_chooser_fits_vmem_and_beats_paper_point():
+    shape = T.LayerShape(h=56, w=56, c_in=512, c_out=512, offset_bound=2.0)
+    choice = T.choose_tiles(shape)
+    assert choice.vmem_bytes <= T.V5E_VMEM_BYTES
+    paper = T.evaluate_tile(shape, T.PAPER_TILES)
+    # VMEM is ~100x BRAM: the chooser must find a much higher-CTC point
+    assert choice.ctc > paper.ctc * 2
+
+
+def test_chooser_rejects_unbounded_rf():
+    shape = T.LayerShape(h=56, w=56, c_in=512, c_out=512,
+                         offset_bound=4096.0)
+    with pytest.raises(ValueError):
+        T.choose_tiles(shape, vmem_budget=1 << 20)
+
+
+def test_fused_beats_two_stage_ctc():
+    """The beyond-paper fusion removes the Eq. 7 patch round-trip, so its
+    CTC must be strictly higher for every tile point."""
+    shape = T.LayerShape(h=56, w=56, c_in=256, c_out=256, offset_bound=2.0)
+    for t in [T.PAPER_TILES, T.TileConfig(4, 16, 256, 128)]:
+        fused = T.evaluate_tile(shape, t, fused=True)
+        two = T.evaluate_tile(shape, t, fused=False)
+        assert fused.ctc > two.ctc
+
+
+@given(b=st.floats(0.5, 16.0))
+@settings(max_examples=30, deadline=None)
+def test_inverse_bound(b):
+    """max_offset_bound_fitting inverts Eq. 6 w.r.t. the bound."""
+    k, s, tw, tn = 3, 1, 8, 256
+    budget = T.input_buffer_size(T.receptive_field(k, b), s, tw, tn,
+                                 bytes_per_elem=2)
+    got = T.max_offset_bound_fitting(k, s, tw, tn, vmem_budget=budget)
+    # the returned bound must fit, and bound+1 must not
+    assert T.input_buffer_size(T.receptive_field(k, got), s, tw, tn,
+                               bytes_per_elem=2) <= budget
+    assert T.input_buffer_size(T.receptive_field(k, got + 1), s, tw, tn,
+                               bytes_per_elem=2) > budget
