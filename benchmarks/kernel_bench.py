@@ -1,7 +1,10 @@
 """Kernel micro-benchmarks (CPU wall-time is NOT the target metric —
 interpret-mode timings validate the algorithmic scaling only; TPU perf
 is covered by the §Roofline dry-run).  Also reports the analytic VMEM
-footprints / CTC from the Eq. 6/7 tile model for the shipped kernels."""
+footprints / CTC from the Eq. 6/7 tile model and the modeled HBM bytes
+of the two DCL dataflows (materialized-band vs zero-copy) so the perf
+trajectory is tracked across PRs (see ``run.py`` / BENCH_kernels.json).
+"""
 from __future__ import annotations
 
 import time
@@ -9,7 +12,9 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core.tiling import LayerShape, choose_tiles, evaluate_tile, PAPER_TILES
+from repro.core.perf_model import dataflow_traffic_report
+from repro.core.tiling import (LayerShape, PAPER_TILES, choose_kernel_tiles,
+                               choose_tiles, evaluate_tile)
 from repro.kernels import ops, ref
 
 
@@ -22,26 +27,63 @@ def _time(fn, *args, reps=3):
     return (time.time() - t0) / reps * 1e6
 
 
-def run() -> list[str]:
-    rows = []
+def records(*, smoke: bool = False) -> list[dict]:
+    """Structured per-kernel records: wall time (interpret mode) and the
+    modeled HBM traffic of both DCL dataflows for the measured shape."""
+    out: list[dict] = []
     key = jax.random.PRNGKey(0)
-    # deformable conv: bounded Pallas path vs unbounded XLA-gather path
-    for (h, w, c, m) in [(32, 32, 64, 64), (32, 32, 128, 128)]:
+    shapes = [(16, 16, 32, 32)] if smoke else \
+        [(32, 32, 64, 64), (32, 32, 128, 128)]
+    for (h, w, c, m) in shapes:
         x = jax.random.normal(key, (1, h, w, c), jnp.float32)
         offs = jax.random.normal(jax.random.fold_in(key, 1),
                                  (1, h, w, 18), jnp.float32) * 2
         wgt = jax.random.normal(jax.random.fold_in(key, 2),
                                 (9, c, m), jnp.float32) * 0.1
-        t_bounded = _time(lambda a, b, ww: ops.deform_conv(
-            a, b, ww, offset_bound=2.0, tile_h=8), x, offs, wgt)
+        t_zero = _time(lambda a, b, ww: ops.deform_conv(
+            a, b, ww, offset_bound=2.0, tile_h=8,
+            dataflow="zero_copy"), x, offs, wgt)
+        t_banded = _time(lambda a, b, ww: ops.deform_conv(
+            a, b, ww, offset_bound=2.0, tile_h=8,
+            dataflow="banded"), x, offs, wgt)
         t_unbounded = _time(lambda a, b, ww: ops.deform_conv(
             a, b, ww), x, offs, wgt)
-        rows.append(f"kernel/deform_conv_fused_{c}c,{t_bounded:.0f},"
-                    f"interpret-mode; unbounded_xla={t_unbounded:.0f}us")
+        rep = dataflow_traffic_report(h=h, w=w, c=c, m=m, batch=1,
+                                      tile_h=8, offset_bound=2.0)
+        out.append({
+            "name": f"deform_conv_fused_{c}c",
+            "us_zero_copy": t_zero,
+            "us_banded": t_banded,
+            "us_unbounded_xla": t_unbounded,
+            "hbm_bytes_zero_copy": rep["zero_copy_bytes"],
+            "hbm_bytes_materialized_band": rep["materialized_band_bytes"],
+            "hbm_traffic_ratio": rep["ratio"],
+            "tiles": str(rep["tiles"]),
+        })
+    return out
+
+
+def run(*, smoke: bool = False,
+        kernel_records: list[dict] | None = None) -> list[str]:
+    rows = []
+    key = jax.random.PRNGKey(0)
+    # deformable conv: zero-copy vs banded vs unbounded XLA-gather path
+    # (pass kernel_records to avoid re-timing — run.py shares one
+    # records() call between the CSV rows and BENCH_kernels.json)
+    for r in kernel_records if kernel_records is not None \
+            else records(smoke=smoke):
+        rows.append(
+            f"kernel/{r['name']},{r['us_zero_copy']:.0f},"
+            f"interpret-mode; banded={r['us_banded']:.0f}us;"
+            f"unbounded_xla={r['us_unbounded_xla']:.0f}us;"
+            f"hbm_model_zero_copy={r['hbm_bytes_zero_copy'] / 1e6:.2f}MB;"
+            f"hbm_model_banded="
+            f"{r['hbm_bytes_materialized_band'] / 1e6:.2f}MB;"
+            f"traffic_ratio={r['hbm_traffic_ratio']:.2f}x")
     # flash attention kernel (interpret) vs dense reference
     from repro.kernels.flash_attention import flash_attention
     from repro.kernels.ref import flash_attention_ref
-    for s in (128, 256):
+    for s in (128,) if smoke else (128, 256):
         q = jax.random.normal(key, (1, s, 2, 2, 32), jnp.float32)
         kk = jax.random.normal(jax.random.fold_in(key, 4), (1, s, 2, 32),
                                jnp.float32)
@@ -57,22 +99,25 @@ def run() -> list[str]:
                     f"dense_ref={t_dn:.0f}us;score_traffic_saved="
                     f"{score_mb:.1f}MB")
     # matmul kernel
-    for mkn in [(256, 256, 256), (512, 512, 512)]:
+    for mkn in [(256, 256, 256)] if smoke else \
+            [(256, 256, 256), (512, 512, 512)]:
         a = jax.random.normal(key, mkn[:2], jnp.float32)
         b = jax.random.normal(key, mkn[1:], jnp.float32)
         t = _time(lambda x_, y_: ops.matmul(x_, y_), a, b)
         t_ref = _time(lambda x_, y_: ref.matmul_ref(x_, y_), a, b)
         rows.append(f"kernel/matmul_{mkn[0]},{t:.0f},xla_ref={t_ref:.0f}us")
     # tile model summary for the DCL hot spots (ResNet-50 stages)
-    for n in (128, 256, 512):
+    for n in (128,) if smoke else (128, 256, 512):
         s = LayerShape(h=56, w=56, c_in=n, c_out=n, offset_bound=2.0)
         c_ = choose_tiles(s)
         p = evaluate_tile(s, PAPER_TILES)
+        kt = choose_kernel_tiles(s)
         rows.append(
             f"kernel/tile_model_N={n},0,"
             f"chosen={c_.tile};ctc={c_.ctc:.1f};vmem={c_.vmem_bytes >> 20}MiB;"
             f"attainable={c_.attainable_flops / 1e12:.0f}TF;"
-            f"paper_tile_ctc={p.ctc:.1f}")
+            f"paper_tile_ctc={p.ctc:.1f};"
+            f"kernel_tiles=({kt.tile_h},{kt.tile_w},{kt.tile_c},{kt.tile_m})")
     return rows
 
 

@@ -9,23 +9,62 @@ Prints ``name,us_per_call,derived`` CSV rows:
                           analogue: on TPU the "resources" are VMEM/CTC)
   * roofline            — summary of the dry-run §Roofline table if the
                           dry-run artifacts exist (run dryrun.py first)
+
+Also writes ``BENCH_kernels.json`` next to this file: machine-readable
+per-kernel wall time + modeled HBM bytes under both DCL dataflows, so
+the perf trajectory is tracked across PRs.
+
+``--smoke`` runs only the kernel section at reduced shapes (< 1 min);
+``--out DIR`` redirects the JSON artifact.
 """
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import sys
 import traceback
 
 
-def main() -> None:
+def write_kernel_json(path: str, recs: list[dict], *, smoke: bool) -> None:
+    payload = {
+        "smoke": smoke,
+        "note": "wall times are interpret-mode (CPU) — scaling only; "
+                "hbm_bytes_* are the analytic dataflow model",
+        "kernels": recs,
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    print(f"bench/json,0,wrote {path} ({len(recs)} kernels)")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="kernel section only, reduced shapes (< 1 min)")
+    ap.add_argument("--out", default=os.path.dirname(os.path.abspath(__file__)),
+                    help="directory for BENCH_kernels.json")
+    args = ap.parse_args(argv)
+
     from benchmarks import (accelerator_speed, buffer_efficiency, energy,
                             kernel_bench, rf_regularizer)
-    sections = [
-        ("rf_regularizer", rf_regularizer.run),
-        ("buffer_efficiency", buffer_efficiency.run),
-        ("accelerator_speed", accelerator_speed.run),
-        ("energy", energy.run),
-        ("kernel", kernel_bench.run),
-    ]
+    # One records() call feeds both the CSV section and the JSON artifact.
+    kernel_recs: list[dict] = []
+
+    def kernel_section():
+        kernel_recs.extend(kernel_bench.records(smoke=args.smoke))
+        return kernel_bench.run(smoke=args.smoke, kernel_records=kernel_recs)
+
+    if args.smoke:
+        sections = [("kernel", kernel_section)]
+    else:
+        sections = [
+            ("rf_regularizer", rf_regularizer.run),
+            ("buffer_efficiency", buffer_efficiency.run),
+            ("accelerator_speed", accelerator_speed.run),
+            ("energy", energy.run),
+            ("kernel", kernel_section),
+        ]
     print("name,us_per_call,derived")
     failures = 0
     for name, fn in sections:
@@ -37,24 +76,36 @@ def main() -> None:
             print(f"{name},nan,ERROR")
             traceback.print_exc()
 
-    # roofline summary (optional: requires dry-run artifacts)
     try:
-        from repro.launch.roofline import load_all
-        rows = load_all("single")
-        ok = [r for r in rows if "error" not in r]
-        if ok:
-            worst = min(ok, key=lambda r: r["roofline_fraction"])
-            best = max(ok, key=lambda r: r["roofline_fraction"])
-            doms = {}
-            for r in ok:
-                doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
-            print(f"roofline/cells,0,n={len(ok)};dominant_counts={doms}")
-            print(f"roofline/worst,0,{worst['arch']}x{worst['shape']}="
-                  f"{worst['roofline_fraction']:.3f}")
-            print(f"roofline/best,0,{best['arch']}x{best['shape']}="
-                  f"{best['roofline_fraction']:.3f}")
+        if not kernel_recs:
+            kernel_recs = kernel_bench.records(smoke=args.smoke)
+        write_kernel_json(os.path.join(args.out, "BENCH_kernels.json"),
+                          kernel_recs, smoke=args.smoke)
     except Exception:  # noqa: BLE001
-        print("roofline/summary,nan,SKIPPED (run repro.launch.dryrun first)")
+        failures += 1
+        print("bench/json,nan,ERROR")
+        traceback.print_exc()
+
+    # roofline summary (optional: requires dry-run artifacts)
+    if not args.smoke:
+        try:
+            from repro.launch.roofline import load_all
+            rows = load_all("single")
+            ok = [r for r in rows if "error" not in r]
+            if ok:
+                worst = min(ok, key=lambda r: r["roofline_fraction"])
+                best = max(ok, key=lambda r: r["roofline_fraction"])
+                doms = {}
+                for r in ok:
+                    doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+                print(f"roofline/cells,0,n={len(ok)};dominant_counts={doms}")
+                print(f"roofline/worst,0,{worst['arch']}x{worst['shape']}="
+                      f"{worst['roofline_fraction']:.3f}")
+                print(f"roofline/best,0,{best['arch']}x{best['shape']}="
+                      f"{best['roofline_fraction']:.3f}")
+        except Exception:  # noqa: BLE001
+            print("roofline/summary,nan,SKIPPED (run repro.launch.dryrun "
+                  "first)")
 
     if failures:
         sys.exit(1)

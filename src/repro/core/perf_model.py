@@ -26,7 +26,9 @@ from __future__ import annotations
 import dataclasses
 import math
 
-from .tiling import input_buffer_size, receptive_field, PAPER_TILES
+from .tiling import (LayerShape, TileConfig, choose_kernel_tiles,
+                     dcl_dataflow_hbm_bytes, dcl_total_hbm_bytes,
+                     input_buffer_size, receptive_field, PAPER_TILES)
 
 # ---------------------------------------------------------------------------
 # Calibration constants
@@ -213,6 +215,54 @@ def speedup(n_channels: int, lam_ours: float, lam_conv: float = 0.0,
     model (lam_conv = 0)."""
     wl = DCLWorkload(n=n_channels, m=n_channels, **kw)
     return cycles_conventional(wl, lam_conv) / cycles_ours(wl, lam_ours)
+
+
+# ---------------------------------------------------------------------------
+# TPU dataflow traffic — zero-copy vs materialized-band (EXPERIMENTS.md §Perf)
+# ---------------------------------------------------------------------------
+
+def dataflow_traffic_report(*, h: int = 64, w: int = 64, c: int = 128,
+                            m: int = 128, batch: int = 4, tile_h: int = 8,
+                            tile_w: int | None = None,
+                            offset_bound: float = 2.0, kernel_size: int = 3,
+                            stride: int = 1,
+                            bytes_per_elem: int = 4) -> dict:
+    """Modeled HBM traffic of one bounded DCL under both TPU dataflows.
+
+    ``materialized_band`` is the legacy ``ops._pad_and_band`` path (full
+    overlapping row bands duplicated through HBM by an XLA gather before
+    the kernel runs); ``zero_copy`` is the in-kernel DMA dataflow.  When
+    ``tile_w`` is None the width tile comes from the Sec. 3.2 chooser
+    (``tiling.choose_kernel_tiles``), exactly as ``ops.deform_conv``
+    resolves it.  Returns bytes for both dataflows plus the ratio —
+    the number EXPERIMENTS.md §Perf and ``benchmarks/kernel_bench.py``
+    report and that this PR's acceptance gate (>= 2x) checks.
+    """
+    shape = LayerShape(h=h, w=w, c_in=c, c_out=m, kernel_size=kernel_size,
+                       stride=stride, offset_bound=offset_bound)
+    if tile_w is None:
+        kt = choose_kernel_tiles(shape, batch=batch)
+        tile_w = kt.tile_w
+        tile_c, tile_m = kt.tile_c, kt.tile_m
+    else:
+        tile_c, tile_m = c, m
+    t = TileConfig(t_h=tile_h, t_w=tile_w, t_n=tile_c, t_m=tile_m)
+    zero = dcl_dataflow_hbm_bytes(shape, t, dataflow="zero_copy",
+                                  batch=batch, bytes_per_elem=bytes_per_elem)
+    band = dcl_dataflow_hbm_bytes(shape, t, dataflow="materialized_band",
+                                  batch=batch, bytes_per_elem=bytes_per_elem)
+    return {
+        "tiles": t,
+        "zero_copy_bytes": zero,
+        "materialized_band_bytes": band,
+        "ratio": band / max(zero, 1),
+        "zero_copy_total_bytes": dcl_total_hbm_bytes(
+            shape, t, dataflow="zero_copy", batch=batch,
+            bytes_per_elem=bytes_per_elem),
+        "materialized_band_total_bytes": dcl_total_hbm_bytes(
+            shape, t, dataflow="materialized_band", batch=batch,
+            bytes_per_elem=bytes_per_elem),
+    }
 
 
 # ---------------------------------------------------------------------------

@@ -205,6 +205,180 @@ def choose_tiles(shape: LayerShape, *, fused: bool = True,
     return best
 
 
+# ---------------------------------------------------------------------------
+# Dataflow-level HBM traffic (zero-copy vs materialized-band) and the
+# kernel tile chooser used by ``repro.kernels.ops``.
+# ---------------------------------------------------------------------------
+
+def band_extent(tile: int, *, kernel_size: int, stride: int,
+                dilation: int = 1, offset_bound: float) -> int:
+    """Eq. 6 band extent along one axis for an output tile of ``tile``
+    positions, matching ``kernels.deform_sample.band_geometry`` exactly
+    (the +2 covers the bilinear x0+1 corner on each side)."""
+    hb = int(math.ceil(float(offset_bound)))
+    return (tile - 1) * stride + (kernel_size - 1) * dilation + 2 * hb + 2
+
+
+def out_hw(h: int, w: int, *, kernel_size: int, stride: int,
+           dilation: int = 1) -> tuple[int, int]:
+    """'Same'-padded output spatial dims of one DCL invocation."""
+    pad = dilation * (kernel_size // 2)
+    ho = (h + 2 * pad - dilation * (kernel_size - 1) - 1) // stride + 1
+    wo = (w + 2 * pad - dilation * (kernel_size - 1) - 1) // stride + 1
+    return ho, wo
+
+
+def dcl_dataflow_hbm_bytes(shape: LayerShape, t: TileConfig, *,
+                           dataflow: str = "zero_copy", batch: int = 1,
+                           dilation: int = 1,
+                           bytes_per_elem: int = 4) -> int:
+    """Input-dataflow HBM bytes for one whole DCL layer.
+
+    ``zero_copy``: the padded input stays in HBM; the kernel DMAs one
+    (band_h, band_w) window per (row-tile, width-tile, M-tile, C-chunk)
+    grid step — halo rows are re-read at tile boundaries, nothing is
+    duplicated.
+
+    ``materialized_band``: the legacy XLA path reads the padded input
+    once, *writes* every overlapping full-width row band back to HBM
+    (a band_h/(tile_h*stride) duplication of the input), and the kernel
+    re-reads those full-width bands per (M-tile, C-chunk) pass.
+    """
+    k, s, b = shape.kernel_size, shape.stride, shape.offset_bound
+    c, m = shape.c_in, shape.c_out
+    ho, wo = out_hw(shape.h, shape.w, kernel_size=k, stride=s,
+                    dilation=dilation)
+    h_tiles = -(-ho // t.t_h)
+    w_tiles = -(-wo // t.t_w)
+    m_passes = -(-m // t.t_m)
+    band_h = band_extent(t.t_h, kernel_size=k, stride=s, dilation=dilation,
+                         offset_bound=b)
+    hb = int(math.ceil(float(b)))
+    pad = dilation * (k // 2)
+    # Padded full-width extent (what the legacy path stages per band).
+    w_full = wo * s + band_extent(1, kernel_size=k, stride=s,
+                                  dilation=dilation, offset_bound=b) - s
+    if dataflow == "zero_copy":
+        band_w = band_extent(t.t_w, kernel_size=k, stride=s,
+                             dilation=dilation, offset_bound=b)
+        reads = h_tiles * w_tiles * m_passes * band_h * band_w * c
+        return batch * reads * bytes_per_elem
+    if dataflow == "materialized_band":
+        hp = shape.h + 2 * (pad + hb) + 1
+        x_read = hp * w_full * c                      # the jnp.take source
+        band_elems = h_tiles * band_h * w_full * c    # duplicated bands
+        kernel_reads = band_elems * m_passes          # per M-tile pass
+        return batch * (x_read + band_elems + kernel_reads) * bytes_per_elem
+    raise ValueError(f"unknown dataflow {dataflow!r}")
+
+
+def dcl_total_hbm_bytes(shape: LayerShape, t: TileConfig, *,
+                        dataflow: str = "zero_copy", batch: int = 1,
+                        dilation: int = 1, bytes_per_elem: int = 4) -> int:
+    """Whole-layer HBM traffic: input dataflow + offsets + weights + out.
+
+    Weight blocks are re-fetched per (row-tile, width-tile) because the
+    C/M grid axes cycle inside each spatial tile (same for both
+    dataflows); offsets and output travel once.
+    """
+    k2 = shape.kernel_size ** 2
+    ho, wo = out_hw(shape.h, shape.w, kernel_size=shape.kernel_size,
+                    stride=shape.stride, dilation=dilation)
+    h_tiles = -(-ho // t.t_h)
+    w_tiles = 1 if dataflow == "materialized_band" else -(-wo // t.t_w)
+    inp = dcl_dataflow_hbm_bytes(shape, t, dataflow=dataflow, batch=batch,
+                                 dilation=dilation,
+                                 bytes_per_elem=bytes_per_elem)
+    offs = batch * ho * wo * 2 * k2 * bytes_per_elem
+    wgt = batch * h_tiles * w_tiles * k2 * shape.c_in * shape.c_out \
+        * bytes_per_elem
+    out = batch * ho * wo * shape.c_out * bytes_per_elem
+    return inp + offs + wgt + out
+
+
+def zerocopy_vmem_bytes(shape: LayerShape, t: TileConfig, *,
+                        dilation: int = 1, bytes_per_elem: int = 2) -> int:
+    """VMEM working set of the zero-copy fused kernel: double-buffered
+    Eq. 6 (band_h, band_w) input scratch + weight block + offsets block
+    + fp32 accumulator + output tile."""
+    k2 = shape.kernel_size ** 2
+    band_h = band_extent(t.t_h, kernel_size=shape.kernel_size,
+                         stride=shape.stride, dilation=dilation,
+                         offset_bound=shape.offset_bound)
+    band_w = band_extent(t.t_w, kernel_size=shape.kernel_size,
+                         stride=shape.stride, dilation=dilation,
+                         offset_bound=shape.offset_bound)
+    band = 2 * band_h * band_w * t.t_n * bytes_per_elem   # double buffer
+    wgt = k2 * t.t_n * t.t_m * bytes_per_elem
+    offs = t.t_h * t.t_w * 2 * k2 * bytes_per_elem
+    acc = t.t_h * t.t_w * t.t_m * 4
+    out = t.t_h * t.t_w * t.t_m * bytes_per_elem
+    return band + wgt + offs + acc + out
+
+
+def _divisor_at_most(n: int, cap: int) -> int:
+    """Largest divisor of ``n`` that is <= cap (>= 1)."""
+    cap = max(1, min(cap, n))
+    for d in range(cap, 0, -1):
+        if n % d == 0:
+            return d
+    return 1
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelTiles:
+    """Concrete (divisor-snapped) tile sizes for the Pallas kernels."""
+    tile_h: int
+    tile_w: int
+    tile_c: int
+    tile_m: int
+
+
+def choose_kernel_tiles(shape: LayerShape, *, batch: int = 1,
+                        dilation: int = 1,
+                        vmem_budget: int = V5E_VMEM_BYTES) -> KernelTiles:
+    """Pick (tile_h, tile_w, tile_c, tile_m) for the zero-copy fused
+    kernel: minimize modeled whole-layer HBM traffic among tile points
+    whose double-buffered working set fits VMEM, then snap the channel
+    tiles to divisors of (C, M) as the kernels require.
+
+    This replaces the hand-passed tile arguments of ``ops.deform_conv``
+    (Sec. 3.2 methodology, evaluated on the zero-copy traffic term).
+    """
+    ho, wo = out_hw(shape.h, shape.w, kernel_size=shape.kernel_size,
+                    stride=shape.stride, dilation=dilation)
+    ths = sorted({min(t, max(1, ho)) for t in (1, 2, 4, 8, 16)})
+    tws = sorted({min(t, max(1, wo)) for t in (8, 16, 32, 64, 128)})
+    tns = sorted({_divisor_at_most(shape.c_in, cap)
+                  for cap in (32, 64, 128, 256, 512, shape.c_in)})
+    tms = sorted({_divisor_at_most(shape.c_out, cap)
+                  for cap in (32, 64, 128, 256, shape.c_out)})
+    best: tuple[tuple, TileConfig] | None = None
+    for t_h in ths:
+        for t_w in tws:
+            for t_n in tns:
+                for t_m in tms:
+                    t = TileConfig(t_h, t_w, t_n, t_m)
+                    vmem = zerocopy_vmem_bytes(shape, t, dilation=dilation)
+                    if vmem > vmem_budget:
+                        continue
+                    traffic = dcl_total_hbm_bytes(
+                        shape, t, dataflow="zero_copy", batch=batch,
+                        dilation=dilation)
+                    # Minimize traffic; break ties toward bigger MXU tiles.
+                    key = (float(traffic), -t_n * t_m, -t_h * t_w)
+                    if best is None or key < best[0]:
+                        best = (key, t)
+    if best is None:
+        raise ValueError(
+            f"no zero-copy tile configuration fits VMEM budget "
+            f"{vmem_budget} for {shape}; receptive field {shape.rf} too "
+            f"large — train with a larger lambda")
+    t = best[1]
+    return KernelTiles(tile_h=t.t_h, tile_w=t.t_w, tile_c=t.t_n,
+                       tile_m=t.t_m)
+
+
 def max_offset_bound_fitting(kernel_size: int, stride: int, t_w: int,
                              t_n: int, vmem_budget: int = V5E_VMEM_BYTES,
                              *, bytes_per_elem: int = 2) -> float:

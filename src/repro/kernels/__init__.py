@@ -3,6 +3,13 @@
 
 * ``deform_sample``     — stage-1 bounded-halo bilinear sampling (Eq. 6)
 * ``deform_conv_fused`` — stage 1+2 fused in VMEM (beyond-paper)
+
+Both DCL kernels run a zero-copy dataflow by default: the padded input
+stays whole in ANY/HBM and each (row-tile, width-tile) Eq. 6 band is
+DMA'd into double-buffered VMEM scratch by the kernel itself
+(``make_async_copy``), overlapping the next band's fetch with the
+current tile's gather + MXU work.  The legacy HBM-materialized banded
+dataflow is kept behind ``dataflow="banded"`` as the parity baseline.
 * ``flash_attention``   — blockwise online-softmax attention
 * ``matmul``            — tiled MXU matmul (the systolic-array analogue)
 

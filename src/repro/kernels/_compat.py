@@ -1,0 +1,18 @@
+"""Small jax-version compatibility layer for the Pallas TPU kernels.
+
+``pltpu.CompilerParams`` was renamed from ``pltpu.TPUCompilerParams``
+across jax releases; the container pins one side of the rename.  Every
+kernel routes through :func:`tpu_compiler_params` so the package works
+on either spelling.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+_CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")
+
+
+def tpu_compiler_params(*, dimension_semantics: tuple[str, ...], **kw):
+    """Build the TPU compiler-params object for ``pl.pallas_call``."""
+    return _CompilerParams(dimension_semantics=dimension_semantics, **kw)

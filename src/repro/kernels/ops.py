@@ -1,4 +1,4 @@
-"""Public entry points for the Pallas kernels (padding, banding, dispatch).
+"""Public entry points for the Pallas kernels (padding, tiling, dispatch).
 
 The dispatch mirrors the paper's co-design argument:
 
@@ -7,6 +7,21 @@ The dispatch mirrors the paper's co-design argument:
 * ``offset_bound`` None (the lambda=0 baseline) -> the pure-XLA gather
   path of ``repro.core.deform_conv`` — dynamic gathers from HBM, exactly
   the "irregular DRAM access" regime the paper measures against.
+
+Bounded kernels support two dataflows (``dataflow=``):
+
+* ``"zero_copy"`` (default) — the input is zero-padded once and handed
+  whole to the kernel in ``ANY``/HBM memory space; the kernel issues
+  double-buffered ``make_async_copy`` DMAs per Eq. 6 (row, width) band.
+  Nothing is duplicated in HBM and VMEM is bounded independent of image
+  size.  Tile sizes default to the Sec. 3.2 chooser
+  (``repro.core.tiling.choose_kernel_tiles``); pass explicit tiles to
+  override.
+* ``"banded"`` (legacy) — ``_pad_and_band`` materializes overlapping
+  full-width row bands in HBM via an XLA gather (a
+  ``band_h/(tile_h*stride)`` ~ 2-3x duplication of the input) before
+  the kernel runs.  Kept as the parity baseline; see EXPERIMENTS.md
+  §Perf for the modeled traffic difference.
 
 ``interpret`` defaults to True off-TPU (this container is CPU-only); on
 a real TPU backend it auto-disables.
@@ -20,11 +35,16 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.deform_conv import DCLConfig, sample_patches
-from .deform_sample import band_geometry, deform_sample_banded
-from .deform_conv_fused import deform_conv_fused_banded
+from repro.core.tiling import LayerShape, choose_kernel_tiles
+from .deform_sample import (band_geometry, deform_sample_banded,
+                            deform_sample_zerocopy)
+from .deform_conv_fused import (deform_conv_fused_banded,
+                                deform_conv_fused_zerocopy)
 from .matmul import matmul  # re-export  # noqa: F401
 
 Array = jax.Array
+
+DEFAULT_DATAFLOW = "zero_copy"
 
 
 def default_interpret() -> bool:
@@ -41,10 +61,33 @@ def tile_weights(w: Array, tile_c: int) -> Array:
     return wt.reshape(n_c, k2 * tile_c, m)
 
 
+@functools.lru_cache(maxsize=256)
+def resolve_tiles(h: int, w: int, c: int, m: int, *, kernel_size: int,
+                  stride: int, dilation: int, offset_bound: float,
+                  tile_h: int | None, tile_w: int | None,
+                  tile_c: int | None, tile_m: int | None
+                  ) -> tuple[int, int, int, int]:
+    """Fill unspecified tile sizes from the Sec. 3.2 chooser (zero-copy
+    traffic-minimizing, VMEM-bounded); explicit arguments win."""
+    if None in (tile_h, tile_w, tile_c, tile_m):
+        shape = LayerShape(h=h, w=w, c_in=c, c_out=m,
+                           kernel_size=kernel_size, stride=stride,
+                           offset_bound=offset_bound)
+        kt = choose_kernel_tiles(shape, dilation=dilation)
+        tile_h = tile_h or kt.tile_h
+        tile_w = tile_w or kt.tile_w
+        tile_c = tile_c or kt.tile_c
+        tile_m = tile_m or kt.tile_m
+    assert c % tile_c == 0, (c, tile_c)
+    assert m % tile_m == 0, (m, tile_m)
+    return tile_h, tile_w, tile_c, tile_m
+
+
 def _pad_and_band(x: Array, *, kernel_size: int, stride: int, dilation: int,
                   offset_bound: float, tile_h: int,
                   ho: int) -> tuple[Array, int]:
-    """Zero-pad x and slice it into overlapping row bands (Eq. 6 dataflow).
+    """Zero-pad x and slice it into overlapping row bands (legacy banded
+    dataflow).
 
     Returns (bands, n_tiles): bands (N, n_tiles, band_h, w_pad, C).  The
     top/left zero padding of ``pad + halo`` (+1 bottom/right for the
@@ -66,7 +109,8 @@ def _pad_and_band(x: Array, *, kernel_size: int, stride: int, dilation: int,
     xp = jnp.pad(x, ((0, 0), (p0, p1), (pad + hb, pad + hb + 1), (0, 0)))
 
     # Overlapping bands via a row gather (the halo duplication the paper
-    # pays in BRAM; here it is one strided HBM copy produced by XLA).
+    # pays in BRAM; here it is an HBM-materialized copy produced by XLA —
+    # exactly the redundant traffic the zero-copy dataflow removes).
     starts = jnp.arange(n_tiles) * (tile_h * stride)
     rows = starts[:, None] + jnp.arange(band_h)[None, :]     # (n_tiles, band_h)
     bands = jnp.take(xp, rows.reshape(-1), axis=1)
@@ -74,22 +118,45 @@ def _pad_and_band(x: Array, *, kernel_size: int, stride: int, dilation: int,
     return bands, n_tiles
 
 
+def _pad_zerocopy(x: Array, *, kernel_size: int, stride: int, dilation: int,
+                  offset_bound: float, tile_h: int, tile_w: int,
+                  ho: int, wo: int) -> Array:
+    """Zero-pad x once for the zero-copy kernels — no band
+    materialization; every (row-tile, width-tile) Eq. 6 band is a plain
+    rectangular window of the result, DMA'd by the kernel itself."""
+    n, h, w, c = x.shape
+    pad = dilation * (kernel_size // 2)
+    hb, band_h = band_geometry(kernel_size=kernel_size, stride=stride,
+                               dilation=dilation, offset_bound=offset_bound,
+                               tile_h=tile_h)
+    _, band_w = band_geometry(kernel_size=kernel_size, stride=stride,
+                              dilation=dilation, offset_bound=offset_bound,
+                              tile_h=tile_w)
+    h_tiles = ho // tile_h
+    w_tiles = wo // tile_w
+    p0 = pad + hb
+    pb = max(0, (h_tiles - 1) * tile_h * stride + band_h - p0 - h)
+    pr = max(0, (w_tiles - 1) * tile_w * stride + band_w - p0 - w)
+    return jnp.pad(x, ((0, 0), (p0, pb), (p0, pr), (0, 0)))
+
+
 def _out_hw(h: int, w: int, *, kernel_size: int, stride: int,
             dilation: int) -> tuple[int, int]:
-    pad = dilation * (kernel_size // 2)
-    ho = (h + 2 * pad - dilation * (kernel_size - 1) - 1) // stride + 1
-    wo = (w + 2 * pad - dilation * (kernel_size - 1) - 1) // stride + 1
-    return ho, wo
+    from repro.core.tiling import out_hw
+    return out_hw(h, w, kernel_size=kernel_size, stride=stride,
+                  dilation=dilation)
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("kernel_size", "stride", "dilation", "offset_bound",
-                     "tile_h", "tile_c", "interpret"))
+                     "tile_h", "tile_w", "tile_c", "dataflow", "interpret"))
 def deform_sample(x: Array, offsets: Array, *, kernel_size: int = 3,
                   stride: int = 1, dilation: int = 1,
-                  offset_bound: float | None = None, tile_h: int = 8,
+                  offset_bound: float | None = None,
+                  tile_h: int | None = 8, tile_w: int | None = None,
                   tile_c: int | None = None,
+                  dataflow: str = DEFAULT_DATAFLOW,
                   interpret: bool | None = None) -> Array:
     """Stage 1: bilinear patch sampling.
 
@@ -109,39 +176,70 @@ def deform_sample(x: Array, offsets: Array, *, kernel_size: int = 3,
 
     if interpret is None:
         interpret = default_interpret()
-    pad_h = (-ho) % tile_h
-    if pad_h:
-        offsets = jnp.pad(offsets, ((0, 0), (0, pad_h), (0, 0), (0, 0)))
-    bands, n_tiles = _pad_and_band(
-        x, kernel_size=kernel_size, stride=stride, dilation=dilation,
-        offset_bound=offset_bound, tile_h=tile_h, ho=ho + pad_h)
-    patches = deform_sample_banded(
-        bands, offsets, kernel_size=kernel_size, stride=stride,
+
+    if dataflow == "banded":
+        th = tile_h or 8
+        pad_h = (-ho) % th
+        if pad_h:
+            offsets = jnp.pad(offsets, ((0, 0), (0, pad_h), (0, 0), (0, 0)))
+        bands, n_tiles = _pad_and_band(
+            x, kernel_size=kernel_size, stride=stride, dilation=dilation,
+            offset_bound=offset_bound, tile_h=th, ho=ho + pad_h)
+        patches = deform_sample_banded(
+            bands, offsets, kernel_size=kernel_size, stride=stride,
+            dilation=dilation, offset_bound=offset_bound, tile_h=th,
+            tile_c=tile_c, interpret=interpret)
+        return patches[:, :ho]
+
+    if dataflow != "zero_copy":
+        raise ValueError(
+            f"unknown dataflow {dataflow!r}; expected 'zero_copy' or "
+            f"'banded'")
+    th, tw, tc, _ = resolve_tiles(
+        h, w, c, c, kernel_size=kernel_size, stride=stride,
         dilation=dilation, offset_bound=offset_bound, tile_h=tile_h,
-        tile_c=tile_c, interpret=interpret)
-    return patches[:, :ho]
+        tile_w=tile_w, tile_c=tile_c, tile_m=c)
+    th, tw = min(th, ho), min(tw, wo)
+    pad_h, pad_w = (-ho) % th, (-wo) % tw
+    if pad_h or pad_w:
+        offsets = jnp.pad(offsets,
+                          ((0, 0), (0, pad_h), (0, pad_w), (0, 0)))
+    xp = _pad_zerocopy(
+        x, kernel_size=kernel_size, stride=stride, dilation=dilation,
+        offset_bound=offset_bound, tile_h=th, tile_w=tw,
+        ho=ho + pad_h, wo=wo + pad_w)
+    patches = deform_sample_zerocopy(
+        xp, offsets, kernel_size=kernel_size, stride=stride,
+        dilation=dilation, offset_bound=offset_bound, tile_h=th, tile_w=tw,
+        tile_c=tc, interpret=interpret)
+    return patches[:, :ho, :wo]
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("kernel_size", "stride", "dilation", "offset_bound",
-                     "tile_h", "tile_c", "tile_m", "interpret"))
+                     "tile_h", "tile_w", "tile_c", "tile_m", "dataflow",
+                     "interpret"))
 def deform_conv(x: Array, offsets: Array, w: Array, *, kernel_size: int = 3,
                 stride: int = 1, dilation: int = 1,
-                offset_bound: float | None = None, tile_h: int = 8,
+                offset_bound: float | None = None,
+                tile_h: int | None = None, tile_w: int | None = None,
                 tile_c: int | None = None, tile_m: int | None = None,
+                dataflow: str = DEFAULT_DATAFLOW,
                 interpret: bool | None = None) -> Array:
     """Fused DCL stage 1+2: y = g(x, o) * w_deform  (Eq. 2).
 
     x: (N, H, W, C); offsets: (N, Ho, Wo, 2*K*K); w: (K*K, C, M).
-    Returns (N, Ho, Wo, M).
+    Returns (N, Ho, Wo, M).  Unspecified tile sizes are resolved by the
+    Sec. 3.2 chooser against the zero-copy traffic model.
     """
     n, h, w_, c = x.shape
     ho, wo = offsets.shape[1], offsets.shape[2]
     k2 = kernel_size * kernel_size
+    m = w.shape[-1]
 
     if offset_bound is None:
-        cfg = DCLConfig(in_channels=c, out_channels=w.shape[-1],
+        cfg = DCLConfig(in_channels=c, out_channels=m,
                         kernel_size=kernel_size, stride=stride,
                         dilation=dilation)
         patches = sample_patches(x, offsets.reshape(n, ho, wo, k2, 2), cfg)
@@ -151,16 +249,43 @@ def deform_conv(x: Array, offsets: Array, w: Array, *, kernel_size: int = 3,
 
     if interpret is None:
         interpret = default_interpret()
-    tc = tile_c or c
-    pad_h = (-ho) % tile_h
-    if pad_h:
-        offsets = jnp.pad(offsets, ((0, 0), (0, pad_h), (0, 0), (0, 0)))
-    bands, n_tiles = _pad_and_band(
-        x, kernel_size=kernel_size, stride=stride, dilation=dilation,
-        offset_bound=offset_bound, tile_h=tile_h, ho=ho + pad_h)
-    w_tiles = tile_weights(w.astype(x.dtype), tc)
-    y = deform_conv_fused_banded(
-        bands, offsets, w_tiles, kernel_size=kernel_size, stride=stride,
+
+    if dataflow == "banded":
+        th = tile_h or 8
+        tc = tile_c or c
+        pad_h = (-ho) % th
+        if pad_h:
+            offsets = jnp.pad(offsets, ((0, 0), (0, pad_h), (0, 0), (0, 0)))
+        bands, n_tiles = _pad_and_band(
+            x, kernel_size=kernel_size, stride=stride, dilation=dilation,
+            offset_bound=offset_bound, tile_h=th, ho=ho + pad_h)
+        w_tiles = tile_weights(w.astype(x.dtype), tc)
+        y = deform_conv_fused_banded(
+            bands, offsets, w_tiles, kernel_size=kernel_size, stride=stride,
+            dilation=dilation, offset_bound=offset_bound, tile_h=th,
+            tile_c=tc, tile_m=tile_m, interpret=interpret)
+        return y[:, :ho]
+
+    if dataflow != "zero_copy":
+        raise ValueError(
+            f"unknown dataflow {dataflow!r}; expected 'zero_copy' or "
+            f"'banded'")
+    th, tw, tc, tm = resolve_tiles(
+        h, w_, c, m, kernel_size=kernel_size, stride=stride,
         dilation=dilation, offset_bound=offset_bound, tile_h=tile_h,
-        tile_c=tc, tile_m=tile_m, interpret=interpret)
-    return y[:, :ho]
+        tile_w=tile_w, tile_c=tile_c, tile_m=tile_m)
+    th, tw = min(th, ho), min(tw, wo)
+    pad_h, pad_w = (-ho) % th, (-wo) % tw
+    if pad_h or pad_w:
+        offsets = jnp.pad(offsets,
+                          ((0, 0), (0, pad_h), (0, pad_w), (0, 0)))
+    xp = _pad_zerocopy(
+        x, kernel_size=kernel_size, stride=stride, dilation=dilation,
+        offset_bound=offset_bound, tile_h=th, tile_w=tw,
+        ho=ho + pad_h, wo=wo + pad_w)
+    w_tiled = tile_weights(w.astype(x.dtype), tc)
+    y = deform_conv_fused_zerocopy(
+        xp, offsets, w_tiled, kernel_size=kernel_size, stride=stride,
+        dilation=dilation, offset_bound=offset_bound, tile_h=th, tile_w=tw,
+        tile_c=tc, tile_m=tm, interpret=interpret)
+    return y[:, :ho, :wo]

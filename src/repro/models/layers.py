@@ -489,6 +489,61 @@ def attn_cache_def(cfg: AttnConfig, batch: int, max_len: int,
 
 
 # ---------------------------------------------------------------------------
+# Deformable convolution layer (shared conv-backbone primitive)
+# ---------------------------------------------------------------------------
+
+def dcl_def(cin: int, cout: int, k: int = 3) -> dict[str, ParamDef]:
+    """Parameter tree of one DCL: offset conv (zero-init, the paper's
+    'offsets start at the regular grid') + deform conv weights."""
+    return {
+        "w_offset": ParamDef((k, k, cin, 2 * k * k), (None, None, None, None),
+                             init="zeros"),
+        "b_offset": ParamDef((2 * k * k,), (None,), init="zeros"),
+        "w_deform": ParamDef((k, k, cin, cout),
+                             (None, None, None, "conv_out")),
+        "b_deform": ParamDef((cout,), (None,), init="zeros"),
+    }
+
+
+def dcl_apply(params: Mapping[str, Array], x: Array, *,
+              kernel_size: int = 3, stride: int = 1, dilation: int = 1,
+              offset_bound: float | None = None, use_kernel: bool = False,
+              dataflow: str = "zero_copy",
+              dtype: Any = jnp.float32) -> tuple[Array, Array]:
+    """One DCL forward pass -> (y, o_max).
+
+    ``use_kernel=True`` with a trained ``offset_bound`` routes through
+    the fused Pallas kernel (``repro.kernels.ops.deform_conv``) under
+    the requested dataflow — ``"zero_copy"`` (double-buffered in-kernel
+    band DMAs, the default) or ``"banded"`` (legacy HBM-materialized
+    bands).  Tile sizes come from the Sec. 3.2 chooser.  The pure-JAX
+    gather path (``dcl_forward``) is the training reference.
+    """
+    from repro.core.deform_conv import (DCLConfig, conv2d, dcl_forward,
+                                        offset_abs_max)
+    cin = x.shape[-1]
+    cout = params["w_deform"].shape[-1]
+    cfg = DCLConfig(in_channels=cin, out_channels=cout,
+                    kernel_size=kernel_size, stride=stride,
+                    dilation=dilation, offset_bound=offset_bound,
+                    dtype=dtype)
+    if use_kernel and offset_bound is not None:
+        from repro.kernels import ops
+        offsets = conv2d(x, params["w_offset"].astype(x.dtype),
+                         stride=stride, dilation=dilation, padding=cfg.pad)
+        offsets = offsets + params["b_offset"].astype(x.dtype)
+        o_max = offset_abs_max(offsets)
+        k = cfg.kernel_size
+        w = params["w_deform"].astype(x.dtype).reshape(k * k, cin, cout)
+        y = ops.deform_conv(x, offsets, w, kernel_size=k, stride=stride,
+                            dilation=dilation, offset_bound=offset_bound,
+                            dataflow=dataflow)
+        return y + params["b_deform"].astype(x.dtype), o_max
+    y, stats = dcl_forward(params, x, cfg)
+    return y, stats["o_max"]
+
+
+# ---------------------------------------------------------------------------
 # MLPs
 # ---------------------------------------------------------------------------
 

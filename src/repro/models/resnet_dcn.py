@@ -23,9 +23,8 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.core.deform_conv import (DCLConfig, conv2d, dcl_forward,
-                                    offset_abs_max)
-from .layers import ParamDef
+from repro.core.deform_conv import conv2d
+from .layers import ParamDef, dcl_apply, dcl_def
 
 Array = jax.Array
 
@@ -44,6 +43,7 @@ class ResNetDCNConfig:
     img_size: int = 256
     dtype: Any = jnp.float32
     use_kernel: bool = False       # route DCLs through the Pallas kernel
+    dataflow: str = "zero_copy"    # kernel dataflow: zero_copy | banded
 
     @property
     def total_blocks(self) -> int:
@@ -78,13 +78,7 @@ def group_norm(x: Array, params, *, groups: int = GN_GROUPS,
 
 
 def _dcl_def(cin, cout, k=3):
-    return {
-        "w_offset": ParamDef((k, k, cin, 2 * k * k), (None, None, None, None),
-                             init="zeros"),
-        "b_offset": ParamDef((2 * k * k,), (None,), init="zeros"),
-        "w_deform": _conv_def(k, k, cin, cout),
-        "b_deform": ParamDef((cout,), (None,), init="zeros"),
-    }
+    return dcl_def(cin, cout, k)
 
 
 def _block_def(cfg: ResNetDCNConfig, cin, width, block_index,
@@ -133,23 +127,10 @@ def init_params(key: Array, cfg: ResNetDCNConfig):
 
 
 def _apply_dcl(params, x: Array, cfg: ResNetDCNConfig, *, stride=1):
-    mid = x.shape[-1]
-    dcl_cfg = DCLConfig(in_channels=mid, out_channels=mid, stride=stride,
-                        offset_bound=cfg.offset_bound, dtype=cfg.dtype)
-    if cfg.use_kernel and cfg.offset_bound is not None:
-        from repro.kernels import ops
-        offsets = conv2d(x, params["w_offset"].astype(x.dtype),
-                         stride=stride, padding=dcl_cfg.pad)
-        offsets = offsets + params["b_offset"].astype(x.dtype)
-        o_max = offset_abs_max(offsets)
-        k = dcl_cfg.kernel_size
-        w = params["w_deform"].astype(x.dtype).reshape(k * k, mid, mid)
-        y = ops.deform_conv(x, offsets, w, stride=stride,
-                            offset_bound=cfg.offset_bound)
-        y = y + params["b_deform"].astype(x.dtype)
-        return y, o_max
-    y, stats = dcl_forward(params, x, dcl_cfg)
-    return y, stats["o_max"]
+    return dcl_apply(params, x, stride=stride,
+                     offset_bound=cfg.offset_bound,
+                     use_kernel=cfg.use_kernel, dataflow=cfg.dataflow,
+                     dtype=cfg.dtype)
 
 
 def _apply_block(params, x: Array, cfg: ResNetDCNConfig, *, stride: int,

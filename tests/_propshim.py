@@ -1,0 +1,86 @@
+"""Fallback property-test shim for environments without ``hypothesis``.
+
+Importing test modules must not fail when the package is absent, so the
+hypothesis-using files do::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _propshim import given, settings, st
+
+The shim maps each strategy to a small deterministic sample set and
+``@given`` to a plain ``pytest.mark.parametrize`` over (a capped stride
+sample of) their cross product — the key property cases still run, just
+without shrinking/fuzzing.
+"""
+from __future__ import annotations
+
+import inspect
+import itertools
+
+import pytest
+
+MAX_COMBOS = 12
+
+
+class _St:
+    """Deterministic stand-ins for the hypothesis strategies we use."""
+
+    @staticmethod
+    def integers(min_value=0, max_value=100):
+        return [min_value, (min_value + max_value) // 2, max_value]
+
+    @staticmethod
+    def floats(min_value=0.0, max_value=1.0, **_kw):
+        lo, hi = float(min_value), float(max_value)
+        if lo > 0 and hi / max(lo, 1e-30) > 1e3:   # wide range: log-mid
+            mid = (lo * hi) ** 0.5
+        else:
+            mid = (lo + hi) / 2.0
+        return [lo, mid, hi]
+
+    @staticmethod
+    def sampled_from(values):
+        return list(values)
+
+    @staticmethod
+    def booleans():
+        return [False, True]
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=None, **_kw):
+        elements = list(elements)
+        max_size = max_size if max_size is not None else min_size + 3
+        short = list(itertools.islice(itertools.cycle(elements),
+                                      max(min_size, 1)))
+        long = list(itertools.islice(itertools.cycle(reversed(elements)),
+                                     max_size))
+        out = [short, long] if len(long) >= min_size else [short]
+        return [x for x in out if min_size <= len(x) <= max_size] or [short]
+
+
+st = _St()
+
+
+def given(*pos_strategies, **kw_strategies):
+    def deco(fn):
+        names = [p for p in inspect.signature(fn).parameters]
+        mapping = dict(zip(names, pos_strategies))
+        mapping.update(kw_strategies)
+        argnames = [n for n in names if n in mapping]
+        pools = [list(mapping[n]) for n in argnames]
+        combos = list(itertools.product(*pools))
+        if len(combos) > MAX_COMBOS:
+            step = -(-len(combos) // MAX_COMBOS)
+            combos = combos[::step]
+        if len(argnames) == 1:
+            params = [c[0] for c in combos]
+            return pytest.mark.parametrize(argnames[0], params)(fn)
+        return pytest.mark.parametrize(",".join(argnames), combos)(fn)
+    return deco
+
+
+def settings(**_kw):
+    def deco(fn):
+        return fn
+    return deco

@@ -5,7 +5,10 @@ import functools
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:            # fallback: deterministic parametrize shim
+    from _propshim import given, settings, st
 
 from repro.distributed.compression import (compressed_psum, ef_compress_grads,
                                            init_ef_state)

@@ -5,7 +5,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:            # fallback: deterministic parametrize shim
+    from _propshim import given, settings, st
 
 from repro.core.deform_conv import (DCLConfig, conv2d, dcl_forward,
                                     init_dcl_params, offset_abs_max,

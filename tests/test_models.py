@@ -3,7 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:            # fallback: deterministic parametrize shim
+    from _propshim import given, settings, st
 
 from repro.models import layers as L
 from repro.models.transformer import (ModelConfig, decode_step, forward,

@@ -12,6 +12,7 @@ import sys
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.distributed.pipeline import bubble_fraction, gpipe_forward
 
@@ -32,6 +33,7 @@ def test_single_stage_degenerates_to_sequential():
     np.testing.assert_allclose(ys, ref, rtol=1e-6, atol=1e-6)
 
 
+@pytest.mark.slow      # spawns a 4-host-device subprocess; minutes on CPU
 def test_two_stage_pipeline_subprocess():
     out = subprocess.run(
         [sys.executable, str(ROOT / "examples" / "pipeline_demo.py")],

@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:            # fallback: deterministic parametrize shim
+    from _propshim import given, settings, st
 
 from repro.core.rf_regularizer import (OffsetStats, network_offset_max,
                                        regularized_loss)
@@ -66,10 +69,17 @@ def test_training_with_lambda_shrinks_offsets():
         opt = sgd(constant(0.05), momentum=0.9)
         state = opt.init(params)
 
+        # Smooth-max variant: the hard max's single-coordinate subgradient
+        # is too noisy for a 40-step miniature under momentum (transient
+        # o_max spikes); logsumexp spreads the pull over all near-maximal
+        # offsets (the EXPERIMENTS.md trainability note).
+        smoothness = 0.5 if lam else 0.0
+
         @jax.jit
-        def step(p, s, batch, i, lam=lam):
+        def step(p, s, batch, i, lam=lam, smoothness=smoothness):
             (loss, m), g = jax.value_and_grad(
-                lambda pp: R.train_loss(pp, cfg, batch, lam=lam),
+                lambda pp: R.train_loss(pp, cfg, batch, lam=lam,
+                                        smoothness=smoothness),
                 has_aux=True)(p)
             p2, s2 = opt.update(g, s, p, i)
             task = m["bce"] + m["ce"] + 0.5 * m["l1"]

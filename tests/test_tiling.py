@@ -1,6 +1,9 @@
 """Eq. 6/7 buffer algebra + the VMEM-aware tile chooser."""
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:            # fallback: deterministic parametrize shim
+    from _propshim import given, settings, st
 
 from repro.core import tiling as T
 
