@@ -2,8 +2,21 @@
 interpret-mode timings validate the algorithmic scaling only; TPU perf
 is covered by the §Roofline dry-run).  Also reports the analytic VMEM
 footprints / CTC from the Eq. 6/7 tile model and the modeled HBM bytes
-of the two DCL dataflows (materialized-band vs zero-copy) so the perf
-trajectory is tracked across PRs (see ``run.py`` / BENCH_kernels.json).
+of the two DCL dataflows (materialized-band vs zero-copy), forward AND
+backward, so the perf trajectory is tracked across PRs (see ``run.py``
+/ BENCH_kernels.json).
+
+Timing is best-of-N (min): interpret-mode wall time on a shared CI
+machine is heavily right-tailed, and the PR-2 "128-channel zero-copy
+regression" turned out to be mean-of-3 noise on top of a hand-pinned
+``tile_h=8`` — the chooser's own tiles (taller row tiles, fewer grid
+steps) win once timed robustly.  ``run.py`` gates zero-copy <= banded
+on these records.
+
+Backward entries (``us_bwd_*``) time one full ``jax.vjp`` pullback —
+forward + the fused backward kernel of ``kernels.deform_conv_bwd`` for
+the bounded path, forward + XLA autodiff for the unbounded gather
+reference — i.e. the per-layer cost a training step actually pays.
 """
 from __future__ import annotations
 
@@ -17,19 +30,32 @@ from repro.core.tiling import (LayerShape, PAPER_TILES, choose_kernel_tiles,
                                choose_tiles, evaluate_tile)
 from repro.kernels import ops, ref
 
+BANDED_TILE_H = 8     # the legacy banded path's hand-tiled default
 
-def _time(fn, *args, reps=3):
-    fn(*args).block_until_ready()
-    t0 = time.time()
+
+def _time(fn, *args, reps=5):
+    """Best-of-``reps`` wall time in us (first call warms the cache)."""
+    jax.tree_util.tree_map(lambda x: x.block_until_ready(), fn(*args))
+    best = float("inf")
     for _ in range(reps):
+        t0 = time.time()
         out = fn(*args)
-    jax.tree_util.tree_map(lambda x: x.block_until_ready(), out)
-    return (time.time() - t0) / reps * 1e6
+        jax.tree_util.tree_map(lambda x: x.block_until_ready(), out)
+        best = min(best, time.time() - t0)
+    return best * 1e6
+
+
+def _grad_fn(forward):
+    """loss = sum(y): the pullback cotangent is all-ones, exercising
+    every (d_input, d_offsets, d_weights) path."""
+    return jax.jit(jax.grad(
+        lambda x, o, w: jnp.sum(forward(x, o, w)), argnums=(0, 1, 2)))
 
 
 def records(*, smoke: bool = False) -> list[dict]:
-    """Structured per-kernel records: wall time (interpret mode) and the
-    modeled HBM traffic of both DCL dataflows for the measured shape."""
+    """Structured per-kernel records: forward and backward wall time
+    (interpret mode, best-of-N) and the modeled HBM traffic of both DCL
+    dataflows for the measured shape."""
     out: list[dict] = []
     key = jax.random.PRNGKey(0)
     shapes = [(16, 16, 32, 32)] if smoke else \
@@ -40,26 +66,88 @@ def records(*, smoke: bool = False) -> list[dict]:
                                  (1, h, w, 18), jnp.float32) * 2
         wgt = jax.random.normal(jax.random.fold_in(key, 2),
                                 (9, c, m), jnp.float32) * 0.1
+        # zero-copy runs at the Sec. 3.2 chooser's own tiles (the
+        # product path); banded keeps its legacy hand-tiled default.
+        # reps=7: these two records feed run.py's regression gate.
         t_zero = _time(lambda a, b, ww: ops.deform_conv(
-            a, b, ww, offset_bound=2.0, tile_h=8,
-            dataflow="zero_copy"), x, offs, wgt)
+            a, b, ww, offset_bound=2.0, dataflow="zero_copy"),
+            x, offs, wgt, reps=7)
         t_banded = _time(lambda a, b, ww: ops.deform_conv(
-            a, b, ww, offset_bound=2.0, tile_h=8,
-            dataflow="banded"), x, offs, wgt)
+            a, b, ww, offset_bound=2.0, tile_h=BANDED_TILE_H,
+            dataflow="banded"), x, offs, wgt, reps=7)
         t_unbounded = _time(lambda a, b, ww: ops.deform_conv(
             a, b, ww), x, offs, wgt)
+        t_bwd_zero = _time(_grad_fn(lambda a, b, ww: ops.deform_conv(
+            a, b, ww, offset_bound=2.0, dataflow="zero_copy")),
+            x, offs, wgt)
+        t_bwd_xla = _time(_grad_fn(lambda a, b, ww: ref.deform_conv_fused_ref(
+            a, b, ww, offset_bound=2.0)), x, offs, wgt)
+        # Traffic model at the PR-1 tile_h=8 convention so the recorded
+        # ratios stay comparable across BENCH_kernels.json revisions
+        # (wall times above use the chooser's own tiles — recorded
+        # separately as tiles_timed_zero_copy).
         rep = dataflow_traffic_report(h=h, w=w, c=c, m=m, batch=1,
-                                      tile_h=8, offset_bound=2.0)
+                                      tile_h=BANDED_TILE_H, offset_bound=2.0)
+        kt = choose_kernel_tiles(
+            LayerShape(h=h, w=w, c_in=c, c_out=m, offset_bound=2.0), batch=1)
         out.append({
             "name": f"deform_conv_fused_{c}c",
             "us_zero_copy": t_zero,
             "us_banded": t_banded,
             "us_unbounded_xla": t_unbounded,
+            "us_bwd_zero_copy": t_bwd_zero,
+            "us_bwd_xla_ref": t_bwd_xla,
             "hbm_bytes_zero_copy": rep["zero_copy_bytes"],
             "hbm_bytes_materialized_band": rep["materialized_band_bytes"],
             "hbm_traffic_ratio": rep["ratio"],
-            "tiles": str(rep["tiles"]),
+            "hbm_bytes_bwd_zero_copy": rep["zero_copy_bwd_bytes"],
+            "hbm_bytes_bwd_materialized_band":
+                rep["materialized_band_bwd_bytes"],
+            "hbm_bwd_traffic_ratio": rep["bwd_ratio"],
+            "hbm_train_traffic_ratio": rep["train_ratio"],
+            "tiles_traffic_model": str(rep["tiles"]),
+            "tiles_timed_zero_copy":
+                f"({kt.tile_h},{kt.tile_w},{kt.tile_c},{kt.tile_m})",
+            "tiles_timed_banded": f"tile_h={BANDED_TILE_H}",
         })
+    return out
+
+
+def train_step_records() -> list[dict]:
+    """§Training-throughput: median Trainer step time of the miniature
+    ResNet-DCN detector, XLA-reference DCLs vs the Pallas kernel path
+    (full mode only — compile time would blow the --smoke budget)."""
+    import dataclasses as _dc
+    import tempfile
+
+    from repro.data import DetectionDataConfig, detection_batch
+    from repro.models import resnet_dcn as R
+    from repro.optim import constant, sgd
+    from repro.train import Trainer, TrainerConfig
+
+    cfg_ref = R.ResNetDCNConfig(
+        stage_sizes=(1, 1, 1, 1), widths=(16, 32, 64, 128), stem_width=8,
+        num_dcn=2, num_classes=4, img_size=32, offset_bound=2.0)
+    data = DetectionDataConfig(img_size=32, global_batch=2, num_classes=4,
+                               seed=3)
+    out = []
+    for label, cfg in [("xla_ref", cfg_ref),
+                       ("kernel", _dc.replace(cfg_ref, use_kernel=True))]:
+        with tempfile.TemporaryDirectory() as tmp:
+            tr = Trainer(
+                loss_fn=lambda p, b, _cfg=cfg: R.train_loss(
+                    p, _cfg, b, lam=0.1),
+                params=R.init_params(jax.random.PRNGKey(0), cfg_ref),
+                optimizer=sgd(constant(0.05), momentum=0.9), mesh=None,
+                param_specs=None,
+                batch_fn=lambda s: {k: jnp.asarray(v) for k, v in
+                                    detection_batch(data, s).items()},
+                config=TrainerConfig(total_steps=6, ckpt_every=100,
+                                     ckpt_dir=tmp, log_every=100))
+            tr.run()
+        out.append({"name": f"train_step_resnet_dcn_{label}",
+                    "us_median_step": tr.median_step_sec() * 1e6,
+                    "steps": len(tr.step_seconds)})
     return out
 
 
@@ -72,14 +160,22 @@ def run(*, smoke: bool = False,
     # records() call between the CSV rows and BENCH_kernels.json)
     for r in kernel_records if kernel_records is not None \
             else records(smoke=smoke):
+        if "us_median_step" in r:
+            rows.append(f"kernel/{r['name']},{r['us_median_step']:.0f},"
+                        f"median_of_{r['steps']}_steps")
+            continue
         rows.append(
             f"kernel/{r['name']},{r['us_zero_copy']:.0f},"
             f"interpret-mode; banded={r['us_banded']:.0f}us;"
             f"unbounded_xla={r['us_unbounded_xla']:.0f}us;"
+            f"bwd_zero_copy={r['us_bwd_zero_copy']:.0f}us;"
+            f"bwd_xla_ref={r['us_bwd_xla_ref']:.0f}us;"
             f"hbm_model_zero_copy={r['hbm_bytes_zero_copy'] / 1e6:.2f}MB;"
             f"hbm_model_banded="
             f"{r['hbm_bytes_materialized_band'] / 1e6:.2f}MB;"
-            f"traffic_ratio={r['hbm_traffic_ratio']:.2f}x")
+            f"traffic_ratio={r['hbm_traffic_ratio']:.2f}x;"
+            f"bwd_traffic_ratio={r['hbm_bwd_traffic_ratio']:.2f}x;"
+            f"train_traffic_ratio={r['hbm_train_traffic_ratio']:.2f}x")
     # flash attention kernel (interpret) vs dense reference
     from repro.kernels.flash_attention import flash_attention
     from repro.kernels.ref import flash_attention_ref

@@ -11,8 +11,13 @@ Prints ``name,us_per_call,derived`` CSV rows:
                           dry-run artifacts exist (run dryrun.py first)
 
 Also writes ``BENCH_kernels.json`` next to this file: machine-readable
-per-kernel wall time + modeled HBM bytes under both DCL dataflows, so
-the perf trajectory is tracked across PRs.
+per-kernel wall time (forward and backward) + modeled HBM bytes under
+both DCL dataflows, so the perf trajectory is tracked across PRs.
+
+The driver gates the PR-2 zero-copy regression: for every
+``deform_conv_fused_*`` record, zero-copy wall time must be <= banded
+(both best-of-N; zero-copy runs at the chooser's tiles, banded at its
+legacy hand-tiled default).  A gate failure exits non-zero.
 
 ``--smoke`` runs only the kernel section at reduced shapes (< 1 min);
 ``--out DIR`` redirects the JSON artifact.
@@ -29,13 +34,39 @@ import traceback
 def write_kernel_json(path: str, recs: list[dict], *, smoke: bool) -> None:
     payload = {
         "smoke": smoke,
-        "note": "wall times are interpret-mode (CPU) — scaling only; "
-                "hbm_bytes_* are the analytic dataflow model",
+        "note": "wall times are interpret-mode (CPU, best-of-N) — scaling "
+                "only; us_bwd_* time one fwd+vjp pullback; hbm_bytes_* are "
+                "the analytic dataflow model (tile_h=8 convention)",
         "kernels": recs,
     }
     with open(path, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
     print(f"bench/json,0,wrote {path} ({len(recs)} kernels)")
+
+
+# Shared CI boxes are right-tailed even under best-of-N; a genuine
+# dataflow regression (the PR-1 128c record was 1.6x) clears this
+# margin, scheduler jitter on a ~20% win does not.
+GATE_NOISE_TOLERANCE = 1.2
+
+
+def gate_zero_copy_regression(recs: list[dict]) -> int:
+    """PR-2 regression gate: zero-copy must not be slower than the
+    legacy banded dataflow on any measured deform_conv layer (the 128c
+    regression of BENCH_kernels.json rev. PR-1), modulo the CI noise
+    tolerance.  Returns #failures."""
+    failures = 0
+    for r in recs:
+        if not r.get("name", "").startswith("deform_conv_fused_"):
+            continue
+        zc, banded = r["us_zero_copy"], r["us_banded"]
+        ok = zc <= banded * GATE_NOISE_TOLERANCE
+        print(f"bench/gate_{r['name']},{zc:.0f},"
+              f"zero_copy{'<=' if zc <= banded else '>'}banded"
+              f"({banded:.0f}us;tol={GATE_NOISE_TOLERANCE}x)"
+              f"{'' if ok else ';REGRESSION'}")
+        failures += 0 if ok else 1
+    return failures
 
 
 def main(argv=None) -> None:
@@ -53,6 +84,8 @@ def main(argv=None) -> None:
 
     def kernel_section():
         kernel_recs.extend(kernel_bench.records(smoke=args.smoke))
+        if not args.smoke:
+            kernel_recs.extend(kernel_bench.train_step_records())
         return kernel_bench.run(smoke=args.smoke, kernel_records=kernel_recs)
 
     if args.smoke:
@@ -79,8 +112,10 @@ def main(argv=None) -> None:
     try:
         if not kernel_recs:
             kernel_recs = kernel_bench.records(smoke=args.smoke)
+        os.makedirs(args.out, exist_ok=True)
         write_kernel_json(os.path.join(args.out, "BENCH_kernels.json"),
                           kernel_recs, smoke=args.smoke)
+        failures += gate_zero_copy_regression(kernel_recs)
     except Exception:  # noqa: BLE001
         failures += 1
         print("bench/json,nan,ERROR")

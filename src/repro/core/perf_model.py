@@ -27,7 +27,8 @@ import dataclasses
 import math
 
 from .tiling import (LayerShape, TileConfig, choose_kernel_tiles,
-                     dcl_dataflow_hbm_bytes, dcl_total_hbm_bytes,
+                     dcl_backward_hbm_bytes, dcl_dataflow_hbm_bytes,
+                     dcl_total_hbm_bytes, dcl_train_hbm_bytes,
                      input_buffer_size, receptive_field, PAPER_TILES)
 
 # ---------------------------------------------------------------------------
@@ -236,7 +237,10 @@ def dataflow_traffic_report(*, h: int = 64, w: int = 64, c: int = 128,
     (``tiling.choose_kernel_tiles``), exactly as ``ops.deform_conv``
     resolves it.  Returns bytes for both dataflows plus the ratio —
     the number EXPERIMENTS.md §Perf and ``benchmarks/kernel_bench.py``
-    report and that this PR's acceptance gate (>= 2x) checks.
+    report and that the PR-1 acceptance gate (>= 2x) checks — and since
+    PR 2 the *backward* traffic of both dataflows (``bwd_ratio``, from
+    ``tiling.dcl_backward_hbm_bytes``) plus the combined fwd+bwd
+    training traffic (``train_ratio``, this PR's >= 2x acceptance gate).
     """
     shape = LayerShape(h=h, w=w, c_in=c, c_out=m, kernel_size=kernel_size,
                        stride=stride, offset_bound=offset_bound)
@@ -251,11 +255,29 @@ def dataflow_traffic_report(*, h: int = 64, w: int = 64, c: int = 128,
                                   batch=batch, bytes_per_elem=bytes_per_elem)
     band = dcl_dataflow_hbm_bytes(shape, t, dataflow="materialized_band",
                                   batch=batch, bytes_per_elem=bytes_per_elem)
+    zero_bwd = dcl_backward_hbm_bytes(shape, t, dataflow="zero_copy",
+                                      batch=batch,
+                                      bytes_per_elem=bytes_per_elem)
+    band_bwd = dcl_backward_hbm_bytes(shape, t, dataflow="materialized_band",
+                                      batch=batch,
+                                      bytes_per_elem=bytes_per_elem)
+    zero_train = dcl_train_hbm_bytes(shape, t, dataflow="zero_copy",
+                                     batch=batch,
+                                     bytes_per_elem=bytes_per_elem)
+    band_train = dcl_train_hbm_bytes(shape, t, dataflow="materialized_band",
+                                     batch=batch,
+                                     bytes_per_elem=bytes_per_elem)
     return {
         "tiles": t,
         "zero_copy_bytes": zero,
         "materialized_band_bytes": band,
         "ratio": band / max(zero, 1),
+        "zero_copy_bwd_bytes": zero_bwd,
+        "materialized_band_bwd_bytes": band_bwd,
+        "bwd_ratio": band_bwd / max(zero_bwd, 1),
+        "zero_copy_train_bytes": zero_train,
+        "materialized_band_train_bytes": band_train,
+        "train_ratio": band_train / max(zero_train, 1),
         "zero_copy_total_bytes": dcl_total_hbm_bytes(
             shape, t, dataflow="zero_copy", batch=batch,
             bytes_per_elem=bytes_per_elem),

@@ -296,6 +296,106 @@ def dcl_total_hbm_bytes(shape: LayerShape, t: TileConfig, *,
     return inp + offs + wgt + out
 
 
+def dcl_backward_hbm_bytes(shape: LayerShape, t: TileConfig, *,
+                           dataflow: str = "zero_copy", batch: int = 1,
+                           dilation: int = 1,
+                           bytes_per_elem: int = 4) -> int:
+    """HBM bytes of one whole-layer DCL *backward* pass.
+
+    ``zero_copy`` models ``kernels.deform_conv_bwd``: per (row-tile,
+    width-tile, C-chunk) grid step the kernel re-reads one Eq. 6
+    (band_h, band_w) input band chunk (cheap recompute of the sampled
+    patches — no patch residual is ever saved), reads the cotangent tile
+    and weight block, read-modify-writes the same-shaped ``d_input``
+    band region, and flushes the fp32 ``d_weights`` accumulator block.
+    The output-channel axis is untiled in backward, so input bands are
+    NOT re-read per M-pass (unlike forward).
+
+    ``materialized_band`` models the pre-PR training path: XLA
+    differentiates a two-stage (sample -> einsum) reference, which
+    (a) materializes overlapping full-width row bands in HBM for the
+    recompute, (b) materializes an equal-sized banded scatter buffer
+    for ``d_input`` that is written, re-read, and reduced into the
+    input gradient, and (c) — the dominant term — round-trips the
+    (N, Ho, Wo, K^2, C) patch tensor through HBM: the einsum VJP reads
+    the saved patch residual and writes+reads ``d_patches`` before the
+    sampling VJP can consume it.  The fused backward kernel contracts
+    both in VMEM; neither tensor ever exists in HBM.  Each dataflow is
+    charged its own cotangent/weight cadence (the fused kernel
+    re-fetches per tile and over-flushes d_weights; the XLA baseline
+    streams those once) so the ratio reflects the dataflows, not a
+    shared-term artifact.
+    """
+    k, s, b = shape.kernel_size, shape.stride, shape.offset_bound
+    k2 = k * k
+    c, m = shape.c_in, shape.c_out
+    ho, wo = out_hw(shape.h, shape.w, kernel_size=k, stride=s,
+                    dilation=dilation)
+    h_tiles = -(-ho // t.t_h)
+    w_tiles = -(-wo // t.t_w)
+    c_steps = -(-c // t.t_n)
+    band_h = band_extent(t.t_h, kernel_size=k, stride=s, dilation=dilation,
+                         offset_bound=b)
+    hb = int(math.ceil(float(b)))
+    pad = dilation * (k // 2)
+    w_full = wo * s + band_extent(1, kernel_size=k, stride=s,
+                                  dilation=dilation, offset_bound=b) - s
+
+    doff_writes = ho * wo * 2 * k2
+
+    if dataflow == "zero_copy":
+        # Per-grid-step costs of the fused backward kernel: the
+        # cotangent tile is fetched once per spatial tile (its
+        # BlockSpec index is constant in the C-chunk axis), the weight
+        # block per C-chunk step, and the fp32 d_weights accumulator
+        # flushes every step (interpret-safe cadence — see ROADMAP
+        # "d_weights flush").
+        g_reads = ho * wo * m
+        w_reads = h_tiles * w_tiles * k2 * c * m
+        dw_writes = h_tiles * w_tiles * k2 * c * m
+        band_w = band_extent(t.t_w, kernel_size=k, stride=s,
+                             dilation=dilation, offset_bound=b)
+        band_elems = h_tiles * w_tiles * band_h * band_w * c
+        inp = band_elems          # recompute read
+        dx_rmw = 2 * band_elems   # d_input band read + write per step
+        return batch * (inp + dx_rmw + g_reads + w_reads + dw_writes
+                        + doff_writes) * bytes_per_elem
+    if dataflow == "materialized_band":
+        # XLA autodiff of the two-stage reference is NOT spatially
+        # tiled: it reads g twice (d_weights and d_patches einsums),
+        # reads w and writes dw once — charged at those once-through
+        # sizes, not the fused kernel's per-tile re-fetch cadence.
+        g_reads = 2 * ho * wo * m
+        w_reads = k2 * c * m
+        dw_writes = k2 * c * m
+        hp = shape.h + 2 * (pad + hb) + 1
+        x_read = hp * w_full * c
+        band_elems = h_tiles * band_h * w_full * c
+        # recompute staging: bands written then re-read by the kernel
+        inp = x_read + 2 * band_elems
+        # d_input: banded scatter buffer written, re-read, reduced
+        dx_bands = 2 * band_elems + hp * w_full * c
+        # two-stage patch round-trip: patch residual read + d_patches
+        # written by the einsum VJP + read by the sampling VJP
+        patches = 3 * ho * wo * k2 * c
+        return batch * (inp + dx_bands + patches + g_reads + w_reads
+                        + dw_writes + doff_writes) * bytes_per_elem
+    raise ValueError(f"unknown dataflow {dataflow!r}")
+
+
+def dcl_train_hbm_bytes(shape: LayerShape, t: TileConfig, *,
+                        dataflow: str = "zero_copy", batch: int = 1,
+                        dilation: int = 1, bytes_per_elem: int = 4) -> int:
+    """Combined fwd+bwd whole-layer HBM traffic — the objective the
+    kernel tile chooser minimizes for training (``objective='training'``)."""
+    return (dcl_total_hbm_bytes(shape, t, dataflow=dataflow, batch=batch,
+                                dilation=dilation,
+                                bytes_per_elem=bytes_per_elem)
+            + dcl_backward_hbm_bytes(shape, t, dataflow=dataflow,
+                                     batch=batch, dilation=dilation,
+                                     bytes_per_elem=bytes_per_elem))
+
+
 def zerocopy_vmem_bytes(shape: LayerShape, t: TileConfig, *,
                         dilation: int = 1, bytes_per_elem: int = 2) -> int:
     """VMEM working set of the zero-copy fused kernel: double-buffered
@@ -314,6 +414,31 @@ def zerocopy_vmem_bytes(shape: LayerShape, t: TileConfig, *,
     acc = t.t_h * t.t_w * t.t_m * 4
     out = t.t_h * t.t_w * t.t_m * bytes_per_elem
     return band + wgt + offs + acc + out
+
+
+def zerocopy_bwd_vmem_bytes(shape: LayerShape, t: TileConfig, *,
+                            dilation: int = 1,
+                            bytes_per_elem: int = 2) -> int:
+    """VMEM working set of the fused zero-copy *backward* kernel
+    (``kernels.deform_conv_bwd``): double-buffered Eq. 6 input band +
+    same-shaped d_input read-modify-write band + the full fp32
+    d_weights accumulator (K^2 * C * M — the M axis is untiled in
+    backward) + cotangent tile + weight block + fp32 d_offsets
+    accumulator."""
+    k2 = shape.kernel_size ** 2
+    band_h = band_extent(t.t_h, kernel_size=shape.kernel_size,
+                         stride=shape.stride, dilation=dilation,
+                         offset_bound=shape.offset_bound)
+    band_w = band_extent(t.t_w, kernel_size=shape.kernel_size,
+                         stride=shape.stride, dilation=dilation,
+                         offset_bound=shape.offset_bound)
+    band = 2 * band_h * band_w * t.t_n * bytes_per_elem   # double buffer
+    rmw = band_h * band_w * t.t_n * bytes_per_elem        # d_input band
+    dw_acc = k2 * shape.c_in * shape.c_out * 4            # fp32, all chunks
+    g_tile = t.t_h * t.t_w * shape.c_out * bytes_per_elem
+    wgt = k2 * t.t_n * shape.c_out * bytes_per_elem
+    doff_acc = t.t_h * t.t_w * 2 * k2 * 4
+    return band + rmw + dw_acc + g_tile + wgt + doff_acc
 
 
 def _divisor_at_most(n: int, cap: int) -> int:
@@ -336,23 +461,39 @@ class KernelTiles:
 
 def choose_kernel_tiles(shape: LayerShape, *, batch: int = 1,
                         dilation: int = 1,
+                        objective: str = "training",
                         vmem_budget: int = V5E_VMEM_BYTES) -> KernelTiles:
     """Pick (tile_h, tile_w, tile_c, tile_m) for the zero-copy fused
-    kernel: minimize modeled whole-layer HBM traffic among tile points
+    kernels: minimize modeled whole-layer HBM traffic among tile points
     whose double-buffered working set fits VMEM, then snap the channel
     tiles to divisors of (C, M) as the kernels require.
 
+    ``objective`` selects the traffic term: ``"forward"`` minimizes the
+    inference pass only; ``"training"`` (default — what
+    ``ops.deform_conv`` uses, since the same resolved tiles serve the
+    custom-VJP backward kernel) minimizes the combined fwd+bwd traffic
+    of ``dcl_train_hbm_bytes`` and additionally requires the backward
+    working set (``zerocopy_bwd_vmem_bytes``) to fit VMEM.
+
     This replaces the hand-passed tile arguments of ``ops.deform_conv``
-    (Sec. 3.2 methodology, evaluated on the zero-copy traffic term).
+    (Sec. 3.2 methodology, evaluated on the zero-copy traffic model).
+    The row-tile candidate set extends to 32: per-tile halo re-reads
+    amortize with taller tiles, and the PR-2 128-channel regression
+    traced to the chooser stopping at tile_h=16 while the bench pinned
+    tile_h=8 (see EXPERIMENTS.md §Perf).
     """
+    if objective not in ("forward", "training"):
+        raise ValueError(f"unknown objective {objective!r}")
     ho, wo = out_hw(shape.h, shape.w, kernel_size=shape.kernel_size,
                     stride=shape.stride, dilation=dilation)
-    ths = sorted({min(t, max(1, ho)) for t in (1, 2, 4, 8, 16)})
+    ths = sorted({min(t, max(1, ho)) for t in (1, 2, 4, 8, 16, 32)})
     tws = sorted({min(t, max(1, wo)) for t in (8, 16, 32, 64, 128)})
     tns = sorted({_divisor_at_most(shape.c_in, cap)
                   for cap in (32, 64, 128, 256, 512, shape.c_in)})
     tms = sorted({_divisor_at_most(shape.c_out, cap)
                   for cap in (32, 64, 128, 256, shape.c_out)})
+    traffic_fn = (dcl_train_hbm_bytes if objective == "training"
+                  else dcl_total_hbm_bytes)
     best: tuple[tuple, TileConfig] | None = None
     for t_h in ths:
         for t_w in tws:
@@ -360,9 +501,12 @@ def choose_kernel_tiles(shape: LayerShape, *, batch: int = 1,
                 for t_m in tms:
                     t = TileConfig(t_h, t_w, t_n, t_m)
                     vmem = zerocopy_vmem_bytes(shape, t, dilation=dilation)
+                    if objective == "training":
+                        vmem = max(vmem, zerocopy_bwd_vmem_bytes(
+                            shape, t, dilation=dilation))
                     if vmem > vmem_budget:
                         continue
-                    traffic = dcl_total_hbm_bytes(
+                    traffic = traffic_fn(
                         shape, t, dataflow="zero_copy", batch=batch,
                         dilation=dilation)
                     # Minimize traffic; break ties toward bigger MXU tiles.

@@ -3,6 +3,10 @@
 
 * ``deform_sample``     — stage-1 bounded-halo bilinear sampling (Eq. 6)
 * ``deform_conv_fused`` — stage 1+2 fused in VMEM (beyond-paper)
+* ``deform_conv_bwd``   — fused backward (d_input / d_offsets /
+  d_weights) over the same Eq. 6 bands; wired as a ``jax.custom_vjp``
+  on ``ops.deform_conv`` so bounded training never leaves the
+  zero-copy dataflow
 
 Both DCL kernels run a zero-copy dataflow by default: the padded input
 stays whole in ANY/HBM and each (row-tile, width-tile) Eq. 6 band is

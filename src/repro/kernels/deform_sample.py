@@ -67,22 +67,24 @@ def band_geometry(*, kernel_size: int, stride: int, dilation: int,
     return hb, band_h
 
 
-def _bilinear_from_band(band, off, *, kernel_size: int, stride: int,
-                        dilation: int, offset_bound: float, tile_h: int,
-                        wo: int):
-    """Sample (tile_h, wo, K*K) positions from a VMEM band.
+def corner_geometry(off, *, kernel_size: int, stride: int, dilation: int,
+                    offset_bound: float, tile_h: int, wo: int):
+    """Bilinear corner geometry for one output tile, in band-local coords.
 
-    band: (band_h, w_pad, tc) zero-padded input rows
-    off:  (tile_h, wo, K*K, 2) raw offsets (clamped here)
-    returns (tile_h, wo, K*K, tc) interpolated values
+    off: (tile_h, wo, K*K, 2) raw offsets (clamped here to the Eq. 5 bound).
+    Returns (y0, x0, ty, tx): int32 top-left corner indices and fp32
+    fractional coefficients, each (tile_h, wo, K*K).  Shared between the
+    forward gather (``_bilinear_from_band``) and the backward kernels of
+    ``deform_conv_bwd.py`` — the same bound ``B`` that keeps forward
+    gathers in-band keeps backward scatters in-band, so both sides use
+    one geometry.
     """
     k, s, d = kernel_size, stride, dilation
     k2 = k * k
     hb = int(math.ceil(offset_bound))       # static: offset_bound is Python
-    band_h, w_pad, tc = band.shape
 
     # Positions/coefficients in fp32 (address generation is full precision
-    # even on a bf16 datapath); values accumulate in fp32, round once.
+    # even on a bf16 datapath).
     off = jnp.clip(off.astype(jnp.float32), -offset_bound, offset_bound)
 
     # Base tap positions in band-local (pre-padded) coordinates: the band
@@ -102,8 +104,23 @@ def _bilinear_from_band(band, off, *, kernel_size: int, stride: int,
     x0f = jnp.floor(pos_x)
     ty = pos_y - y0f
     tx = pos_x - x0f
-    y0 = y0f.astype(jnp.int32)
-    x0 = x0f.astype(jnp.int32)
+    return y0f.astype(jnp.int32), x0f.astype(jnp.int32), ty, tx
+
+
+def _bilinear_from_band(band, off, *, kernel_size: int, stride: int,
+                        dilation: int, offset_bound: float, tile_h: int,
+                        wo: int):
+    """Sample (tile_h, wo, K*K) positions from a VMEM band.
+
+    band: (band_h, w_pad, tc) zero-padded input rows
+    off:  (tile_h, wo, K*K, 2) raw offsets (clamped here)
+    returns (tile_h, wo, K*K, tc) interpolated values
+    """
+    k2 = kernel_size * kernel_size
+    band_h, w_pad, tc = band.shape
+    y0, x0, ty, tx = corner_geometry(
+        off, kernel_size=kernel_size, stride=stride, dilation=dilation,
+        offset_bound=offset_bound, tile_h=tile_h, wo=wo)
 
     flat = band.reshape(band_h * w_pad, tc)
     p = tile_h * wo * k2
@@ -113,6 +130,7 @@ def _bilinear_from_band(band, off, *, kernel_size: int, stride: int,
         v = jnp.take(flat, idx, axis=0)           # VMEM gather — in-band
         return v.astype(jnp.float32) * wgt.reshape(p, 1)
 
+    # Values accumulate in fp32, round once.
     out = corner(y0, x0, (1 - ty) * (1 - tx))
     out += corner(y0, x0 + 1, (1 - ty) * tx)
     out += corner(y0 + 1, x0, ty * (1 - tx))

@@ -25,9 +25,16 @@ Bounded kernels support two dataflows (``dataflow=``):
 
 ``interpret`` defaults to True off-TPU (this container is CPU-only); on
 a real TPU backend it auto-disables.
+
+The bounded ``deform_conv`` path is differentiable: it is wrapped in a
+``jax.custom_vjp`` whose backward is the fused zero-copy kernel of
+``deform_conv_bwd.py`` (d_input, d_offsets, d_weights in one band-DMA
+pass), so Eq. 5-bounded *training* also runs the zero-copy dataflow —
+never an XLA gather/scatter against HBM.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 import math
 
@@ -40,6 +47,7 @@ from .deform_sample import (band_geometry, deform_sample_banded,
                             deform_sample_zerocopy)
 from .deform_conv_fused import (deform_conv_fused_banded,
                                 deform_conv_fused_zerocopy)
+from .deform_conv_bwd import deform_conv_bwd_zerocopy
 from .matmul import matmul  # re-export  # noqa: F401
 
 Array = jax.Array
@@ -61,19 +69,34 @@ def tile_weights(w: Array, tile_c: int) -> Array:
     return wt.reshape(n_c, k2 * tile_c, m)
 
 
+def untile_weights(wt: Array, kernel_size: int) -> Array:
+    """Inverse of ``tile_weights``: (C//tc, K*K*tc, M) -> (K*K, C, M)."""
+    k2 = kernel_size * kernel_size
+    n_c, k2tc, m = wt.shape
+    tc = k2tc // k2
+    w = wt.reshape(n_c, k2, tc, m).transpose(1, 0, 2, 3)
+    return w.reshape(k2, n_c * tc, m)
+
+
 @functools.lru_cache(maxsize=256)
 def resolve_tiles(h: int, w: int, c: int, m: int, *, kernel_size: int,
                   stride: int, dilation: int, offset_bound: float,
                   tile_h: int | None, tile_w: int | None,
-                  tile_c: int | None, tile_m: int | None
+                  tile_c: int | None, tile_m: int | None,
+                  objective: str = "training"
                   ) -> tuple[int, int, int, int]:
-    """Fill unspecified tile sizes from the Sec. 3.2 chooser (zero-copy
-    traffic-minimizing, VMEM-bounded); explicit arguments win."""
+    """Fill unspecified tile sizes from the Sec. 3.2 chooser; explicit
+    arguments win.  ``objective="training"`` (the ``deform_conv``
+    default — the same resolved tiles serve the forward kernel and its
+    custom-VJP backward) minimizes combined fwd+bwd zero-copy traffic
+    under both VMEM working sets; the forward-only ``deform_sample``
+    resolves with ``objective="forward"``."""
     if None in (tile_h, tile_w, tile_c, tile_m):
         shape = LayerShape(h=h, w=w, c_in=c, c_out=m,
                            kernel_size=kernel_size, stride=stride,
                            offset_bound=offset_bound)
-        kt = choose_kernel_tiles(shape, dilation=dilation)
+        kt = choose_kernel_tiles(shape, dilation=dilation,
+                                 objective=objective)
         tile_h = tile_h or kt.tile_h
         tile_w = tile_w or kt.tile_w
         tile_c = tile_c or kt.tile_c
@@ -198,7 +221,7 @@ def deform_sample(x: Array, offsets: Array, *, kernel_size: int = 3,
     th, tw, tc, _ = resolve_tiles(
         h, w, c, c, kernel_size=kernel_size, stride=stride,
         dilation=dilation, offset_bound=offset_bound, tile_h=tile_h,
-        tile_w=tile_w, tile_c=tile_c, tile_m=c)
+        tile_w=tile_w, tile_c=tile_c, tile_m=c, objective="forward")
     th, tw = min(th, ho), min(tw, wo)
     pad_h, pad_w = (-ho) % th, (-wo) % tw
     if pad_h or pad_w:
@@ -213,6 +236,145 @@ def deform_sample(x: Array, offsets: Array, *, kernel_size: int = 3,
         dilation=dilation, offset_bound=offset_bound, tile_h=th, tile_w=tw,
         tile_c=tc, interpret=interpret)
     return patches[:, :ho, :wo]
+
+
+# ---------------------------------------------------------------------------
+# Bounded path: custom VJP over the fused kernels.
+#
+# Forward runs the zero-copy (or legacy banded) fused kernel; backward
+# runs the fused zero-copy backward kernel of ``deform_conv_bwd.py``
+# regardless of the forward dataflow (gradients are a property of the
+# math, not the dataflow — both forwards match ``ref.py`` bit-for-near).
+# Residuals are just (x, offsets, w): patches are recomputed in-kernel
+# from the Eq. 6 band, which the traffic model favors over saving the
+# (N, Ho, Wo, K^2, C) patch tensor (see ``deform_conv_bwd.py``).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class _DCSpec:
+    """Hashable static configuration of one bounded deform_conv call."""
+    kernel_size: int
+    stride: int
+    dilation: int
+    offset_bound: float
+    tile_h: int | None
+    tile_w: int | None
+    tile_c: int | None
+    tile_m: int | None
+    dataflow: str
+    interpret: bool
+
+
+def _bounded_forward(spec: _DCSpec, x: Array, offsets: Array,
+                     w: Array) -> Array:
+    ho, wo = offsets.shape[1], offsets.shape[2]
+    c, m = x.shape[-1], w.shape[-1]
+
+    if spec.dataflow == "banded":
+        th = spec.tile_h or 8
+        tc = spec.tile_c or c
+        pad_h = (-ho) % th
+        if pad_h:
+            offsets = jnp.pad(offsets, ((0, 0), (0, pad_h), (0, 0), (0, 0)))
+        bands, n_tiles = _pad_and_band(
+            x, kernel_size=spec.kernel_size, stride=spec.stride,
+            dilation=spec.dilation, offset_bound=spec.offset_bound,
+            tile_h=th, ho=ho + pad_h)
+        w_tiles = tile_weights(w.astype(x.dtype), tc)
+        y = deform_conv_fused_banded(
+            bands, offsets, w_tiles, kernel_size=spec.kernel_size,
+            stride=spec.stride, dilation=spec.dilation,
+            offset_bound=spec.offset_bound, tile_h=th, tile_c=tc,
+            tile_m=spec.tile_m, interpret=spec.interpret)
+        return y[:, :ho]
+
+    if spec.dataflow != "zero_copy":
+        raise ValueError(
+            f"unknown dataflow {spec.dataflow!r}; expected 'zero_copy' or "
+            f"'banded'")
+    th, tw, tc, tm = _spec_tiles(spec, x, offsets, w)
+    xp, offsets, w_tiled = _zerocopy_inputs(spec, x, offsets, w, th, tw, tc)
+    y = deform_conv_fused_zerocopy(
+        xp, offsets, w_tiled, kernel_size=spec.kernel_size,
+        stride=spec.stride, dilation=spec.dilation,
+        offset_bound=spec.offset_bound, tile_h=th, tile_w=tw,
+        tile_c=tc, tile_m=tm, interpret=spec.interpret)
+    return y[:, :ho, :wo]
+
+
+def _zerocopy_inputs(spec: _DCSpec, x: Array, offsets: Array, w: Array,
+                     th: int, tw: int, tc: int,
+                     extra: Array | None = None):
+    """Shared input prep of the zero-copy forward and backward kernels:
+    pad offsets (and ``extra``, the backward cotangent) to tile
+    multiples, zero-pad the input per ``_pad_zerocopy``, and block the
+    weights.  One code path so the backward's un-pad slice can never
+    disagree with the forward's padded geometry."""
+    ho, wo = offsets.shape[1], offsets.shape[2]
+    pad_h, pad_w = (-ho) % th, (-wo) % tw
+    if pad_h or pad_w:
+        offsets = jnp.pad(offsets, ((0, 0), (0, pad_h), (0, pad_w), (0, 0)))
+        if extra is not None:
+            extra = jnp.pad(extra, ((0, 0), (0, pad_h), (0, pad_w), (0, 0)))
+    xp = _pad_zerocopy(
+        x, kernel_size=spec.kernel_size, stride=spec.stride,
+        dilation=spec.dilation, offset_bound=spec.offset_bound,
+        tile_h=th, tile_w=tw, ho=ho + pad_h, wo=wo + pad_w)
+    w_tiled = tile_weights(w.astype(x.dtype), tc)
+    if extra is not None:
+        return xp, offsets, w_tiled, extra
+    return xp, offsets, w_tiled
+
+
+def _spec_tiles(spec: _DCSpec, x: Array, offsets: Array,
+                w: Array) -> tuple[int, int, int, int]:
+    """Resolve (tile_h, tile_w, tile_c, tile_m) for one call — chooser
+    defaults (combined fwd+bwd traffic), explicit spec values win, and
+    spatial tiles are clamped to the output extent."""
+    ho, wo = offsets.shape[1], offsets.shape[2]
+    th, tw, tc, tm = resolve_tiles(
+        x.shape[1], x.shape[2], x.shape[-1], w.shape[-1],
+        kernel_size=spec.kernel_size, stride=spec.stride,
+        dilation=spec.dilation, offset_bound=spec.offset_bound,
+        tile_h=spec.tile_h, tile_w=spec.tile_w, tile_c=spec.tile_c,
+        tile_m=spec.tile_m)
+    return min(th, ho), min(tw, wo), tc, tm
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _deform_conv_bounded(spec: _DCSpec, x: Array, offsets: Array,
+                         w: Array) -> Array:
+    return _bounded_forward(spec, x, offsets, w)
+
+
+def _deform_conv_bounded_fwd(spec, x, offsets, w):
+    return _bounded_forward(spec, x, offsets, w), (x, offsets, w)
+
+
+def _deform_conv_bounded_bwd(spec, res, gy):
+    x, offsets, w = res
+    n, h, w_, c = x.shape
+    ho, wo = offsets.shape[1], offsets.shape[2]
+    th, tw, tc, _ = _spec_tiles(spec, x, offsets, w)
+    xp, offsets, w_tiled, gy = _zerocopy_inputs(spec, x, offsets, w,
+                                                th, tw, tc, extra=gy)
+    dxp, doff, dwt = deform_conv_bwd_zerocopy(
+        xp, offsets, gy, w_tiled, kernel_size=spec.kernel_size,
+        stride=spec.stride, dilation=spec.dilation,
+        offset_bound=spec.offset_bound, tile_h=th, tile_w=tw, tile_c=tc,
+        interpret=spec.interpret)
+    # Un-pad: _pad_zerocopy put pad+hb zero rows/cols top-left.
+    p0 = spec.dilation * (spec.kernel_size // 2) \
+        + int(math.ceil(spec.offset_bound))
+    dx = dxp[:, p0:p0 + h, p0:p0 + w_]
+    doff = doff[:, :ho, :wo]
+    dw = untile_weights(dwt, spec.kernel_size)
+    return (dx.astype(x.dtype), doff.astype(res[1].dtype),
+            dw.astype(w.dtype))
+
+
+_deform_conv_bounded.defvjp(_deform_conv_bounded_fwd,
+                            _deform_conv_bounded_bwd)
 
 
 @functools.partial(
@@ -231,7 +393,10 @@ def deform_conv(x: Array, offsets: Array, w: Array, *, kernel_size: int = 3,
 
     x: (N, H, W, C); offsets: (N, Ho, Wo, 2*K*K); w: (K*K, C, M).
     Returns (N, Ho, Wo, M).  Unspecified tile sizes are resolved by the
-    Sec. 3.2 chooser against the zero-copy traffic model.
+    Sec. 3.2 chooser against the combined fwd+bwd zero-copy traffic
+    model.  The bounded path is differentiable end-to-end: ``jax.grad``
+    routes through the fused backward kernel of ``deform_conv_bwd.py``
+    (a ``jax.custom_vjp``), never through an XLA gather/scatter.
     """
     n, h, w_, c = x.shape
     ho, wo = offsets.shape[1], offsets.shape[2]
@@ -249,43 +414,8 @@ def deform_conv(x: Array, offsets: Array, w: Array, *, kernel_size: int = 3,
 
     if interpret is None:
         interpret = default_interpret()
-
-    if dataflow == "banded":
-        th = tile_h or 8
-        tc = tile_c or c
-        pad_h = (-ho) % th
-        if pad_h:
-            offsets = jnp.pad(offsets, ((0, 0), (0, pad_h), (0, 0), (0, 0)))
-        bands, n_tiles = _pad_and_band(
-            x, kernel_size=kernel_size, stride=stride, dilation=dilation,
-            offset_bound=offset_bound, tile_h=th, ho=ho + pad_h)
-        w_tiles = tile_weights(w.astype(x.dtype), tc)
-        y = deform_conv_fused_banded(
-            bands, offsets, w_tiles, kernel_size=kernel_size, stride=stride,
-            dilation=dilation, offset_bound=offset_bound, tile_h=th,
-            tile_c=tc, tile_m=tile_m, interpret=interpret)
-        return y[:, :ho]
-
-    if dataflow != "zero_copy":
-        raise ValueError(
-            f"unknown dataflow {dataflow!r}; expected 'zero_copy' or "
-            f"'banded'")
-    th, tw, tc, tm = resolve_tiles(
-        h, w_, c, m, kernel_size=kernel_size, stride=stride,
-        dilation=dilation, offset_bound=offset_bound, tile_h=tile_h,
-        tile_w=tile_w, tile_c=tile_c, tile_m=tile_m)
-    th, tw = min(th, ho), min(tw, wo)
-    pad_h, pad_w = (-ho) % th, (-wo) % tw
-    if pad_h or pad_w:
-        offsets = jnp.pad(offsets,
-                          ((0, 0), (0, pad_h), (0, pad_w), (0, 0)))
-    xp = _pad_zerocopy(
-        x, kernel_size=kernel_size, stride=stride, dilation=dilation,
-        offset_bound=offset_bound, tile_h=th, tile_w=tw,
-        ho=ho + pad_h, wo=wo + pad_w)
-    w_tiled = tile_weights(w.astype(x.dtype), tc)
-    y = deform_conv_fused_zerocopy(
-        xp, offsets, w_tiled, kernel_size=kernel_size, stride=stride,
-        dilation=dilation, offset_bound=offset_bound, tile_h=th, tile_w=tw,
-        tile_c=tc, tile_m=tm, interpret=interpret)
-    return y[:, :ho, :wo]
+    spec = _DCSpec(kernel_size=kernel_size, stride=stride, dilation=dilation,
+                   offset_bound=offset_bound, tile_h=tile_h, tile_w=tile_w,
+                   tile_c=tile_c, tile_m=tile_m, dataflow=dataflow,
+                   interpret=interpret)
+    return _deform_conv_bounded(spec, x, offsets, w)

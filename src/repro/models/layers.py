@@ -516,8 +516,14 @@ def dcl_apply(params: Mapping[str, Array], x: Array, *,
     the fused Pallas kernel (``repro.kernels.ops.deform_conv``) under
     the requested dataflow — ``"zero_copy"`` (double-buffered in-kernel
     band DMAs, the default) or ``"banded"`` (legacy HBM-materialized
-    bands).  Tile sizes come from the Sec. 3.2 chooser.  The pure-JAX
-    gather path (``dcl_forward``) is the training reference.
+    bands).  Tile sizes come from the Sec. 3.2 chooser (combined
+    fwd+bwd traffic objective).  Since PR 2 the kernel path is fully
+    differentiable — ``jax.grad`` routes through the fused backward
+    kernel (``kernels.deform_conv_bwd``, a ``jax.custom_vjp``), so
+    bounded *training* runs zero-copy end-to-end; the pure-JAX gather
+    path (``dcl_forward``) remains the parity reference.  ``o_max``
+    (the Eq. 5 statistic) is computed from the raw offsets outside the
+    kernel, so the regularizer gradient flows through XLA either way.
     """
     from repro.core.deform_conv import (DCLConfig, conv2d, dcl_forward,
                                         offset_abs_max)

@@ -12,8 +12,11 @@ DCLs* under the Eq. 5 regularizer, which this model exposes per layer.
 
 Norms are GroupNorm(32) (batch-stat-free, standard for detection).
 Layout NHWC.  ``use_kernel=True`` routes every DCL through the Pallas
-fused kernel (``repro.kernels.ops.deform_conv``); the default pure-JAX
-path is the training reference.
+fused kernel (``repro.kernels.ops.deform_conv``) — including under
+``jax.grad``: since PR 2 the bounded kernel path carries a custom VJP
+(``kernels.deform_conv_bwd``), so ``train_loss`` with a kernel-path
+config trains through the zero-copy Pallas dataflow in both
+directions.  The pure-JAX path remains the parity reference.
 """
 from __future__ import annotations
 

@@ -18,6 +18,7 @@ Production posture:
 from __future__ import annotations
 
 import dataclasses
+import statistics
 import time
 from typing import Any, Callable
 
@@ -59,6 +60,10 @@ class Trainer:
         self.fault_hook = fault_hook
         self.ckpt = CheckpointManager(config.ckpt_dir, keep=config.keep)
         self.history: list[dict] = []
+        # Wall time of every completed step (not just logged ones) —
+        # feeds the §Training-throughput comparison of EXPERIMENTS.md
+        # (XLA-reference vs Pallas-kernel-path DCL training).
+        self.step_seconds: list[float] = []
 
         with use_rules(mesh=mesh):
             self.param_specs = param_specs
@@ -124,6 +129,14 @@ class Trainer:
         self.step = int(restored["step"])
         return True
 
+    def median_step_sec(self, *, skip_first: int = 1) -> float:
+        """Median wall time per completed step, excluding the first
+        ``skip_first`` steps (compilation).  nan if nothing completed."""
+        ts = self.step_seconds[skip_first:]
+        if not ts:
+            return float("nan")
+        return statistics.median(ts)
+
     # -- main loop ----------------------------------------------------
     def _device_batch(self, step: int):
         batch = self.batch_fn(step)
@@ -151,6 +164,7 @@ class Trainer:
                         jnp.asarray(self.step), batch)
                     loss = float(loss)
                     dt = time.time() - t0
+                    self.step_seconds.append(dt)
                     if self.step % cfg.log_every == 0:
                         self.history.append(
                             {"step": self.step, "loss": loss,
