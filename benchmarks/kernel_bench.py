@@ -17,6 +17,12 @@ Backward entries (``us_bwd_*``) time one full ``jax.vjp`` pullback —
 forward + the fused backward kernel of ``kernels.deform_conv_bwd`` for
 the bounded path, forward + XLA autodiff for the unbounded gather
 reference — i.e. the per-layer cost a training step actually pays.
+
+int8 entries (``us_q_*`` / ``hbm_bytes_q_*``) time the quantized
+zero-copy kernel (``ops.deform_conv(precision="int8")``, dynamic
+absmax scales + fused dequant included in the timed call) and record
+the modeled quantized-dataflow traffic — the trajectory JSON carries
+both precisions so the >= 3x int8 traffic drop is tracked across PRs.
 """
 from __future__ import annotations
 
@@ -52,10 +58,19 @@ def _grad_fn(forward):
         lambda x, o, w: jnp.sum(forward(x, o, w)), argnums=(0, 1, 2)))
 
 
-def records(*, smoke: bool = False) -> list[dict]:
+def records(*, smoke: bool = False, precision: str = "both") -> list[dict]:
     """Structured per-kernel records: forward and backward wall time
     (interpret mode, best-of-N) and the modeled HBM traffic of both DCL
-    dataflows for the measured shape."""
+    dataflows for the measured shape.
+
+    ``precision`` selects the datapaths: ``"fp32"`` (the PR-1/2
+    records), ``"int8"`` (the quantized zero-copy kernel — ``us_q_*``
+    wall time and ``hbm_bytes_q_*`` modeled traffic, dequant epilogue
+    included in the timed call), or ``"both"`` (one record carrying
+    both sets, the default — what CI uploads).
+    """
+    if precision not in ("fp32", "int8", "both"):
+        raise ValueError(f"unknown precision {precision!r}")
     out: list[dict] = []
     key = jax.random.PRNGKey(0)
     shapes = [(16, 16, 32, 32)] if smoke else \
@@ -66,50 +81,68 @@ def records(*, smoke: bool = False) -> list[dict]:
                                  (1, h, w, 18), jnp.float32) * 2
         wgt = jax.random.normal(jax.random.fold_in(key, 2),
                                 (9, c, m), jnp.float32) * 0.1
-        # zero-copy runs at the Sec. 3.2 chooser's own tiles (the
-        # product path); banded keeps its legacy hand-tiled default.
-        # reps=7: these two records feed run.py's regression gate.
-        t_zero = _time(lambda a, b, ww: ops.deform_conv(
-            a, b, ww, offset_bound=2.0, dataflow="zero_copy"),
-            x, offs, wgt, reps=7)
-        t_banded = _time(lambda a, b, ww: ops.deform_conv(
-            a, b, ww, offset_bound=2.0, tile_h=BANDED_TILE_H,
-            dataflow="banded"), x, offs, wgt, reps=7)
-        t_unbounded = _time(lambda a, b, ww: ops.deform_conv(
-            a, b, ww), x, offs, wgt)
-        t_bwd_zero = _time(_grad_fn(lambda a, b, ww: ops.deform_conv(
-            a, b, ww, offset_bound=2.0, dataflow="zero_copy")),
-            x, offs, wgt)
-        t_bwd_xla = _time(_grad_fn(lambda a, b, ww: ref.deform_conv_fused_ref(
-            a, b, ww, offset_bound=2.0)), x, offs, wgt)
         # Traffic model at the PR-1 tile_h=8 convention so the recorded
         # ratios stay comparable across BENCH_kernels.json revisions
-        # (wall times above use the chooser's own tiles — recorded
+        # (wall times use the chooser's own tiles — recorded
         # separately as tiles_timed_zero_copy).
         rep = dataflow_traffic_report(h=h, w=w, c=c, m=m, batch=1,
                                       tile_h=BANDED_TILE_H, offset_bound=2.0)
         kt = choose_kernel_tiles(
             LayerShape(h=h, w=w, c_in=c, c_out=m, offset_bound=2.0), batch=1)
-        out.append({
+        rec: dict = {
             "name": f"deform_conv_fused_{c}c",
-            "us_zero_copy": t_zero,
-            "us_banded": t_banded,
-            "us_unbounded_xla": t_unbounded,
-            "us_bwd_zero_copy": t_bwd_zero,
-            "us_bwd_xla_ref": t_bwd_xla,
-            "hbm_bytes_zero_copy": rep["zero_copy_bytes"],
-            "hbm_bytes_materialized_band": rep["materialized_band_bytes"],
-            "hbm_traffic_ratio": rep["ratio"],
-            "hbm_bytes_bwd_zero_copy": rep["zero_copy_bwd_bytes"],
-            "hbm_bytes_bwd_materialized_band":
-                rep["materialized_band_bwd_bytes"],
-            "hbm_bwd_traffic_ratio": rep["bwd_ratio"],
-            "hbm_train_traffic_ratio": rep["train_ratio"],
             "tiles_traffic_model": str(rep["tiles"]),
             "tiles_timed_zero_copy":
                 f"({kt.tile_h},{kt.tile_w},{kt.tile_c},{kt.tile_m})",
             "tiles_timed_banded": f"tile_h={BANDED_TILE_H}",
-        })
+        }
+        if precision in ("fp32", "both"):
+            # zero-copy runs at the Sec. 3.2 chooser's own tiles (the
+            # product path); banded keeps its legacy hand-tiled default.
+            # reps=7: these two records feed run.py's regression gate.
+            rec.update({
+                "us_zero_copy": _time(lambda a, b, ww: ops.deform_conv(
+                    a, b, ww, offset_bound=2.0, dataflow="zero_copy"),
+                    x, offs, wgt, reps=7),
+                "us_banded": _time(lambda a, b, ww: ops.deform_conv(
+                    a, b, ww, offset_bound=2.0, tile_h=BANDED_TILE_H,
+                    dataflow="banded"), x, offs, wgt, reps=7),
+                "us_unbounded_xla": _time(lambda a, b, ww: ops.deform_conv(
+                    a, b, ww), x, offs, wgt),
+                "us_bwd_zero_copy": _time(
+                    _grad_fn(lambda a, b, ww: ops.deform_conv(
+                        a, b, ww, offset_bound=2.0, dataflow="zero_copy")),
+                    x, offs, wgt),
+                "us_bwd_xla_ref": _time(
+                    _grad_fn(lambda a, b, ww: ref.deform_conv_fused_ref(
+                        a, b, ww, offset_bound=2.0)), x, offs, wgt),
+                "hbm_bytes_zero_copy": rep["zero_copy_bytes"],
+                "hbm_bytes_materialized_band":
+                    rep["materialized_band_bytes"],
+                "hbm_traffic_ratio": rep["ratio"],
+                "hbm_bytes_bwd_zero_copy": rep["zero_copy_bwd_bytes"],
+                "hbm_bytes_bwd_materialized_band":
+                    rep["materialized_band_bwd_bytes"],
+                "hbm_bwd_traffic_ratio": rep["bwd_ratio"],
+                "hbm_train_traffic_ratio": rep["train_ratio"],
+            })
+        if precision in ("int8", "both"):
+            ktq = choose_kernel_tiles(
+                LayerShape(h=h, w=w, c_in=c, c_out=m, offset_bound=2.0),
+                batch=1, dtype="int8", objective="forward")
+            rec.update({
+                "us_q_zero_copy": _time(lambda a, b, ww: ops.deform_conv(
+                    a, b, ww, offset_bound=2.0, precision="int8"),
+                    x, offs, wgt),
+                "hbm_bytes_q_zero_copy": rep["zero_copy_bytes_q"],
+                "hbm_bytes_q_total": rep["zero_copy_total_bytes_q"],
+                "hbm_q_traffic_ratio_vs_fp32": rep["q_ratio"],
+                "hbm_q_total_ratio_vs_fp32": rep["q_total_ratio"],
+                "tiles_timed_int8":
+                    f"({ktq.tile_h},{ktq.tile_w},{ktq.tile_c},"
+                    f"{ktq.tile_m})",
+            })
+        out.append(rec)
     return out
 
 
@@ -151,7 +184,7 @@ def train_step_records() -> list[dict]:
     return out
 
 
-def run(*, smoke: bool = False,
+def run(*, smoke: bool = False, precision: str = "both",
         kernel_records: list[dict] | None = None) -> list[str]:
     rows = []
     key = jax.random.PRNGKey(0)
@@ -159,23 +192,34 @@ def run(*, smoke: bool = False,
     # (pass kernel_records to avoid re-timing — run.py shares one
     # records() call between the CSV rows and BENCH_kernels.json)
     for r in kernel_records if kernel_records is not None \
-            else records(smoke=smoke):
+            else records(smoke=smoke, precision=precision):
         if "us_median_step" in r:
             rows.append(f"kernel/{r['name']},{r['us_median_step']:.0f},"
                         f"median_of_{r['steps']}_steps")
             continue
-        rows.append(
-            f"kernel/{r['name']},{r['us_zero_copy']:.0f},"
-            f"interpret-mode; banded={r['us_banded']:.0f}us;"
-            f"unbounded_xla={r['us_unbounded_xla']:.0f}us;"
-            f"bwd_zero_copy={r['us_bwd_zero_copy']:.0f}us;"
-            f"bwd_xla_ref={r['us_bwd_xla_ref']:.0f}us;"
-            f"hbm_model_zero_copy={r['hbm_bytes_zero_copy'] / 1e6:.2f}MB;"
-            f"hbm_model_banded="
-            f"{r['hbm_bytes_materialized_band'] / 1e6:.2f}MB;"
-            f"traffic_ratio={r['hbm_traffic_ratio']:.2f}x;"
-            f"bwd_traffic_ratio={r['hbm_bwd_traffic_ratio']:.2f}x;"
-            f"train_traffic_ratio={r['hbm_train_traffic_ratio']:.2f}x")
+        if "us_zero_copy" in r:
+            rows.append(
+                f"kernel/{r['name']},{r['us_zero_copy']:.0f},"
+                f"interpret-mode; banded={r['us_banded']:.0f}us;"
+                f"unbounded_xla={r['us_unbounded_xla']:.0f}us;"
+                f"bwd_zero_copy={r['us_bwd_zero_copy']:.0f}us;"
+                f"bwd_xla_ref={r['us_bwd_xla_ref']:.0f}us;"
+                f"hbm_model_zero_copy={r['hbm_bytes_zero_copy'] / 1e6:.2f}MB;"
+                f"hbm_model_banded="
+                f"{r['hbm_bytes_materialized_band'] / 1e6:.2f}MB;"
+                f"traffic_ratio={r['hbm_traffic_ratio']:.2f}x;"
+                f"bwd_traffic_ratio={r['hbm_bwd_traffic_ratio']:.2f}x;"
+                f"train_traffic_ratio={r['hbm_train_traffic_ratio']:.2f}x")
+        if "us_q_zero_copy" in r:
+            rows.append(
+                f"kernel/{r['name']}_int8,{r['us_q_zero_copy']:.0f},"
+                f"interpret-mode; "
+                f"hbm_model_q={r['hbm_bytes_q_zero_copy'] / 1e6:.2f}MB;"
+                f"q_traffic_ratio_vs_fp32="
+                f"{r['hbm_q_traffic_ratio_vs_fp32']:.2f}x;"
+                f"q_total_ratio_vs_fp32="
+                f"{r['hbm_q_total_ratio_vs_fp32']:.2f}x;"
+                f"tiles_int8={r['tiles_timed_int8']}")
     # flash attention kernel (interpret) vs dense reference
     from repro.kernels.flash_attention import flash_attention
     from repro.kernels.ref import flash_attention_ref

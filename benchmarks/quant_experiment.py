@@ -1,0 +1,100 @@
+"""EXPERIMENTS.md §Quantization: QAT-vs-PTQ sweep on the miniature task.
+
+Trains the miniature ResNet-DCN detector twice (fp32 and QAT fake-quant,
+both through the Pallas kernel path), calibrates scale tables (absmax +
+percentile observers), and reports held-out detection loss under fp32
+and int8 evaluation for each recipe — the numbers in the §Quantization
+table.  Run with:
+
+    PYTHONPATH=src:. python benchmarks/quant_experiment.py [--steps 30]
+
+Interpret-mode, a few minutes on CPU.  Not part of ``run.py``'s smoke
+path (training is too slow for the < 1 min budget).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--eval-batches", type=int, default=4)
+    args = ap.parse_args(argv)
+
+    from repro.data import DetectionDataConfig, detection_batch
+    from repro.models import resnet_dcn as R
+    from repro.optim import constant, sgd
+    from repro.quant import calibrate_resnet_dcn
+    from repro.train import Trainer, TrainerConfig
+
+    cfg = R.ResNetDCNConfig(
+        stage_sizes=(1, 1, 1, 1), widths=(16, 32, 64, 128), stem_width=8,
+        num_dcn=2, num_classes=4, img_size=32, offset_bound=2.0,
+        use_kernel=True)
+    data = DetectionDataConfig(img_size=32, global_batch=2, num_classes=4,
+                               seed=3)
+
+    def train(cfg_train, tag):
+        params = R.init_params(jax.random.PRNGKey(0), cfg)
+        with tempfile.TemporaryDirectory() as tmp:
+            tr = Trainer(
+                loss_fn=lambda p, b: R.train_loss(p, cfg_train, b, lam=0.1),
+                params=params,
+                optimizer=sgd(constant(0.05), momentum=0.9),
+                mesh=None, param_specs=None,
+                batch_fn=lambda s: {k: jnp.asarray(v) for k, v in
+                                    detection_batch(data, s).items()},
+                config=TrainerConfig(total_steps=args.steps,
+                                     ckpt_every=10_000, ckpt_dir=tmp,
+                                     log_every=10))
+            tr.run()
+        print(f"quant/train_{tag},{tr.median_step_sec() * 1e6:.0f},"
+              f"median_step_us over {args.steps} steps")
+        return tr.params
+
+    def eval_loss(params, cfg_eval, scales=None):
+        losses = []
+        for i in range(1000, 1000 + args.eval_batches):
+            b = {k: jnp.asarray(v) for k, v in
+                 detection_batch(data, i).items()}
+            out, _ = R.forward(params, cfg_eval, b["images"],
+                               quant_scales=scales)
+            losses.append(float(R.detection_loss(out, b)[0]))
+        return float(np.mean(losses))
+
+    cfg_qat = dataclasses.replace(cfg, quant="qat")
+    cfg_int8 = dataclasses.replace(cfg, quant="int8")
+    p_fp = train(cfg, "fp32")
+    p_qat = train(cfg_qat, "qat")
+
+    cal = [detection_batch(data, i)["images"] for i in range(4)]
+    tab_fp = calibrate_resnet_dcn(p_fp, cfg, cal)
+    tab_fp_p = calibrate_resnet_dcn(p_fp, cfg, cal, observer="percentile",
+                                    percentile=99.9)
+    tab_qat = calibrate_resnet_dcn(p_qat, cfg, cal)
+
+    rows = [
+        ("fp32_trained_fp32_eval", eval_loss(p_fp, cfg)),
+        ("fp32_trained_ptq_int8_absmax", eval_loss(p_fp, cfg_int8, tab_fp)),
+        ("fp32_trained_ptq_int8_p99.9", eval_loss(p_fp, cfg_int8, tab_fp_p)),
+        ("qat_trained_fp32_eval", eval_loss(p_qat, cfg)),
+        ("qat_trained_int8_eval_absmax", eval_loss(p_qat, cfg_int8,
+                                                   tab_qat)),
+    ]
+    for name, loss in rows:
+        print(f"quant/{name},0,heldout_detection_loss={loss:.4f}")
+    print("quant/calibration,0," + ";".join(
+        f"{k}:absmax={tab_fp[k]['x_scale']:.5f}:"
+        f"p99.9={tab_fp_p[k]['x_scale']:.5f}"
+        for k in sorted(tab_fp) if k != "_meta"))
+
+
+if __name__ == "__main__":
+    main()

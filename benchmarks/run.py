@@ -31,12 +31,15 @@ import sys
 import traceback
 
 
-def write_kernel_json(path: str, recs: list[dict], *, smoke: bool) -> None:
+def write_kernel_json(path: str, recs: list[dict], *, smoke: bool,
+                      precision: str = "both") -> None:
     payload = {
         "smoke": smoke,
+        "precision": precision,
         "note": "wall times are interpret-mode (CPU, best-of-N) — scaling "
                 "only; us_bwd_* time one fwd+vjp pullback; hbm_bytes_* are "
-                "the analytic dataflow model (tile_h=8 convention)",
+                "the analytic dataflow model (tile_h=8 convention); "
+                "us_q_*/hbm_bytes_q_* are the int8 zero-copy datapath",
         "kernels": recs,
     }
     with open(path, "w") as f:
@@ -59,6 +62,8 @@ def gate_zero_copy_regression(recs: list[dict]) -> int:
     for r in recs:
         if not r.get("name", "").startswith("deform_conv_fused_"):
             continue
+        if "us_zero_copy" not in r:      # int8-only record: no fp32 pair
+            continue
         zc, banded = r["us_zero_copy"], r["us_banded"]
         ok = zc <= banded * GATE_NOISE_TOLERANCE
         print(f"bench/gate_{r['name']},{zc:.0f},"
@@ -73,6 +78,10 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="kernel section only, reduced shapes (< 1 min)")
+    ap.add_argument("--precision", default="both",
+                    choices=("fp32", "int8", "both"),
+                    help="DCL datapaths to bench: the fp32 kernels, the "
+                         "int8 quantized kernel, or both (default)")
     ap.add_argument("--out", default=os.path.dirname(os.path.abspath(__file__)),
                     help="directory for BENCH_kernels.json")
     args = ap.parse_args(argv)
@@ -83,10 +92,12 @@ def main(argv=None) -> None:
     kernel_recs: list[dict] = []
 
     def kernel_section():
-        kernel_recs.extend(kernel_bench.records(smoke=args.smoke))
+        kernel_recs.extend(kernel_bench.records(smoke=args.smoke,
+                                                precision=args.precision))
         if not args.smoke:
             kernel_recs.extend(kernel_bench.train_step_records())
-        return kernel_bench.run(smoke=args.smoke, kernel_records=kernel_recs)
+        return kernel_bench.run(smoke=args.smoke, precision=args.precision,
+                                kernel_records=kernel_recs)
 
     if args.smoke:
         sections = [("kernel", kernel_section)]
@@ -111,10 +122,12 @@ def main(argv=None) -> None:
 
     try:
         if not kernel_recs:
-            kernel_recs = kernel_bench.records(smoke=args.smoke)
+            kernel_recs = kernel_bench.records(smoke=args.smoke,
+                                               precision=args.precision)
         os.makedirs(args.out, exist_ok=True)
         write_kernel_json(os.path.join(args.out, "BENCH_kernels.json"),
-                          kernel_recs, smoke=args.smoke)
+                          kernel_recs, smoke=args.smoke,
+                          precision=args.precision)
         failures += gate_zero_copy_regression(kernel_recs)
     except Exception:  # noqa: BLE001
         failures += 1

@@ -241,6 +241,15 @@ def dataflow_traffic_report(*, h: int = 64, w: int = 64, c: int = 128,
     PR 2 the *backward* traffic of both dataflows (``bwd_ratio``, from
     ``tiling.dcl_backward_hbm_bytes``) plus the combined fwd+bwd
     training traffic (``train_ratio``, this PR's >= 2x acceptance gate).
+
+    int8 records (``*_q`` keys): the quantized zero-copy datapath
+    (``kernels/deform_conv_q.py``) streams the input band and weight
+    blocks at 1 byte/elem while offsets and the dequantized output stay
+    fp32.  ``q_ratio`` (input dataflow, fp32 zero-copy over int8
+    zero-copy — 4x at equal tiles, the Eq. 6 band density argument) is
+    this PR's >= 3x acceptance gate; ``q_total_ratio`` is the honest
+    whole-layer number including the fp32 offset/output terms.
+    ``tiles_int8`` reports what the dtype-aware chooser would run.
     """
     shape = LayerShape(h=h, w=w, c_in=c, c_out=m, kernel_size=kernel_size,
                        stride=stride, offset_bound=offset_bound)
@@ -251,10 +260,21 @@ def dataflow_traffic_report(*, h: int = 64, w: int = 64, c: int = 128,
     else:
         tile_c, tile_m = c, m
     t = TileConfig(t_h=tile_h, t_w=tile_w, t_n=tile_c, t_m=tile_m)
+    kt_q = choose_kernel_tiles(shape, batch=batch, dtype="int8",
+                               objective="forward")
     zero = dcl_dataflow_hbm_bytes(shape, t, dataflow="zero_copy",
                                   batch=batch, bytes_per_elem=bytes_per_elem)
     band = dcl_dataflow_hbm_bytes(shape, t, dataflow="materialized_band",
                                   batch=batch, bytes_per_elem=bytes_per_elem)
+    zero_q = dcl_dataflow_hbm_bytes(shape, t, dataflow="zero_copy",
+                                    batch=batch, bytes_per_elem=1)
+    total_q = dcl_total_hbm_bytes(shape, t, dataflow="zero_copy",
+                                  batch=batch, bytes_per_elem=1,
+                                  offset_bytes_per_elem=4,
+                                  out_bytes_per_elem=4)
+    zero_total = dcl_total_hbm_bytes(shape, t, dataflow="zero_copy",
+                                     batch=batch,
+                                     bytes_per_elem=bytes_per_elem)
     zero_bwd = dcl_backward_hbm_bytes(shape, t, dataflow="zero_copy",
                                       batch=batch,
                                       bytes_per_elem=bytes_per_elem)
@@ -278,12 +298,15 @@ def dataflow_traffic_report(*, h: int = 64, w: int = 64, c: int = 128,
         "zero_copy_train_bytes": zero_train,
         "materialized_band_train_bytes": band_train,
         "train_ratio": band_train / max(zero_train, 1),
-        "zero_copy_total_bytes": dcl_total_hbm_bytes(
-            shape, t, dataflow="zero_copy", batch=batch,
-            bytes_per_elem=bytes_per_elem),
+        "zero_copy_total_bytes": zero_total,
         "materialized_band_total_bytes": dcl_total_hbm_bytes(
             shape, t, dataflow="materialized_band", batch=batch,
             bytes_per_elem=bytes_per_elem),
+        "zero_copy_bytes_q": zero_q,
+        "q_ratio": zero / max(zero_q, 1),
+        "zero_copy_total_bytes_q": total_q,
+        "q_total_ratio": zero_total / max(total_q, 1),
+        "tiles_int8": kt_q,
     }
 
 

@@ -25,6 +25,7 @@ VMEM bound and MXU alignment (8 sublanes x 128 lanes).
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import Iterable
 
@@ -38,6 +39,23 @@ V5E_HBM_BW = 819e9                        # 819 GB/s
 V5E_ICI_BW = 50e9                         # ~50 GB/s per link
 MXU_LANE = 128                            # lane (minor) alignment
 MXU_SUBLANE = 8                           # sublane alignment (fp32)
+
+# Datapath element widths understood by the dtype-aware budgets below.
+# ``int8`` is the quantized DCL datapath (``repro.quant``): every VMEM
+# byte holds 4x more of the Eq. 6 band than fp32, so the same budget
+# admits wider tiles — the paper's fixed-point argument on TPU.
+DTYPE_BYTES = {"int8": 1, "bf16": 2, "fp32": 4}
+
+
+def dtype_bytes(dtype) -> int:
+    """Bytes per element of a datapath dtype: accepts the string names
+    of ``DTYPE_BYTES`` or anything ``jnp.dtype`` understands."""
+    if dtype is None:
+        raise ValueError("dtype is None; pass 'int8' | 'bf16' | 'fp32'")
+    if isinstance(dtype, str) and dtype in DTYPE_BYTES:
+        return DTYPE_BYTES[dtype]
+    import numpy as np
+    return int(np.dtype(dtype).itemsize)
 
 
 # ---------------------------------------------------------------------------
@@ -274,14 +292,24 @@ def dcl_dataflow_hbm_bytes(shape: LayerShape, t: TileConfig, *,
 
 def dcl_total_hbm_bytes(shape: LayerShape, t: TileConfig, *,
                         dataflow: str = "zero_copy", batch: int = 1,
-                        dilation: int = 1, bytes_per_elem: int = 4) -> int:
+                        dilation: int = 1, bytes_per_elem: int = 4,
+                        offset_bytes_per_elem: int | None = None,
+                        out_bytes_per_elem: int | None = None) -> int:
     """Whole-layer HBM traffic: input dataflow + offsets + weights + out.
 
     Weight blocks are re-fetched per (row-tile, width-tile) because the
     C/M grid axes cycle inside each spatial tile (same for both
     dataflows); offsets and output travel once.
+
+    ``offset_bytes_per_elem`` / ``out_bytes_per_elem`` override the
+    element width of the offset planes and the output tensor — the int8
+    datapath keeps both at fp32 (address generation is full precision
+    and the fused dequant epilogue emits fp32) while the input band and
+    weight blocks travel at 1 byte/elem.
     """
     k2 = shape.kernel_size ** 2
+    off_b = offset_bytes_per_elem or bytes_per_elem
+    out_b = out_bytes_per_elem or bytes_per_elem
     ho, wo = out_hw(shape.h, shape.w, kernel_size=shape.kernel_size,
                     stride=shape.stride, dilation=dilation)
     h_tiles = -(-ho // t.t_h)
@@ -289,10 +317,10 @@ def dcl_total_hbm_bytes(shape: LayerShape, t: TileConfig, *,
     inp = dcl_dataflow_hbm_bytes(shape, t, dataflow=dataflow, batch=batch,
                                  dilation=dilation,
                                  bytes_per_elem=bytes_per_elem)
-    offs = batch * ho * wo * 2 * k2 * bytes_per_elem
+    offs = batch * ho * wo * 2 * k2 * off_b
     wgt = batch * h_tiles * w_tiles * k2 * shape.c_in * shape.c_out \
         * bytes_per_elem
-    out = batch * ho * wo * shape.c_out * bytes_per_elem
+    out = batch * ho * wo * shape.c_out * out_b
     return inp + offs + wgt + out
 
 
@@ -348,23 +376,29 @@ def dcl_backward_hbm_bytes(shape: LayerShape, t: TileConfig, *,
         # cotangent tile is fetched once per spatial tile (its
         # BlockSpec index is constant in the C-chunk axis), the weight
         # block per C-chunk step, and the fp32 d_weights accumulator
-        # flushes every step (interpret-safe cadence — see ROADMAP
-        # "d_weights flush").
+        # flushes once per C-chunk block on the LAST spatial grid step
+        # (the kernel keeps the every-step flush only under interpret
+        # mode; see ``deform_conv_bwd._bwd_zerocopy_kernel``) — the
+        # h_tiles*w_tiles*batch over-flush factor of the PR-2 cadence
+        # is gone: the last-step condition includes the batch grid
+        # axis, so dw_writes is a whole-layer constant, NOT per-batch.
         g_reads = ho * wo * m
         w_reads = h_tiles * w_tiles * k2 * c * m
-        dw_writes = h_tiles * w_tiles * k2 * c * m
+        dw_writes = k2 * c * m
         band_w = band_extent(t.t_w, kernel_size=k, stride=s,
                              dilation=dilation, offset_bound=b)
         band_elems = h_tiles * w_tiles * band_h * band_w * c
         inp = band_elems          # recompute read
         dx_rmw = 2 * band_elems   # d_input band read + write per step
-        return batch * (inp + dx_rmw + g_reads + w_reads + dw_writes
-                        + doff_writes) * bytes_per_elem
+        return (batch * (inp + dx_rmw + g_reads + w_reads + doff_writes)
+                + dw_writes) * bytes_per_elem
     if dataflow == "materialized_band":
         # XLA autodiff of the two-stage reference is NOT spatially
         # tiled: it reads g twice (d_weights and d_patches einsums),
-        # reads w and writes dw once — charged at those once-through
-        # sizes, not the fused kernel's per-tile re-fetch cadence.
+        # reads w and writes dw once *per layer* (the einsum VJP
+        # contracts the batch axis) — charged at those once-through
+        # sizes outside the batch multiplier, not the fused kernel's
+        # per-tile re-fetch cadence.
         g_reads = 2 * ho * wo * m
         w_reads = k2 * c * m
         dw_writes = k2 * c * m
@@ -378,8 +412,8 @@ def dcl_backward_hbm_bytes(shape: LayerShape, t: TileConfig, *,
         # two-stage patch round-trip: patch residual read + d_patches
         # written by the einsum VJP + read by the sampling VJP
         patches = 3 * ho * wo * k2 * c
-        return batch * (inp + dx_bands + patches + g_reads + w_reads
-                        + dw_writes + doff_writes) * bytes_per_elem
+        return (batch * (inp + dx_bands + patches + g_reads + doff_writes)
+                + w_reads + dw_writes) * bytes_per_elem
     raise ValueError(f"unknown dataflow {dataflow!r}")
 
 
@@ -397,11 +431,20 @@ def dcl_train_hbm_bytes(shape: LayerShape, t: TileConfig, *,
 
 
 def zerocopy_vmem_bytes(shape: LayerShape, t: TileConfig, *,
-                        dilation: int = 1, bytes_per_elem: int = 2) -> int:
+                        dilation: int = 1, bytes_per_elem: int = 2,
+                        aux_bytes_per_elem: int | None = None) -> int:
     """VMEM working set of the zero-copy fused kernel: double-buffered
     Eq. 6 (band_h, band_w) input scratch + weight block + offsets block
-    + fp32 accumulator + output tile."""
+    + fp32/int32 accumulator + output tile.
+
+    ``aux_bytes_per_elem`` sizes the offsets block and the output tile
+    separately from the datapath — the int8 kernel keeps both fp32
+    (addresses are full precision; the dequant epilogue emits fp32), so
+    the dtype-aware chooser passes 4 there while the band and weight
+    blocks shrink to 1 byte/elem.
+    """
     k2 = shape.kernel_size ** 2
+    aux_b = aux_bytes_per_elem or bytes_per_elem
     band_h = band_extent(t.t_h, kernel_size=shape.kernel_size,
                          stride=shape.stride, dilation=dilation,
                          offset_bound=shape.offset_bound)
@@ -410,9 +453,9 @@ def zerocopy_vmem_bytes(shape: LayerShape, t: TileConfig, *,
                          offset_bound=shape.offset_bound)
     band = 2 * band_h * band_w * t.t_n * bytes_per_elem   # double buffer
     wgt = k2 * t.t_n * t.t_m * bytes_per_elem
-    offs = t.t_h * t.t_w * 2 * k2 * bytes_per_elem
+    offs = t.t_h * t.t_w * 2 * k2 * aux_b
     acc = t.t_h * t.t_w * t.t_m * 4
-    out = t.t_h * t.t_w * t.t_m * bytes_per_elem
+    out = t.t_h * t.t_w * t.t_m * aux_b
     return band + wgt + offs + acc + out
 
 
@@ -459,9 +502,11 @@ class KernelTiles:
     tile_m: int
 
 
+@functools.lru_cache(maxsize=512)
 def choose_kernel_tiles(shape: LayerShape, *, batch: int = 1,
                         dilation: int = 1,
                         objective: str = "training",
+                        dtype: str | None = None,
                         vmem_budget: int = V5E_VMEM_BYTES) -> KernelTiles:
     """Pick (tile_h, tile_w, tile_c, tile_m) for the zero-copy fused
     kernels: minimize modeled whole-layer HBM traffic among tile points
@@ -475,6 +520,13 @@ def choose_kernel_tiles(shape: LayerShape, *, batch: int = 1,
     of ``dcl_train_hbm_bytes`` and additionally requires the backward
     working set (``zerocopy_bwd_vmem_bytes``) to fit VMEM.
 
+    ``dtype`` makes both budgets element-width-aware: ``"int8"`` sizes
+    the Eq. 6 band and weight blocks at 1 byte/elem (4x the band per
+    VMEM byte vs fp32 — the quantized-datapath win the paper's
+    fixed-point design banks on), ``"bf16"``/``"fp32"`` at 2/4.  The
+    legacy ``dtype=None`` keeps the PR-1/2 convention (bf16 VMEM
+    working set, fp32 traffic) so existing chooser results are stable.
+
     This replaces the hand-passed tile arguments of ``ops.deform_conv``
     (Sec. 3.2 methodology, evaluated on the zero-copy traffic model).
     The row-tile candidate set extends to 32: per-tile halo re-reads
@@ -484,6 +536,11 @@ def choose_kernel_tiles(shape: LayerShape, *, batch: int = 1,
     """
     if objective not in ("forward", "training"):
         raise ValueError(f"unknown objective {objective!r}")
+    vmem_b = dtype_bytes(dtype) if dtype is not None else 2
+    traffic_b = dtype_bytes(dtype) if dtype is not None else 4
+    # The int8 kernel keeps offsets/output fp32 (address precision +
+    # dequant epilogue) — size those VMEM terms at 4 bytes, not 1.
+    aux_b = 4 if dtype == "int8" else None
     ho, wo = out_hw(shape.h, shape.w, kernel_size=shape.kernel_size,
                     stride=shape.stride, dilation=dilation)
     ths = sorted({min(t, max(1, ho)) for t in (1, 2, 4, 8, 16, 32)})
@@ -500,15 +557,18 @@ def choose_kernel_tiles(shape: LayerShape, *, batch: int = 1,
             for t_n in tns:
                 for t_m in tms:
                     t = TileConfig(t_h, t_w, t_n, t_m)
-                    vmem = zerocopy_vmem_bytes(shape, t, dilation=dilation)
+                    vmem = zerocopy_vmem_bytes(shape, t, dilation=dilation,
+                                               bytes_per_elem=vmem_b,
+                                               aux_bytes_per_elem=aux_b)
                     if objective == "training":
                         vmem = max(vmem, zerocopy_bwd_vmem_bytes(
-                            shape, t, dilation=dilation))
+                            shape, t, dilation=dilation,
+                            bytes_per_elem=vmem_b))
                     if vmem > vmem_budget:
                         continue
                     traffic = traffic_fn(
                         shape, t, dataflow="zero_copy", batch=batch,
-                        dilation=dilation)
+                        dilation=dilation, bytes_per_elem=traffic_b)
                     # Minimize traffic; break ties toward bigger MXU tiles.
                     key = (float(traffic), -t_n * t_m, -t_h * t_w)
                     if best is None or key < best[0]:
@@ -516,8 +576,9 @@ def choose_kernel_tiles(shape: LayerShape, *, batch: int = 1,
     if best is None:
         raise ValueError(
             f"no zero-copy tile configuration fits VMEM budget "
-            f"{vmem_budget} for {shape}; receptive field {shape.rf} too "
-            f"large — train with a larger lambda")
+            f"{vmem_budget} for {shape} at dtype={dtype or 'legacy'}; "
+            f"receptive field {shape.rf} too large — train with a larger "
+            f"lambda")
     t = best[1]
     return KernelTiles(tile_h=t.t_h, tile_w=t.t_w, tile_c=t.t_n,
                        tile_m=t.t_m)

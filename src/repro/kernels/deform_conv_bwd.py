@@ -65,7 +65,8 @@ def _bwd_zerocopy_kernel(dx0_hbm, x_hbm, off_ref, g_ref, w_ref,
                          band_ref, rmw_ref, dw_acc, doff_acc,
                          sem_ref, rmw_sem, *, kernel_size: int, stride: int,
                          dilation: int, offset_bound: float, tile_h: int,
-                         tile_w: int, band_h: int, band_w: int, tile_c: int):
+                         tile_w: int, band_h: int, band_w: int, tile_c: int,
+                         dw_flush_every_step: bool):
     del dx0_hbm  # aliased with dx_hbm (zero-initialized output)
     k2 = kernel_size * kernel_size
     i = pl.program_id(0)
@@ -144,7 +145,27 @@ def _bwd_zerocopy_kernel(dx0_hbm, x_hbm, off_ref, g_ref, w_ref,
 
     # d_weights: patches^T @ g, accumulated fp32 across the whole grid.
     dw_acc[cc] += jnp.dot(lhs.T, g, preferred_element_type=jnp.float32)
-    dw_ref[0] = dw_acc[cc]
+    if dw_flush_every_step:
+        # Interpret-mode cadence: the interpreter re-materializes the
+        # output block buffer on every revisit, so the accumulator must
+        # be mirrored into dw_ref each step to survive the copy-out.
+        dw_ref[0] = dw_acc[cc]
+    else:
+        # Compiled cadence (ROADMAP "d_weights flush"): mirror the
+        # accumulator only on the LAST spatial grid step — the final
+        # revisit of each C-chunk block is the only copy-out that has
+        # to carry the complete sum, cutting the modeled dw write
+        # traffic by h_tiles*w_tiles*batch (see
+        # ``tiling.dcl_backward_hbm_bytes``).  The spatial grid axes
+        # are sequential ("arbitrary"), so the last step is well
+        # defined.
+        last_spatial = ((i == pl.num_programs(0) - 1)
+                        & (j == pl.num_programs(1) - 1)
+                        & (ww == pl.num_programs(2) - 1))
+
+        @pl.when(last_spatial)
+        def _flush_dw():
+            dw_ref[0] = dw_acc[cc]
 
     # d_patches: g @ W^T  -> (p, tc).
     dp = jnp.dot(g, wblk.T, preferred_element_type=jnp.float32)
@@ -186,13 +207,15 @@ def _bwd_zerocopy_kernel(dx0_hbm, x_hbm, off_ref, g_ref, w_ref,
 @functools.partial(
     jax.jit,
     static_argnames=("kernel_size", "stride", "dilation", "offset_bound",
-                     "tile_h", "tile_w", "tile_c", "interpret"))
+                     "tile_h", "tile_w", "tile_c", "interpret",
+                     "dw_flush_every_step"))
 def deform_conv_bwd_zerocopy(x_pad: Array, offsets: Array, g: Array,
                              w_tiles: Array, *, kernel_size: int,
                              stride: int, dilation: int, offset_bound: float,
                              tile_h: int, tile_w: int,
                              tile_c: int | None = None,
-                             interpret: bool = True
+                             interpret: bool = True,
+                             dw_flush_every_step: bool | None = None
                              ) -> tuple[Array, Array, Array]:
     """Fused backward over the whole padded input (zero-copy dataflow).
 
@@ -203,6 +226,12 @@ def deform_conv_bwd_zerocopy(x_pad: Array, offsets: Array, g: Array,
     returns: (dx_pad fp-matched to x_pad, d_offsets, dw_tiles fp32) —
              dx_pad includes the zero padding (caller un-pads), dw_tiles
              is in the same blocked layout as ``w_tiles``.
+
+    ``dw_flush_every_step`` controls the d_weights accumulator->output
+    mirror cadence: every grid step (required under the interpreter,
+    which re-materializes output block buffers per revisit) or only on
+    the last spatial step (the compiled cadence, h_tiles*w_tiles*batch
+    fewer modeled dw writes).  ``None`` follows ``interpret``.
     """
     n, hp, wp, c = x_pad.shape
     _, ho, wo, _ = offsets.shape
@@ -223,6 +252,8 @@ def deform_conv_bwd_zerocopy(x_pad: Array, offsets: Array, g: Array,
                               tile_h=tile_w)
     assert (h_tiles - 1) * tile_h * stride + band_h <= hp, "underpadded H"
     assert (w_tiles_n - 1) * tile_w * stride + band_w <= wp, "underpadded W"
+    if dw_flush_every_step is None:
+        dw_flush_every_step = interpret
 
     dx0 = jnp.zeros_like(x_pad)
     out_shapes = (
@@ -234,7 +265,8 @@ def deform_conv_bwd_zerocopy(x_pad: Array, offsets: Array, g: Array,
         functools.partial(
             _bwd_zerocopy_kernel, kernel_size=kernel_size, stride=stride,
             dilation=dilation, offset_bound=offset_bound, tile_h=tile_h,
-            tile_w=tile_w, band_h=band_h, band_w=band_w, tile_c=tc),
+            tile_w=tile_w, band_h=band_h, band_w=band_w, tile_c=tc,
+            dw_flush_every_step=dw_flush_every_step),
         grid=(n, h_tiles, w_tiles_n, c_steps),
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.ANY),      # dx seed (aliased)

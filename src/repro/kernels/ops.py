@@ -31,6 +31,13 @@ The bounded ``deform_conv`` path is differentiable: it is wrapped in a
 ``deform_conv_bwd.py`` (d_input, d_offsets, d_weights in one band-DMA
 pass), so Eq. 5-bounded *training* also runs the zero-copy dataflow —
 never an XLA gather/scatter against HBM.
+
+``deform_conv(precision="int8")`` dispatches the quantized inference
+datapath (``deform_conv_q.py``): symmetric int8 band DMA + int8 MXU
+contraction with int32 accumulation, fp32 bilinear coefficients, fused
+per-out-channel dequant epilogue — tiles resolved against the
+dtype-aware budgets (4x Eq. 6 band density).  Scales come from
+``repro.quant`` calibration or dynamic absmax.
 """
 from __future__ import annotations
 
@@ -48,6 +55,7 @@ from .deform_sample import (band_geometry, deform_sample_banded,
 from .deform_conv_fused import (deform_conv_fused_banded,
                                 deform_conv_fused_zerocopy)
 from .deform_conv_bwd import deform_conv_bwd_zerocopy
+from .deform_conv_q import deform_conv_fused_zerocopy_q
 from .matmul import matmul  # re-export  # noqa: F401
 
 Array = jax.Array
@@ -57,6 +65,24 @@ DEFAULT_DATAFLOW = "zero_copy"
 
 def default_interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def check_channel_tiles(c: int, m: int, tile_c: int | None,
+                        tile_m: int | None = None) -> None:
+    """Reject channel tiles that don't divide the layer — a clear
+    ``ValueError`` at the public entry instead of a deep Pallas
+    BlockSpec shape error (or a bare kernel assert) later."""
+    if tile_c is not None and c % tile_c != 0:
+        raise ValueError(
+            f"tile_c={tile_c} does not divide C={c}; the fused kernels "
+            f"step the channel axis in contiguous tile_c chunks — pass a "
+            f"divisor of C (or tile_c=None for the Sec. 3.2 chooser, "
+            f"which snaps to divisors)")
+    if tile_m is not None and m % tile_m != 0:
+        raise ValueError(
+            f"tile_m={tile_m} does not divide M={m}; the output-channel "
+            f"grid axis needs a divisor of M (or tile_m=None for the "
+            f"chooser)")
 
 
 def tile_weights(w: Array, tile_c: int) -> Array:
@@ -83,26 +109,28 @@ def resolve_tiles(h: int, w: int, c: int, m: int, *, kernel_size: int,
                   stride: int, dilation: int, offset_bound: float,
                   tile_h: int | None, tile_w: int | None,
                   tile_c: int | None, tile_m: int | None,
-                  objective: str = "training"
+                  objective: str = "training",
+                  dtype: str | None = None
                   ) -> tuple[int, int, int, int]:
     """Fill unspecified tile sizes from the Sec. 3.2 chooser; explicit
     arguments win.  ``objective="training"`` (the ``deform_conv``
     default — the same resolved tiles serve the forward kernel and its
     custom-VJP backward) minimizes combined fwd+bwd zero-copy traffic
     under both VMEM working sets; the forward-only ``deform_sample``
-    resolves with ``objective="forward"``."""
+    resolves with ``objective="forward"``.  ``dtype`` selects the
+    element-width-aware budgets (``"int8"`` exploits the 4x band
+    density of the quantized datapath)."""
     if None in (tile_h, tile_w, tile_c, tile_m):
         shape = LayerShape(h=h, w=w, c_in=c, c_out=m,
                            kernel_size=kernel_size, stride=stride,
                            offset_bound=offset_bound)
         kt = choose_kernel_tiles(shape, dilation=dilation,
-                                 objective=objective)
+                                 objective=objective, dtype=dtype)
         tile_h = tile_h or kt.tile_h
         tile_w = tile_w or kt.tile_w
         tile_c = tile_c or kt.tile_c
         tile_m = tile_m or kt.tile_m
-    assert c % tile_c == 0, (c, tile_c)
-    assert m % tile_m == 0, (m, tile_m)
+    check_channel_tiles(c, m, tile_c, tile_m)
     return tile_h, tile_w, tile_c, tile_m
 
 
@@ -199,6 +227,7 @@ def deform_sample(x: Array, offsets: Array, *, kernel_size: int = 3,
 
     if interpret is None:
         interpret = default_interpret()
+    check_channel_tiles(c, c, tile_c)
 
     if dataflow == "banded":
         th = tile_h or 8
@@ -341,6 +370,56 @@ def _spec_tiles(spec: _DCSpec, x: Array, offsets: Array,
     return min(th, ho), min(tw, wo), tc, tm
 
 
+def _deform_conv_int8(x: Array, offsets: Array, w: Array, *,
+                      kernel_size: int, stride: int, dilation: int,
+                      offset_bound: float, tile_h: int | None,
+                      tile_w: int | None, tile_c: int | None,
+                      tile_m: int | None, x_scale: Array | None,
+                      w_scale: Array | None, interpret: bool) -> Array:
+    """int8 inference datapath: quantize (symmetric, per-tensor x /
+    per-out-channel w), pad the int8 plane (0 -> 0, so padding and
+    quantization commute), and run the fused int8->int32 zero-copy
+    kernel with its per-M dequant epilogue.  Tiles resolve against the
+    dtype-aware budgets (4x band density).  Training quantized models
+    goes through ``repro.quant.qat`` (fake-quant over the fp32
+    custom-VJP path), not here — ``jnp.round`` has no useful gradient.
+    """
+    from repro.quant.qtypes import compute_scale, quantize_values
+
+    n, h, w_, c = x.shape
+    ho, wo = offsets.shape[1], offsets.shape[2]
+    m = w.shape[-1]
+    th, tw, tc, tm = resolve_tiles(
+        h, w_, c, m, kernel_size=kernel_size, stride=stride,
+        dilation=dilation, offset_bound=offset_bound, tile_h=tile_h,
+        tile_w=tile_w, tile_c=tile_c, tile_m=tile_m,
+        objective="forward", dtype="int8")
+    th, tw = min(th, ho), min(tw, wo)
+
+    sx = compute_scale(x) if x_scale is None \
+        else jnp.asarray(x_scale, jnp.float32)
+    sw = compute_scale(w, axis=-1) if w_scale is None \
+        else jnp.asarray(w_scale, jnp.float32).reshape(1, 1, m)
+    xq = quantize_values(x, sx)
+    wq = quantize_values(w, sw)
+
+    pad_h, pad_w = (-ho) % th, (-wo) % tw
+    if pad_h or pad_w:
+        offsets = jnp.pad(offsets, ((0, 0), (0, pad_h), (0, pad_w), (0, 0)))
+    xp = _pad_zerocopy(
+        xq, kernel_size=kernel_size, stride=stride, dilation=dilation,
+        offset_bound=offset_bound, tile_h=th, tile_w=tw,
+        ho=ho + pad_h, wo=wo + pad_w)
+    w_tiled = tile_weights(wq, tc)
+    scale = (sx * sw).reshape(1, m).astype(jnp.float32)
+    y = deform_conv_fused_zerocopy_q(
+        xp, offsets.astype(jnp.float32), w_tiled, scale,
+        kernel_size=kernel_size, stride=stride, dilation=dilation,
+        offset_bound=offset_bound, tile_h=th, tile_w=tw, tile_c=tc,
+        tile_m=tm, interpret=interpret)
+    return y[:, :ho, :wo].astype(x.dtype)
+
+
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
 def _deform_conv_bounded(spec: _DCSpec, x: Array, offsets: Array,
                          w: Array) -> Array:
@@ -381,13 +460,16 @@ _deform_conv_bounded.defvjp(_deform_conv_bounded_fwd,
     jax.jit,
     static_argnames=("kernel_size", "stride", "dilation", "offset_bound",
                      "tile_h", "tile_w", "tile_c", "tile_m", "dataflow",
-                     "interpret"))
+                     "precision", "interpret"))
 def deform_conv(x: Array, offsets: Array, w: Array, *, kernel_size: int = 3,
                 stride: int = 1, dilation: int = 1,
                 offset_bound: float | None = None,
                 tile_h: int | None = None, tile_w: int | None = None,
                 tile_c: int | None = None, tile_m: int | None = None,
                 dataflow: str = DEFAULT_DATAFLOW,
+                precision: str = "fp32",
+                x_scale: Array | None = None,
+                w_scale: Array | None = None,
                 interpret: bool | None = None) -> Array:
     """Fused DCL stage 1+2: y = g(x, o) * w_deform  (Eq. 2).
 
@@ -397,11 +479,42 @@ def deform_conv(x: Array, offsets: Array, w: Array, *, kernel_size: int = 3,
     model.  The bounded path is differentiable end-to-end: ``jax.grad``
     routes through the fused backward kernel of ``deform_conv_bwd.py``
     (a ``jax.custom_vjp``), never through an XLA gather/scatter.
+
+    ``precision="int8"`` (bounded zero-copy only) runs the quantized
+    inference datapath of ``deform_conv_q.py``: int8 band DMA + int8
+    MXU contraction with int32 accumulation, fp32 bilinear
+    coefficients, fused per-out-channel dequant epilogue.  ``x_scale``
+    (per-tensor) / ``w_scale`` (per-out-channel, shape (M,)) override
+    the dynamic absmax observers with calibrated values
+    (``repro.quant.calibrate``); tiles resolve against the int8
+    dtype-aware budgets (4x Eq. 6 band density per VMEM byte).
     """
     n, h, w_, c = x.shape
     ho, wo = offsets.shape[1], offsets.shape[2]
     k2 = kernel_size * kernel_size
     m = w.shape[-1]
+    check_channel_tiles(c, m, tile_c, tile_m)
+    if precision not in ("fp32", "int8"):
+        raise ValueError(
+            f"unknown precision {precision!r}; expected 'fp32' or 'int8'")
+
+    if precision == "int8":
+        if offset_bound is None:
+            raise ValueError(
+                "precision='int8' requires a trained offset_bound — the "
+                "quantized datapath exists because Eq. 6 bounds the band; "
+                "the unbounded gather baseline has no int8 kernel")
+        if dataflow != "zero_copy":
+            raise ValueError(
+                f"precision='int8' supports only the zero-copy dataflow "
+                f"(got {dataflow!r})")
+        if interpret is None:
+            interpret = default_interpret()
+        return _deform_conv_int8(
+            x, offsets, w, kernel_size=kernel_size, stride=stride,
+            dilation=dilation, offset_bound=offset_bound, tile_h=tile_h,
+            tile_w=tile_w, tile_c=tile_c, tile_m=tile_m,
+            x_scale=x_scale, w_scale=w_scale, interpret=interpret)
 
     if offset_bound is None:
         cfg = DCLConfig(in_channels=c, out_channels=m,

@@ -508,7 +508,8 @@ def dcl_def(cin: int, cout: int, k: int = 3) -> dict[str, ParamDef]:
 def dcl_apply(params: Mapping[str, Array], x: Array, *,
               kernel_size: int = 3, stride: int = 1, dilation: int = 1,
               offset_bound: float | None = None, use_kernel: bool = False,
-              dataflow: str = "zero_copy",
+              dataflow: str = "zero_copy", quant: str = "none",
+              quant_scales: Mapping[str, Any] | None = None,
               dtype: Any = jnp.float32) -> tuple[Array, Array]:
     """One DCL forward pass -> (y, o_max).
 
@@ -524,22 +525,90 @@ def dcl_apply(params: Mapping[str, Array], x: Array, *,
     path (``dcl_forward``) remains the parity reference.  ``o_max``
     (the Eq. 5 statistic) is computed from the raw offsets outside the
     kernel, so the regularizer gradient flows through XLA either way.
+
+    ``quant`` selects the int8 datapath modes of ``repro.quant``:
+
+    * ``"qat"`` — fake-quantize the deform-conv operands (activation
+      per-tensor, weights per-channel, STE backward) and run the
+      normal fp32 machinery on the quantized grid; the offset conv and
+      every gradient stay fp32, so the Trainer's custom-VJP zero-copy
+      backward is untouched.  Scales are dynamic absmax unless
+      ``quant_scales`` ({"x_scale": .., "w_scale": [..]}) pins them.
+    * ``"int8"`` — inference: the kernel path dispatches
+      ``ops.deform_conv(precision="int8")`` (int8 band DMA + int8 MXU
+      with fused dequant); the non-kernel path runs the bit-level
+      fake-quant reference (including the patch requantization the
+      kernel performs before its MXU step).
     """
     from repro.core.deform_conv import (DCLConfig, conv2d, dcl_forward,
                                         offset_abs_max)
+    if quant not in ("none", "qat", "int8"):
+        raise ValueError(
+            f"unknown quant mode {quant!r}; expected 'none', 'qat' or "
+            f"'int8'")
     cin = x.shape[-1]
     cout = params["w_deform"].shape[-1]
     cfg = DCLConfig(in_channels=cin, out_channels=cout,
                     kernel_size=kernel_size, stride=stride,
                     dilation=dilation, offset_bound=offset_bound,
                     dtype=dtype)
+    k = cfg.kernel_size
+
+    if quant != "none":
+        from repro.kernels import ops, ref
+        from repro.quant.qat import (fake_quant_dcl_reference,
+                                     qat_quantize_inputs)
+        xc = x.astype(dtype)
+        # Offsets always generate at full precision (the address path
+        # of the accelerator — never quantized).
+        offsets = conv2d(xc, params["w_offset"].astype(xc.dtype),
+                         stride=stride, dilation=dilation, padding=cfg.pad)
+        offsets = offsets + params["b_offset"].astype(xc.dtype)
+        o_max = offset_abs_max(offsets)
+        w = params["w_deform"].astype(xc.dtype).reshape(k * k, cin, cout)
+        x_scale = quant_scales.get("x_scale") if quant_scales else None
+        w_scale = quant_scales.get("w_scale") if quant_scales else None
+        kernel_ok = use_kernel and offset_bound is not None
+        if quant == "qat":
+            xq, wq = qat_quantize_inputs(xc, w, x_scale=x_scale,
+                                         w_scale=w_scale)
+            if kernel_ok:
+                y = ops.deform_conv(xq, offsets, wq, kernel_size=k,
+                                    stride=stride, dilation=dilation,
+                                    offset_bound=offset_bound,
+                                    dataflow=dataflow)
+            else:
+                y = ref.deform_conv_fused_ref(xq, offsets, wq,
+                                              kernel_size=k, stride=stride,
+                                              dilation=dilation,
+                                              offset_bound=offset_bound)
+        else:  # int8 (inference datapath)
+            if kernel_ok:
+                ws = None if w_scale is None \
+                    else jnp.asarray(w_scale, jnp.float32)
+                # dataflow passes through so a banded config raises
+                # ops' ValueError instead of silently running zero-copy
+                y = ops.deform_conv(xc, offsets, w, kernel_size=k,
+                                    stride=stride, dilation=dilation,
+                                    offset_bound=offset_bound,
+                                    dataflow=dataflow,
+                                    precision="int8", x_scale=x_scale,
+                                    w_scale=ws)
+            else:
+                y = fake_quant_dcl_reference(xc, offsets, w, kernel_size=k,
+                                             stride=stride,
+                                             dilation=dilation,
+                                             offset_bound=offset_bound,
+                                             x_scale=x_scale,
+                                             w_scale=w_scale)
+        return y + params["b_deform"].astype(xc.dtype), o_max
+
     if use_kernel and offset_bound is not None:
         from repro.kernels import ops
         offsets = conv2d(x, params["w_offset"].astype(x.dtype),
                          stride=stride, dilation=dilation, padding=cfg.pad)
         offsets = offsets + params["b_offset"].astype(x.dtype)
         o_max = offset_abs_max(offsets)
-        k = cfg.kernel_size
         w = params["w_deform"].astype(x.dtype).reshape(k * k, cin, cout)
         y = ops.deform_conv(x, offsets, w, kernel_size=k, stride=stride,
                             dilation=dilation, offset_bound=offset_bound,

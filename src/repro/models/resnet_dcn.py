@@ -47,6 +47,7 @@ class ResNetDCNConfig:
     dtype: Any = jnp.float32
     use_kernel: bool = False       # route DCLs through the Pallas kernel
     dataflow: str = "zero_copy"    # kernel dataflow: zero_copy | banded
+    quant: str = "none"            # DCL datapath: none | qat | int8
 
     @property
     def total_blocks(self) -> int:
@@ -129,20 +130,25 @@ def init_params(key: Array, cfg: ResNetDCNConfig):
     return init_tree(key, model_def(cfg))
 
 
-def _apply_dcl(params, x: Array, cfg: ResNetDCNConfig, *, stride=1):
+def _apply_dcl(params, x: Array, cfg: ResNetDCNConfig, *, stride=1,
+               quant_scales=None):
     return dcl_apply(params, x, stride=stride,
                      offset_bound=cfg.offset_bound,
                      use_kernel=cfg.use_kernel, dataflow=cfg.dataflow,
+                     quant=cfg.quant, quant_scales=quant_scales,
                      dtype=cfg.dtype)
 
 
 def _apply_block(params, x: Array, cfg: ResNetDCNConfig, *, stride: int,
-                 is_dcn: bool):
+                 is_dcn: bool, name: str = "", tap=None, quant_scales=None):
     h = conv2d(x, params["conv1"].astype(x.dtype))
     h = jax.nn.relu(group_norm(h, params["gn1"]))
     o_max = None
     if is_dcn:
-        h, o_max = _apply_dcl(params["dcl"], h, cfg, stride=stride)
+        if tap is not None:
+            tap(name, h)
+        h, o_max = _apply_dcl(params["dcl"], h, cfg, stride=stride,
+                              quant_scales=quant_scales)
     else:
         h = conv2d(h, params["conv2"].astype(x.dtype), stride=stride)
     h = jax.nn.relu(group_norm(h, params["gn2"]))
@@ -154,8 +160,16 @@ def _apply_block(params, x: Array, cfg: ResNetDCNConfig, *, stride: int,
     return jax.nn.relu(x + h), o_max
 
 
-def forward(params, cfg: ResNetDCNConfig, images: Array):
-    """images: (N, H, W, 3) -> (outputs, o_max dict per DCL)."""
+def forward(params, cfg: ResNetDCNConfig, images: Array, *, tap=None,
+            quant_scales=None):
+    """images: (N, H, W, 3) -> (outputs, o_max dict per DCL).
+
+    ``tap(name, x)`` is invoked with every DCL block's input activation
+    — the calibration hook of ``repro.quant.calibrate`` (run eagerly so
+    observers see concrete values).  ``quant_scales`` is a calibration
+    scale table ({block_name: {"x_scale", "w_scale"}}) consumed when
+    ``cfg.quant`` is ``"qat"``/``"int8"``; None = dynamic absmax.
+    """
     x = images.astype(cfg.dtype)
     x = conv2d(x, params["stem"]["conv"].astype(x.dtype), stride=2,
                padding=3)
@@ -169,10 +183,14 @@ def forward(params, cfg: ResNetDCNConfig, images: Array):
     for s, (n_blocks, width) in enumerate(zip(cfg.stage_sizes, cfg.widths)):
         for b in range(n_blocks):
             stride = 2 if (b == 0 and s > 0) else 1
-            x, o_max = _apply_block(params[f"s{s}b{b}"], x, cfg,
-                                    stride=stride, is_dcn=cfg.is_dcn(bi))
+            name = f"s{s}b{b}"
+            scales = quant_scales.get(name) if quant_scales else None
+            x, o_max = _apply_block(params[name], x, cfg,
+                                    stride=stride, is_dcn=cfg.is_dcn(bi),
+                                    name=name, tap=tap,
+                                    quant_scales=scales)
             if o_max is not None:
-                o_maxes[f"s{s}b{b}"] = o_max
+                o_maxes[name] = o_max
             bi += 1
 
     h = conv2d(x, params["head"]["conv"].astype(x.dtype))
@@ -210,10 +228,15 @@ def detection_loss(outputs: dict, targets: dict) -> tuple[Array, dict]:
 
 
 def train_loss(params, cfg: ResNetDCNConfig, batch: dict, *,
-               lam: float = 0.0, smoothness: float = 0.0):
-    """Full paper objective: Eq. 5 over the detection loss."""
+               lam: float = 0.0, smoothness: float = 0.0,
+               quant_scales=None):
+    """Full paper objective: Eq. 5 over the detection loss.  With
+    ``cfg.quant="qat"`` this is the quantization-aware objective —
+    fake-quant DCLs (STE) under the same Eq. 5 regularizer, trainable
+    by the production ``Trainer`` unchanged."""
     from repro.core.rf_regularizer import regularized_loss
-    outputs, o_maxes = forward(params, cfg, batch["images"])
+    outputs, o_maxes = forward(params, cfg, batch["images"],
+                               quant_scales=quant_scales)
     task, metrics = detection_loss(outputs, batch)
     if lam > 0.0 and o_maxes:
         loss = regularized_loss(task, list(o_maxes.values()), lam,

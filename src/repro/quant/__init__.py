@@ -1,0 +1,13 @@
+"""int8 quantized DCL datapath: QTensor primitives, PTQ calibration,
+QAT wrappers.  See ``kernels/deform_conv_q.py`` for the int8 zero-copy
+kernel these feed and EXPERIMENTS.md §Quantization for measured
+results."""
+from .qtypes import (  # noqa: F401
+    QMAX, QTensor, compute_scale, fake_quant, fake_quant_absmax, quantize,
+    quantize_values)
+from .calibrate import (  # noqa: F401
+    AbsMaxObserver, PercentileObserver, calibrate_resnet_dcn,
+    load_scale_table, make_observer, save_scale_table,
+    weight_channel_scales)
+from .qat import (  # noqa: F401
+    fake_quant_dcl_reference, qat_dcl_apply, qat_quantize_inputs)

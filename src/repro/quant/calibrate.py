@@ -1,0 +1,148 @@
+"""Post-training calibration: observers + a ResNet-DCN sweep.
+
+A calibration run sweeps a handful of batches through the fp32 model
+(``models.resnet_dcn.forward`` with its ``tap`` hook), feeds every DCL
+input activation into an observer, and emits a *scale table*
+
+    {block_name: {"x_scale": float,            # per-tensor activation
+                  "w_scale": [float, ...]}}    # per-out-channel weights
+
+that the int8 datapath (``ops.deform_conv(precision="int8")``) and the
+model-level PTQ mode (``ResNetDCNConfig.quant="int8"``) consume.  Two
+observers are provided:
+
+* ``absmax`` — running max of |x| (exact, outlier-sensitive);
+* ``percentile`` — clips the top (100-p)% of |x| mass (a deterministic
+  strided subsample keeps memory bounded), trading saturation of rare
+  outliers for a finer grid over the bulk — the standard PTQ knob.
+
+Calibration runs eagerly (the observers need concrete values); keep the
+sweep to a few batches.  Weight scales are always exact per-channel
+absmax — weights are static, there is nothing to observe over batches.
+"""
+from __future__ import annotations
+
+import json
+from typing import Any, Callable, Iterable, Mapping
+
+import jax.numpy as jnp
+import numpy as np
+
+from .qtypes import EPS, QMAX, compute_scale
+
+_RESERVOIR = 1 << 15     # per-update subsample cap of the percentile observer
+
+
+class AbsMaxObserver:
+    """Running absolute maximum -> symmetric scale."""
+
+    def __init__(self) -> None:
+        self.amax = 0.0
+        self.updates = 0
+
+    def update(self, x) -> None:
+        self.amax = max(self.amax, float(jnp.max(jnp.abs(x))))
+        self.updates += 1
+
+    def scale(self) -> float:
+        return max(self.amax, EPS) / QMAX
+
+
+class PercentileObserver:
+    """p-th percentile of |x| over the sweep -> symmetric scale.
+
+    Keeps a deterministic strided subsample of each update (at most
+    ``_RESERVOIR`` values per batch) so memory stays bounded no matter
+    how many calibration batches are swept.
+    """
+
+    def __init__(self, percentile: float = 99.9) -> None:
+        assert 0.0 < percentile <= 100.0, percentile
+        self.percentile = percentile
+        self.samples: list[np.ndarray] = []
+        self.updates = 0
+
+    def update(self, x) -> None:
+        a = np.abs(np.asarray(x, np.float32)).reshape(-1)
+        stride = max(1, a.size // _RESERVOIR)
+        self.samples.append(a[::stride])
+        self.updates += 1
+
+    def scale(self) -> float:
+        if not self.samples:
+            return EPS / QMAX
+        v = float(np.percentile(np.concatenate(self.samples),
+                                self.percentile))
+        return max(v, EPS) / QMAX
+
+
+def make_observer(kind: str, *, percentile: float = 99.9):
+    if kind == "absmax":
+        return AbsMaxObserver()
+    if kind == "percentile":
+        return PercentileObserver(percentile)
+    raise ValueError(f"unknown observer {kind!r}; expected 'absmax' or "
+                     f"'percentile'")
+
+
+def weight_channel_scales(w) -> np.ndarray:
+    """Exact per-output-channel absmax scales for (..., M) weights."""
+    return np.asarray(compute_scale(jnp.asarray(w), axis=-1)).reshape(-1)
+
+
+def calibrate_resnet_dcn(params: Mapping[str, Any], cfg, batches: Iterable,
+                         *, observer: str = "absmax",
+                         percentile: float = 99.9,
+                         forward: Callable | None = None) -> dict:
+    """Sweep calibration batches through the fp32 model and emit the
+    scale table for every DCL block.
+
+    ``params``/``cfg`` are the ``models.resnet_dcn`` pair; ``batches``
+    yields image arrays (N, H, W, 3) or dicts with an ``"images"`` key.
+    The sweep always runs the fp32 reference semantics (whatever
+    ``cfg.quant`` says) — calibration observes the un-quantized network.
+    """
+    import dataclasses
+
+    from repro.models import resnet_dcn as R
+
+    fwd = forward or R.forward
+    cfg_fp = dataclasses.replace(cfg, quant="none") \
+        if getattr(cfg, "quant", "none") != "none" else cfg
+    obs: dict[str, Any] = {}
+
+    def tap(name: str, x) -> None:
+        if name not in obs:
+            obs[name] = make_observer(observer, percentile=percentile)
+        obs[name].update(x)
+
+    n_batches = 0
+    for batch in batches:
+        images = batch["images"] if isinstance(batch, Mapping) else batch
+        fwd(params, cfg_fp, jnp.asarray(images), tap=tap)
+        n_batches += 1
+    if not obs:
+        raise ValueError(
+            "calibration sweep saw no DCL activations — does the config "
+            f"have num_dcn > 0 (got cfg={cfg})?")
+
+    table: dict[str, dict] = {}
+    for name, o in sorted(obs.items()):
+        w = params[name]["dcl"]["w_deform"]
+        table[name] = {
+            "x_scale": float(o.scale()),
+            "w_scale": [float(s) for s in weight_channel_scales(w)],
+        }
+    table["_meta"] = {"observer": observer, "percentile": percentile,
+                      "batches": n_batches}
+    return table
+
+
+def save_scale_table(table: Mapping[str, Any], path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(table, f, indent=2, sort_keys=True)
+
+
+def load_scale_table(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)

@@ -1,0 +1,112 @@
+"""Quantization-aware training wrappers for the DCL.
+
+QAT simulates the int8 datapath of ``kernels/deform_conv_q.py`` inside
+the fp32 training graph: the deform-conv input plane and the deform
+weights are fake-quantized (``qtypes.fake_quant``, STE backward) before
+the convolution, while the offset-generating conv, the bilinear
+coefficients, and every gradient stay fp32 — exactly the precision
+split of the int8 kernel.  Because fake-quant is applied *outside*
+``ops.deform_conv``, the Trainer's backward still routes through the
+existing custom-VJP zero-copy kernel path untouched: STE passes the
+cotangent through the quantization grid, then the fused backward kernel
+does the rest.
+
+``fake_quant_dcl_reference`` is the bit-level oracle of the int8
+kernel: quantize input per-tensor and weights per-channel, sample with
+fp32 bilinear coefficients, re-round the patches onto the activation
+grid (the convex bilinear combination of int8 values stays in range, so
+re-rounding loses no range), contract, and rescale.  Tests gate the
+kernel against it to <= 1 LSB of the per-channel output scale
+(``s_x * s_w[m]``).
+"""
+from __future__ import annotations
+
+from typing import Any, Mapping
+
+import jax
+import jax.numpy as jnp
+
+from .qtypes import QMAX, compute_scale, fake_quant, fake_quant_absmax
+
+Array = jax.Array
+
+
+def qat_quantize_inputs(x: Array, w: Array, *,
+                        x_scale: Array | None = None,
+                        w_scale: Array | None = None
+                        ) -> tuple[Array, Array]:
+    """Fake-quantize one DCL's (input plane, deform weights) pair.
+
+    x: (N, H, W, C) activation, per-tensor scale; w: (..., M) weights,
+    per-output-channel scales.  Scales default to dynamic absmax
+    (stop-gradient observers); calibrated values override.
+    """
+    if x_scale is None:
+        xq = fake_quant_absmax(x)
+    else:
+        xq = fake_quant(x, jnp.asarray(x_scale, jnp.float32))
+    if w_scale is None:
+        wq = fake_quant_absmax(w, axis=-1)
+    else:
+        s = jnp.asarray(w_scale, jnp.float32)
+        if s.ndim == 1:
+            s = s.reshape((1,) * (w.ndim - 1) + (-1,))
+        wq = fake_quant(w, s)
+    return xq, wq
+
+
+def qat_dcl_apply(params: Mapping[str, Array], x: Array, *,
+                  scales: Mapping[str, Any] | None = None,
+                  **dcl_kwargs):
+    """Fake-quant wrapper around ``models.layers.dcl_apply``.
+
+    Quantizes the deform-conv operands (activation per-tensor, weights
+    per-channel) and delegates to the unmodified layer — both the
+    pure-JAX reference and the Pallas kernel path (``use_kernel=True``)
+    see the fake-quantized values, so QAT trains end-to-end through the
+    custom-VJP zero-copy kernels.  ``scales`` is one calibration-table
+    entry ({"x_scale": float, "w_scale": [...]}); None = dynamic absmax.
+    """
+    from repro.models.layers import dcl_apply
+
+    x_scale = scales.get("x_scale") if scales else None
+    w_scale = scales.get("w_scale") if scales else None
+    xq, wq = qat_quantize_inputs(x, params["w_deform"],
+                                 x_scale=x_scale, w_scale=w_scale)
+    qparams = dict(params)
+    qparams["w_deform"] = wq
+    return dcl_apply(qparams, xq, **dcl_kwargs)
+
+
+def fake_quant_dcl_reference(x: Array, offsets: Array, w: Array, *,
+                             kernel_size: int = 3, stride: int = 1,
+                             dilation: int = 1,
+                             offset_bound: float | None = None,
+                             x_scale: Array | None = None,
+                             w_scale: Array | None = None) -> Array:
+    """Pure-XLA fake-quant oracle of the int8 zero-copy kernel.
+
+    Mirrors the kernel's arithmetic step for step in fp32 holding
+    integer values: the int32 MXU accumulation is exact, and for the
+    magnitudes involved (|q| <= 127, K^2*C terms) so is this fp32
+    einsum — the only divergence is fp32 coefficient rounding in the
+    bilinear stage, bounded well under 1 output LSB.
+    """
+    from repro.kernels.ref import deform_sample_ref
+
+    sx = compute_scale(x) if x_scale is None \
+        else jnp.asarray(x_scale, jnp.float32)
+    sw = compute_scale(w, axis=-1) if w_scale is None \
+        else jnp.asarray(w_scale, jnp.float32).reshape(1, 1, -1)
+    xq = jnp.clip(jnp.round(x.astype(jnp.float32) / sx), -QMAX, QMAX)
+    wq = jnp.clip(jnp.round(w.astype(jnp.float32) / sw), -QMAX, QMAX)
+    # Sample the integer-valued plane with fp32 coefficients, then
+    # re-round the patches onto the activation grid (what the kernel's
+    # int8 requantization before the MXU does).
+    patches = deform_sample_ref(
+        xq, offsets, kernel_size=kernel_size, stride=stride,
+        dilation=dilation, offset_bound=offset_bound)
+    patches_q = jnp.round(patches)
+    y = jnp.einsum("nhwkc,kcm->nhwm", patches_q, wq,
+                   preferred_element_type=jnp.float32)
+    return (y * sx * sw.reshape(1, 1, 1, -1)).astype(x.dtype)

@@ -1,0 +1,134 @@
+"""Symmetric int8 quantization primitives for the DCL datapath.
+
+The paper's accelerator is a fixed-point design; on TPU the equivalent
+win is the int8 zero-copy dataflow of ``kernels/deform_conv_q.py``:
+every VMEM byte holds 4x more of the Eq. 6 offset band than fp32, so
+the same budget admits wider tiles (``tiling.choose_kernel_tiles``
+``dtype="int8"``).  Following CoDeNet (Dong et al., 2020) and Xu et
+al. (2021), weights and activations quantize to 8 bits while the
+bilinear-interpolation *coefficients* stay fp32 — the address/fraction
+path is full precision, only the sampled values and the MXU contraction
+run integer.
+
+Conventions (shared by the kernel, the fake-quant reference, and QAT):
+
+* symmetric, zero-point-free: ``q = round(clip(x / s, -127, 127))``,
+  ``x ~= q * s``.  Zero maps to 0, so zero-padding commutes with
+  quantization — the bounded kernels' pre-padded halo needs no special
+  casing.
+* per-tensor scale for activations (one scalar per DCL input plane),
+  per-output-channel scales for the deform weights (axis=-1), matching
+  the fused dequant epilogue's per-M rescale.
+* rounding is ``jnp.round`` (ties-to-even) everywhere, so the int8
+  kernel and the fake-quant reference agree bit-for-bit wherever the
+  fp32 pre-round values agree.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+QMAX = 127.0            # symmetric int8 range [-127, 127]
+EPS = 1e-12
+
+
+def _scale_shape(shape: tuple[int, ...], axis: int | None) -> tuple[int, ...]:
+    if axis is None:
+        return ()
+    axis = axis % len(shape)
+    return tuple(shape[i] if i == axis else 1 for i in range(len(shape)))
+
+
+def compute_scale(x: Array, *, axis: int | None = None) -> Array:
+    """Symmetric absmax scale: per-tensor (axis=None) or per-channel.
+
+    Returns fp32, shaped () or broadcast-ready (1, ..., C, ..., 1).
+    """
+    ax = None if axis is None else axis % x.ndim
+    red = tuple(i for i in range(x.ndim) if i != ax) if ax is not None \
+        else None
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=red,
+                   keepdims=ax is not None)
+    return jnp.maximum(amax, EPS) / QMAX
+
+
+def quantize_values(x: Array, scale: Array) -> Array:
+    """x -> int8 values on the symmetric grid (scale broadcasts)."""
+    q = jnp.round(x.astype(jnp.float32) / scale)
+    return jnp.clip(q, -QMAX, QMAX).astype(jnp.int8)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class QTensor:
+    """int8 values + fp32 scale(s); ``axis`` is the per-channel axis
+    (None = per-tensor).  A pytree, so it passes through jit/vmap."""
+    values: Array          # int8
+    scale: Array           # fp32, () or keepdims per-channel shape
+    axis: int | None = None
+
+    @property
+    def shape(self) -> tuple[int, ...]:
+        return self.values.shape
+
+    def dequantize(self, dtype: Any = jnp.float32) -> Array:
+        return (self.values.astype(jnp.float32) * self.scale).astype(dtype)
+
+    def tree_flatten(self):
+        return (self.values, self.scale), self.axis
+
+    @classmethod
+    def tree_unflatten(cls, axis, children):
+        values, scale = children
+        return cls(values=values, scale=scale, axis=axis)
+
+
+def quantize(x: Array, *, axis: int | None = None,
+             scale: Array | None = None) -> QTensor:
+    """Quantize to a symmetric int8 ``QTensor``; ``scale`` overrides the
+    absmax observer (e.g. a calibrated table entry)."""
+    s = compute_scale(x, axis=axis) if scale is None \
+        else jnp.asarray(scale, jnp.float32)
+    if axis is not None and s.ndim == 1:
+        s = s.reshape(_scale_shape(x.shape, axis))
+    return QTensor(values=quantize_values(x, s), scale=s, axis=axis)
+
+
+# ---------------------------------------------------------------------------
+# Fake quantization (quantize-dequantize) with a straight-through estimator
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def fake_quant(x: Array, scale: Array) -> Array:
+    """STE fake-quant: forward quantize-dequantize onto the int8 grid,
+    backward identity inside the representable range and zero outside
+    (the standard QAT estimator).  ``scale`` gets a zero cotangent —
+    scales are observer-driven, not learned."""
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -QMAX, QMAX)
+    return (q * scale).astype(x.dtype)
+
+
+def _fake_quant_fwd(x, scale):
+    mask = (jnp.abs(x.astype(jnp.float32)) <= scale * QMAX)
+    return fake_quant(x, scale), (mask, scale)
+
+
+def _fake_quant_bwd(res, g):
+    mask, scale = res
+    return (g * mask.astype(g.dtype), jnp.zeros_like(scale))
+
+
+fake_quant.defvjp(_fake_quant_fwd, _fake_quant_bwd)
+
+
+def fake_quant_absmax(x: Array, *, axis: int | None = None) -> Array:
+    """Dynamic fake-quant: observe the absmax scale on the fly (stopped
+    gradient) and fake-quantize.  The QAT default — no calibration table
+    needed during training."""
+    s = jax.lax.stop_gradient(compute_scale(x, axis=axis))
+    return fake_quant(x, s)

@@ -165,6 +165,32 @@ def test_train_step_kernel_path_matches_reference():
                                rtol=1e-3, atol=1e-4)
 
 
+def test_dw_flush_cadence_parity():
+    """Satellite (PR 3): the compiled d_weights cadence — accumulator
+    mirrored to the output block only on the LAST spatial grid step —
+    must produce the same cotangents as the interpret-safe every-step
+    flush (the final revisit of each C-chunk block carries the complete
+    fp32 sum either way)."""
+    from repro.kernels.deform_conv_bwd import deform_conv_bwd_zerocopy
+    from repro.kernels.ops import _pad_zerocopy, tile_weights
+
+    x, offs, wgt = _case_arrays("dwflush", 16, 16, 8, 8, 3, 1, 1, 1.0)
+    g = jax.random.normal(jax.random.PRNGKey(11), (2, 16, 16, 8),
+                          jnp.float32)
+    xp = _pad_zerocopy(x, kernel_size=3, stride=1, dilation=1,
+                       offset_bound=2.0, tile_h=4, tile_w=8, ho=16, wo=16)
+    wt = tile_weights(wgt, 2)
+    outs = {}
+    for every_step in (True, False):
+        outs[every_step] = deform_conv_bwd_zerocopy(
+            xp, offs, g, wt, kernel_size=3, stride=1, dilation=1,
+            offset_bound=2.0, tile_h=4, tile_w=8, tile_c=2,
+            interpret=True, dw_flush_every_step=every_step)
+    for name, a, b in zip(("dx", "doff", "dw"), outs[True], outs[False]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=name)
+
+
 def test_modeled_train_traffic_acceptance_gate():
     """PR-2 acceptance: combined fwd+bwd modeled HBM traffic for the
     bounded 3x3 reference layer (H=W=64, C=M=128, batch=4, tile_h=8)
