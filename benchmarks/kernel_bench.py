@@ -81,12 +81,23 @@ def records(*, smoke: bool = False, precision: str = "both") -> list[dict]:
                                  (1, h, w, 18), jnp.float32) * 2
         wgt = jax.random.normal(jax.random.fold_in(key, 2),
                                 (9, c, m), jnp.float32) * 0.1
+        # Batch-2 pair for the Megacore-split backward records (the
+        # cores=2 grid needs an even batch).
+        x2 = jax.random.normal(jax.random.fold_in(key, 3), (2, h, w, c),
+                               jnp.float32)
+        offs2 = jax.random.normal(jax.random.fold_in(key, 4),
+                                  (2, h, w, 18), jnp.float32) * 2
         # Traffic model at the PR-1 tile_h=8 convention so the recorded
         # ratios stay comparable across BENCH_kernels.json revisions
         # (wall times use the chooser's own tiles — recorded
         # separately as tiles_timed_zero_copy).
         rep = dataflow_traffic_report(h=h, w=w, c=c, m=m, batch=1,
                                       tile_h=BANDED_TILE_H, offset_bound=2.0)
+        # Megacore records model the same shape at the mc bench batch
+        # (cores=2 needs an even batch; at batch=1 per-core == total).
+        rep_mc = dataflow_traffic_report(h=h, w=w, c=c, m=m, batch=2,
+                                         tile_h=BANDED_TILE_H,
+                                         offset_bound=2.0, cores=2)
         kt = choose_kernel_tiles(
             LayerShape(h=h, w=w, c_in=c, c_out=m, offset_bound=2.0), batch=1)
         rec: dict = {
@@ -109,13 +120,31 @@ def records(*, smoke: bool = False, precision: str = "both") -> list[dict]:
                     dataflow="banded"), x, offs, wgt, reps=7),
                 "us_unbounded_xla": _time(lambda a, b, ww: ops.deform_conv(
                     a, b, ww), x, offs, wgt),
+                # reps=7: the bwd records feed run.py's backward gates.
                 "us_bwd_zero_copy": _time(
                     _grad_fn(lambda a, b, ww: ops.deform_conv(
                         a, b, ww, offset_bound=2.0, dataflow="zero_copy")),
-                    x, offs, wgt),
+                    x, offs, wgt, reps=7),
                 "us_bwd_xla_ref": _time(
                     _grad_fn(lambda a, b, ww: ref.deform_conv_fused_ref(
-                        a, b, ww, offset_bound=2.0)), x, offs, wgt),
+                        a, b, ww, offset_bound=2.0)), x, offs, wgt,
+                    reps=7),
+                # Megacore split (PR 4): cores=2 backward on a batch-2
+                # input vs the cores=1 baseline at the SAME batch —
+                # interpret mode serializes the core subgrids, so equal
+                # wall time here just validates the split adds no
+                # overhead; the per-core traffic drop is the modeled
+                # number.
+                "us_bwd_mc_zero_copy": _time(
+                    _grad_fn(lambda a, b, ww: ops.deform_conv(
+                        a, b, ww, offset_bound=2.0, cores=2)),
+                    x2, offs2, wgt, reps=7),
+                "us_bwd_mc_baseline": _time(
+                    _grad_fn(lambda a, b, ww: ops.deform_conv(
+                        a, b, ww, offset_bound=2.0, cores=1)),
+                    x2, offs2, wgt, reps=7),
+                "bwd_mc_batch": 2,
+                "bwd_mc_cores": 2,
                 "hbm_bytes_zero_copy": rep["zero_copy_bytes"],
                 "hbm_bytes_materialized_band":
                     rep["materialized_band_bytes"],
@@ -125,6 +154,9 @@ def records(*, smoke: bool = False, precision: str = "both") -> list[dict]:
                     rep["materialized_band_bwd_bytes"],
                 "hbm_bwd_traffic_ratio": rep["bwd_ratio"],
                 "hbm_train_traffic_ratio": rep["train_ratio"],
+                "hbm_bytes_bwd_per_core_mc":
+                    rep_mc["zero_copy_bwd_bytes_per_core"],
+                "hbm_bwd_per_core_ratio": rep_mc["bwd_per_core_ratio"],
             })
         if precision in ("int8", "both"):
             ktq = choose_kernel_tiles(
@@ -148,12 +180,17 @@ def records(*, smoke: bool = False, precision: str = "both") -> list[dict]:
 
 def train_step_records() -> list[dict]:
     """§Training-throughput: median Trainer step time of the miniature
-    ResNet-DCN detector, XLA-reference DCLs vs the Pallas kernel path
-    (full mode only — compile time would blow the --smoke budget)."""
+    ResNet-DCN detector — XLA-reference DCLs, the Pallas kernel path,
+    and the mesh-sharded kernel path (``shard_map`` over the host
+    mesh's data axis; on a 1-device CI box the mesh is (1, 1) and the
+    record documents the sharded machinery's overhead-free baseline —
+    the 4-virtual-device CI job exercises the real split).
+    Full mode only — compile time would blow the --smoke budget."""
     import dataclasses as _dc
     import tempfile
 
     from repro.data import DetectionDataConfig, detection_batch
+    from repro.launch.mesh import make_host_mesh
     from repro.models import resnet_dcn as R
     from repro.optim import constant, sgd
     from repro.train import Trainer, TrainerConfig
@@ -163,24 +200,38 @@ def train_step_records() -> list[dict]:
         num_dcn=2, num_classes=4, img_size=32, offset_bound=2.0)
     data = DetectionDataConfig(img_size=32, global_batch=2, num_classes=4,
                                seed=3)
+    host_mesh = make_host_mesh()
     out = []
-    for label, cfg in [("xla_ref", cfg_ref),
-                       ("kernel", _dc.replace(cfg_ref, use_kernel=True))]:
+    for label, cfg, mesh in [
+            ("xla_ref", cfg_ref, None),
+            ("kernel", _dc.replace(cfg_ref, use_kernel=True), None),
+            ("sharded", _dc.replace(cfg_ref, use_kernel=True), host_mesh)]:
+        param_specs = None
+        if mesh is not None:
+            from repro.distributed.sharding import use_rules
+            from repro.models.layers import spec_tree
+            with use_rules(mesh=mesh):
+                param_specs = spec_tree(R.model_def(cfg_ref))
         with tempfile.TemporaryDirectory() as tmp:
             tr = Trainer(
                 loss_fn=lambda p, b, _cfg=cfg: R.train_loss(
                     p, _cfg, b, lam=0.1),
                 params=R.init_params(jax.random.PRNGKey(0), cfg_ref),
-                optimizer=sgd(constant(0.05), momentum=0.9), mesh=None,
-                param_specs=None,
+                optimizer=sgd(constant(0.05), momentum=0.9), mesh=mesh,
+                param_specs=param_specs,
                 batch_fn=lambda s: {k: jnp.asarray(v) for k, v in
                                     detection_batch(data, s).items()},
                 config=TrainerConfig(total_steps=6, ckpt_every=100,
                                      ckpt_dir=tmp, log_every=100))
             tr.run()
-        out.append({"name": f"train_step_resnet_dcn_{label}",
-                    "us_median_step": tr.median_step_sec() * 1e6,
-                    "steps": len(tr.step_seconds)})
+        name = ("train_step_sharded_resnet_dcn" if label == "sharded"
+                else f"train_step_resnet_dcn_{label}")
+        rec = {"name": name,
+               "us_median_step": tr.median_step_sec() * 1e6,
+               "steps": len(tr.step_seconds)}
+        if mesh is not None:
+            rec["mesh_devices"] = int(mesh.devices.size)
+        out.append(rec)
     return out
 
 

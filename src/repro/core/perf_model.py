@@ -26,10 +26,11 @@ from __future__ import annotations
 import dataclasses
 import math
 
-from .tiling import (LayerShape, TileConfig, choose_kernel_tiles,
-                     dcl_backward_hbm_bytes, dcl_dataflow_hbm_bytes,
-                     dcl_total_hbm_bytes, dcl_train_hbm_bytes,
-                     input_buffer_size, receptive_field, PAPER_TILES)
+from .tiling import (LayerShape, TileConfig, V5E_HBM_BW, V5E_ICI_BW,
+                     choose_kernel_tiles, dcl_backward_hbm_bytes,
+                     dcl_dataflow_hbm_bytes, dcl_total_hbm_bytes,
+                     dcl_train_hbm_bytes, input_buffer_size,
+                     receptive_field, PAPER_TILES)
 
 # ---------------------------------------------------------------------------
 # Calibration constants
@@ -227,7 +228,8 @@ def dataflow_traffic_report(*, h: int = 64, w: int = 64, c: int = 128,
                             tile_w: int | None = None,
                             offset_bound: float = 2.0, kernel_size: int = 3,
                             stride: int = 1,
-                            bytes_per_elem: int = 4) -> dict:
+                            bytes_per_elem: int = 4,
+                            cores: int = 2) -> dict:
     """Modeled HBM traffic of one bounded DCL under both TPU dataflows.
 
     ``materialized_band`` is the legacy ``ops._pad_and_band`` path (full
@@ -250,6 +252,16 @@ def dataflow_traffic_report(*, h: int = 64, w: int = 64, c: int = 128,
     this PR's >= 3x acceptance gate; ``q_total_ratio`` is the honest
     whole-layer number including the fp32 offset/output terms.
     ``tiles_int8`` reports what the dtype-aware chooser would run.
+
+    Megacore records (PR 4): ``zero_copy_bwd_bytes_per_core`` is one
+    core's backward traffic under the ``cores``-way batch split of
+    ``kernels.deform_conv_bwd`` (``tiling.dcl_backward_hbm_bytes``
+    ``per_core=True``) and ``bwd_per_core_ratio`` the drop vs the
+    sequential kernel — ~``cores``x whenever the dw-stationary
+    (batch-indexed) terms dominate, the PR-4 acceptance gate.
+    ``zero_copy_bwd_bytes_mc_total`` is the aggregate including every
+    core's partial-d_weights flush + the reduce epilogue (the honest
+    price of the split).
     """
     shape = LayerShape(h=h, w=w, c_in=c, c_out=m, kernel_size=kernel_size,
                        stride=stride, offset_bound=offset_bound)
@@ -278,6 +290,14 @@ def dataflow_traffic_report(*, h: int = 64, w: int = 64, c: int = 128,
     zero_bwd = dcl_backward_hbm_bytes(shape, t, dataflow="zero_copy",
                                       batch=batch,
                                       bytes_per_elem=bytes_per_elem)
+    zero_bwd_pc = dcl_backward_hbm_bytes(shape, t, dataflow="zero_copy",
+                                         batch=batch,
+                                         bytes_per_elem=bytes_per_elem,
+                                         cores=cores, per_core=True)
+    zero_bwd_mc = dcl_backward_hbm_bytes(shape, t, dataflow="zero_copy",
+                                         batch=batch,
+                                         bytes_per_elem=bytes_per_elem,
+                                         cores=cores)
     band_bwd = dcl_backward_hbm_bytes(shape, t, dataflow="materialized_band",
                                       batch=batch,
                                       bytes_per_elem=bytes_per_elem)
@@ -295,6 +315,10 @@ def dataflow_traffic_report(*, h: int = 64, w: int = 64, c: int = 128,
         "zero_copy_bwd_bytes": zero_bwd,
         "materialized_band_bwd_bytes": band_bwd,
         "bwd_ratio": band_bwd / max(zero_bwd, 1),
+        "cores": cores,
+        "zero_copy_bwd_bytes_per_core": zero_bwd_pc,
+        "zero_copy_bwd_bytes_mc_total": zero_bwd_mc,
+        "bwd_per_core_ratio": zero_bwd / max(zero_bwd_pc, 1),
         "zero_copy_train_bytes": zero_train,
         "materialized_band_train_bytes": band_train,
         "train_ratio": band_train / max(zero_train, 1),
@@ -307,6 +331,83 @@ def dataflow_traffic_report(*, h: int = 64, w: int = 64, c: int = 128,
         "zero_copy_total_bytes_q": total_q,
         "q_total_ratio": zero_total / max(total_q, 1),
         "tiles_int8": kt_q,
+    }
+
+
+def parallel_training_report(*, h: int = 64, w: int = 64, c: int = 128,
+                             m: int = 128, batch: int = 8, tile_h: int = 8,
+                             tile_w: int | None = None,
+                             offset_bound: float = 2.0,
+                             kernel_size: int = 3, stride: int = 1,
+                             cores: int = 2, devices: int = 4,
+                             bytes_per_elem: int = 4) -> dict:
+    """Modeled two-level parallel-training picture of one bounded DCL
+    (EXPERIMENTS.md §Parallel training).
+
+    **Core level (Megacore backward split).**  Each core owns a batch
+    shard: its dw-stationary backward traffic (band recompute, d_input
+    RMW, cotangent/weight fetches, d_offsets) drops exactly ``cores``x
+    while it flushes one full partial-d_weights block.  The honest
+    caveat is also modeled: the cores *share* HBM, so aggregate
+    bandwidth demand does not drop — ``core_speedup_hbm_bound`` (~1x)
+    vs ``core_speedup_compute_bound`` (= cores, the grid-step split) —
+    Megacore pays off exactly when the backward is compute-bound, which
+    the high-CTC chooser tiles make the common case.
+
+    **Device level (shard_map data parallelism).**  Each device owns
+    ``batch/devices`` samples with its *own* HBM, plus the d_weights
+    psum over ICI each step.  ``device_speedup`` is the modeled
+    HBM-time ratio t(1)/t(devices) with the psum charged at ICI
+    bandwidth (2x dw bytes: reduce-scatter + all-gather halves of the
+    ring all-reduce).
+    """
+    if batch % devices or (batch // devices) % cores:
+        raise ValueError(
+            f"devices={devices} must divide batch={batch}, and "
+            f"cores={cores} must divide the per-device shard "
+            f"({batch}//{devices}) — the same constraints "
+            f"kernels.ops.check_batch_split enforces")
+    shape = LayerShape(h=h, w=w, c_in=c, c_out=m, kernel_size=kernel_size,
+                       stride=stride, offset_bound=offset_bound)
+    if tile_w is None:
+        kt = choose_kernel_tiles(shape, batch=batch)
+        t = TileConfig(t_h=tile_h, t_w=kt.tile_w, t_n=kt.tile_c,
+                       t_m=kt.tile_m)
+    else:
+        t = TileConfig(t_h=tile_h, t_w=tile_w, t_n=c, t_m=m)
+    kw = dict(dataflow="zero_copy", dilation=1,
+              bytes_per_elem=bytes_per_elem)
+    bwd_1 = dcl_backward_hbm_bytes(shape, t, batch=batch, **kw)
+    bwd_per_core = dcl_backward_hbm_bytes(shape, t, batch=batch,
+                                          cores=cores, per_core=True, **kw)
+    bwd_mc_total = dcl_backward_hbm_bytes(shape, t, batch=batch,
+                                          cores=cores, **kw)
+    dw_bytes = kernel_size ** 2 * c * m * bytes_per_elem
+    per_dev_batch = batch // devices
+    train_1 = dcl_train_hbm_bytes(shape, t, batch=batch, **kw)
+    train_dev = dcl_train_hbm_bytes(shape, t, batch=per_dev_batch,
+                                    cores=cores, **kw)
+    # HBM-time model: each device streams its own shard from its own
+    # HBM; the dw psum crosses ICI (ring all-reduce ~ 2x payload).
+    t_single = train_1 / V5E_HBM_BW
+    t_dev = train_dev / V5E_HBM_BW + 2 * dw_bytes / V5E_ICI_BW
+    return {
+        "tiles": t,
+        "cores": cores,
+        "devices": devices,
+        "bwd_bytes_seq": bwd_1,
+        "bwd_bytes_per_core": bwd_per_core,
+        "bwd_bytes_mc_total": bwd_mc_total,
+        "bwd_per_core_ratio": bwd_1 / max(bwd_per_core, 1),
+        "dw_stationary_bytes": bwd_1 - dw_bytes,
+        "core_speedup_compute_bound": float(cores),
+        "core_speedup_hbm_bound": bwd_1 / max(bwd_mc_total, 1),
+        "train_bytes_single": train_1,
+        "train_bytes_per_device": train_dev,
+        "dw_psum_bytes": dw_bytes,
+        "modeled_step_sec_single": t_single,
+        "modeled_step_sec_sharded": t_dev,
+        "device_speedup": t_single / max(t_dev, 1e-30),
     }
 
 

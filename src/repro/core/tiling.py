@@ -327,8 +327,21 @@ def dcl_total_hbm_bytes(shape: LayerShape, t: TileConfig, *,
 def dcl_backward_hbm_bytes(shape: LayerShape, t: TileConfig, *,
                            dataflow: str = "zero_copy", batch: int = 1,
                            dilation: int = 1,
-                           bytes_per_elem: int = 4) -> int:
+                           bytes_per_elem: int = 4,
+                           cores: int = 1,
+                           per_core: bool = False) -> int:
     """HBM bytes of one whole-layer DCL *backward* pass.
+
+    ``cores`` models the Megacore batch split of
+    ``kernels.deform_conv_bwd`` (zero-copy only): every batch-indexed
+    term — the band recompute read, the d_input read-modify-write, the
+    cotangent/weight fetches, the d_offsets writes — is owned by
+    exactly one core, so the *per-core* traffic (``per_core=True``) is
+    those "dw-stationary" terms divided by ``cores`` plus one full
+    partial-``d_weights`` flush.  The default total view charges every
+    core's partial flush plus the reduce epilogue (read ``cores``
+    partials, write one reduced block); the batch-indexed terms are
+    unchanged in aggregate — cores split *work*, they don't shrink it.
 
     ``zero_copy`` models ``kernels.deform_conv_bwd``: per (row-tile,
     width-tile, C-chunk) grid step the kernel re-reads one Eq. 6
@@ -370,6 +383,13 @@ def dcl_backward_hbm_bytes(shape: LayerShape, t: TileConfig, *,
                                   dilation=dilation, offset_bound=b) - s
 
     doff_writes = ho * wo * 2 * k2
+    if cores < 1:
+        raise ValueError(f"cores={cores} must be >= 1")
+    if dataflow != "zero_copy" and (cores != 1 or per_core):
+        raise ValueError(
+            f"cores={cores}/per_core={per_core} model the Megacore "
+            f"split of the zero-copy backward kernel only (got "
+            f"dataflow={dataflow!r})")
 
     if dataflow == "zero_copy":
         # Per-grid-step costs of the fused backward kernel: the
@@ -390,8 +410,20 @@ def dcl_backward_hbm_bytes(shape: LayerShape, t: TileConfig, *,
         band_elems = h_tiles * w_tiles * band_h * band_w * c
         inp = band_elems          # recompute read
         dx_rmw = 2 * band_elems   # d_input band read + write per step
-        return (batch * (inp + dx_rmw + g_reads + w_reads + doff_writes)
-                + dw_writes) * bytes_per_elem
+        batch_terms = inp + dx_rmw + g_reads + w_reads + doff_writes
+        if per_core:
+            # One core's share: its batch shard's terms + its own full
+            # partial-d_weights flush (the dw-stationary terms drop
+            # exactly cores x; dw does not — each core carries a whole
+            # partial).
+            return (-(-batch // cores) * batch_terms
+                    + dw_writes) * bytes_per_elem
+        if cores > 1:
+            # Aggregate: per-core partial flushes + the sum epilogue
+            # (read cores partials, write the reduced block).
+            dw_total = cores * dw_writes + (cores + 1) * dw_writes
+            return (batch * batch_terms + dw_total) * bytes_per_elem
+        return (batch * batch_terms + dw_writes) * bytes_per_elem
     if dataflow == "materialized_band":
         # XLA autodiff of the two-stage reference is NOT spatially
         # tiled: it reads g twice (d_weights and d_patches einsums),
@@ -419,15 +451,20 @@ def dcl_backward_hbm_bytes(shape: LayerShape, t: TileConfig, *,
 
 def dcl_train_hbm_bytes(shape: LayerShape, t: TileConfig, *,
                         dataflow: str = "zero_copy", batch: int = 1,
-                        dilation: int = 1, bytes_per_elem: int = 4) -> int:
+                        dilation: int = 1, bytes_per_elem: int = 4,
+                        cores: int = 1) -> int:
     """Combined fwd+bwd whole-layer HBM traffic — the objective the
-    kernel tile chooser minimizes for training (``objective='training'``)."""
+    kernel tile chooser minimizes for training (``objective='training'``).
+    ``cores`` charges the Megacore backward's extra partial-d_weights
+    flushes + reduce epilogue (zero-copy only)."""
+    bwd_cores = cores if dataflow == "zero_copy" else 1
     return (dcl_total_hbm_bytes(shape, t, dataflow=dataflow, batch=batch,
                                 dilation=dilation,
                                 bytes_per_elem=bytes_per_elem)
             + dcl_backward_hbm_bytes(shape, t, dataflow=dataflow,
                                      batch=batch, dilation=dilation,
-                                     bytes_per_elem=bytes_per_elem))
+                                     bytes_per_elem=bytes_per_elem,
+                                     cores=bwd_cores))
 
 
 def zerocopy_vmem_bytes(shape: LayerShape, t: TileConfig, *,
@@ -507,6 +544,7 @@ def choose_kernel_tiles(shape: LayerShape, *, batch: int = 1,
                         dilation: int = 1,
                         objective: str = "training",
                         dtype: str | None = None,
+                        cores: int = 1,
                         vmem_budget: int = V5E_VMEM_BYTES) -> KernelTiles:
     """Pick (tile_h, tile_w, tile_c, tile_m) for the zero-copy fused
     kernels: minimize modeled whole-layer HBM traffic among tile points
@@ -527,6 +565,13 @@ def choose_kernel_tiles(shape: LayerShape, *, batch: int = 1,
     legacy ``dtype=None`` keeps the PR-1/2 convention (bf16 VMEM
     working set, fp32 traffic) so existing chooser results are stable.
 
+    ``cores`` evaluates the training objective with the Megacore
+    backward split's traffic (extra partial-d_weights flushes + reduce
+    epilogue): the dw terms grow with cores, so the chooser leans
+    toward channel tiles that keep the per-core partial cheap.  Each
+    core has its own VMEM on Megacore parts, so the VMEM budgets are
+    already per-core and need no scaling.
+
     This replaces the hand-passed tile arguments of ``ops.deform_conv``
     (Sec. 3.2 methodology, evaluated on the zero-copy traffic model).
     The row-tile candidate set extends to 32: per-tile halo re-reads
@@ -536,6 +581,8 @@ def choose_kernel_tiles(shape: LayerShape, *, batch: int = 1,
     """
     if objective not in ("forward", "training"):
         raise ValueError(f"unknown objective {objective!r}")
+    if cores < 1:
+        raise ValueError(f"cores={cores} must be >= 1")
     vmem_b = dtype_bytes(dtype) if dtype is not None else 2
     traffic_b = dtype_bytes(dtype) if dtype is not None else 4
     # The int8 kernel keeps offsets/output fp32 (address precision +
@@ -549,8 +596,8 @@ def choose_kernel_tiles(shape: LayerShape, *, batch: int = 1,
                   for cap in (32, 64, 128, 256, 512, shape.c_in)})
     tms = sorted({_divisor_at_most(shape.c_out, cap)
                   for cap in (32, 64, 128, 256, shape.c_out)})
-    traffic_fn = (dcl_train_hbm_bytes if objective == "training"
-                  else dcl_total_hbm_bytes)
+    traffic_fn = (functools.partial(dcl_train_hbm_bytes, cores=cores)
+                  if objective == "training" else dcl_total_hbm_bytes)
     best: tuple[tuple, TileConfig] | None = None
     for t_h in ths:
         for t_w in tws:

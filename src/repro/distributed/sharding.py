@@ -25,6 +25,7 @@ Default mapping (single pod (data=16, model=16); multi-pod adds 'pod'):
 from __future__ import annotations
 
 import contextlib
+import math
 import threading
 from typing import Mapping, Sequence
 
@@ -158,3 +159,34 @@ def named_sharding(mesh: Mesh, shape: Sequence[int],
                    rules: AxisRules | None = None) -> NamedSharding:
     return NamedSharding(mesh, logical_spec(shape, axes, rules=rules,
                                             mesh=mesh))
+
+
+def batch_mesh_axes(*, logical: str = "batch"
+                    ) -> tuple[Mesh, tuple[str, ...], int] | None:
+    """Mesh axes the 'batch' logical axis maps to under the *active*
+    rules: ``(mesh, axis_names, total_size)``, or None when no mesh is
+    active, the rules map ``logical`` to nothing, or every mapped axis
+    has size 1 (a 1-device host mesh — nothing to shard over).
+
+    Unlike ``logical_spec`` this does NOT apply the divisibility
+    fallback: the caller decides whether a non-dividing batch falls
+    back to the unsharded path or raises (``kernels.ops`` raises when
+    sharding was explicitly requested — the data-parallel ``shard_map``
+    kernel path needs equal shards, there is no GSPMD to pick up the
+    slack).
+    """
+    ctx = current_rules()
+    if ctx is None or ctx[1] is None:
+        return None
+    rules, mesh = ctx
+    target = rules.get(logical)
+    if target is None:
+        return None
+    sizes = _mesh_axis_sizes(mesh)
+    axes = tuple(ax for ax in ((target,) if isinstance(target, str)
+                               else tuple(target))
+                 if sizes.get(ax, 1) > 1)
+    total = math.prod(sizes[ax] for ax in axes)
+    if total <= 1:
+        return None
+    return mesh, axes, total

@@ -43,6 +43,29 @@ indices accumulate); on a real TPU backend Mosaic lowers small-range
 scatters like these via one-hot matmul / sorted segments — the band
 extent is the Eq. 6 bound, so the one-hot operand is VMEM-bounded
 independent of image size.
+
+**Megacore core split (PR 4).**  The grid is
+``(cores, n_per_core, h_tiles, w_tiles, c_steps)`` with the leading
+core axis carrying ``parallel`` dimension semantics: each core owns a
+disjoint contiguous shard of the batch, so on a Megacore TPU the two
+TensorCores split the batch halves instead of serializing the whole
+grid.  What makes that safe:
+
+* ``d_input``/``d_offsets`` are indexed by the batch sample — shards
+  never read-modify-write the same HBM region, halo rows included
+  (halos overlap only *within* a sample's spatial tiles, which stay
+  sequential per core);
+* ``d_weights`` accumulates in per-core VMEM scratch (hardware gives
+  each core a private scratch instance; interpret mode runs core
+  subgrids back-to-back, so the per-core init at the first shard step
+  gives the same isolation) and flushes one *partial* block per core
+  on the core's last spatial step — the caller reduces the
+  ``(cores, ...)`` partials with a cheap ``sum`` epilogue.
+
+``cores=1`` reproduces the PR-2/3 sequential kernel bit-for-bit (the
+singleton-axis reduce is exact); ``cores>1`` changes only the fp32
+summation order of ``d_weights`` (per-core partial sums instead of one
+interleaved fold).
 """
 from __future__ import annotations
 
@@ -66,14 +89,16 @@ def _bwd_zerocopy_kernel(dx0_hbm, x_hbm, off_ref, g_ref, w_ref,
                          sem_ref, rmw_sem, *, kernel_size: int, stride: int,
                          dilation: int, offset_bound: float, tile_h: int,
                          tile_w: int, band_h: int, band_w: int, tile_c: int,
-                         dw_flush_every_step: bool):
+                         n_per_core: int, dw_flush_every_step: bool):
     del dx0_hbm  # aliased with dx_hbm (zero-initialized output)
     k2 = kernel_size * kernel_size
-    i = pl.program_id(0)
-    j = pl.program_id(1)
-    ww = pl.program_id(2)
-    cc = pl.program_id(3)
-    c_steps = pl.num_programs(3)
+    core = pl.program_id(0)
+    b = pl.program_id(1)
+    j = pl.program_id(2)
+    ww = pl.program_id(3)
+    cc = pl.program_id(4)
+    c_steps = pl.num_programs(4)
+    i = core * n_per_core + b        # batch sample this grid step owns
     row0 = j * (tile_h * stride)
     col0 = ww * (tile_w * stride)
 
@@ -95,7 +120,10 @@ def _bwd_zerocopy_kernel(dx0_hbm, x_hbm, off_ref, g_ref, w_ref,
         doff_acc[...] = jnp.zeros_like(doff_acc)
         dma(0, 0).start()
 
-    @pl.when((i == 0) & (j == 0) & (ww == 0))
+    # First step of THIS core's batch shard: zero the per-core d_weights
+    # accumulator.  The condition is core-local (b, not i) so every
+    # core starts its partial sum from zero.
+    @pl.when((b == 0) & (j == 0) & (ww == 0))
     def _init_dw():
         dw_acc[cc] = jnp.zeros_like(dw_acc[cc])
 
@@ -149,23 +177,26 @@ def _bwd_zerocopy_kernel(dx0_hbm, x_hbm, off_ref, g_ref, w_ref,
         # Interpret-mode cadence: the interpreter re-materializes the
         # output block buffer on every revisit, so the accumulator must
         # be mirrored into dw_ref each step to survive the copy-out.
-        dw_ref[0] = dw_acc[cc]
+        dw_ref[0, 0] = dw_acc[cc]
     else:
         # Compiled cadence (ROADMAP "d_weights flush"): mirror the
-        # accumulator only on the LAST spatial grid step — the final
-        # revisit of each C-chunk block is the only copy-out that has
-        # to carry the complete sum, cutting the modeled dw write
-        # traffic by h_tiles*w_tiles*batch (see
-        # ``tiling.dcl_backward_hbm_bytes``).  The spatial grid axes
-        # are sequential ("arbitrary"), so the last step is well
-        # defined.
-        last_spatial = ((i == pl.num_programs(0) - 1)
-                        & (j == pl.num_programs(1) - 1)
-                        & (ww == pl.num_programs(2) - 1))
+        # accumulator only on the LAST spatial grid step of THIS
+        # CORE'S batch shard — the final revisit of each (core,
+        # C-chunk) block is the only copy-out that has to carry the
+        # complete partial sum, cutting the modeled dw write traffic
+        # by n_per_core*h_tiles*w_tiles per core (see
+        # ``tiling.dcl_backward_hbm_bytes``).  The batch/spatial grid
+        # axes are sequential ("arbitrary") within a core, so the
+        # core-local last step is well defined; the core axis itself
+        # is parallel, which is exactly why the flush condition must
+        # not reference it.
+        last_spatial = ((b == pl.num_programs(1) - 1)
+                        & (j == pl.num_programs(2) - 1)
+                        & (ww == pl.num_programs(3) - 1))
 
         @pl.when(last_spatial)
         def _flush_dw():
-            dw_ref[0] = dw_acc[cc]
+            dw_ref[0, 0] = dw_acc[cc]
 
     # d_patches: g @ W^T  -> (p, tc).
     dp = jnp.dot(g, wblk.T, preferred_element_type=jnp.float32)
@@ -207,13 +238,14 @@ def _bwd_zerocopy_kernel(dx0_hbm, x_hbm, off_ref, g_ref, w_ref,
 @functools.partial(
     jax.jit,
     static_argnames=("kernel_size", "stride", "dilation", "offset_bound",
-                     "tile_h", "tile_w", "tile_c", "interpret",
+                     "tile_h", "tile_w", "tile_c", "cores", "interpret",
                      "dw_flush_every_step"))
 def deform_conv_bwd_zerocopy(x_pad: Array, offsets: Array, g: Array,
                              w_tiles: Array, *, kernel_size: int,
                              stride: int, dilation: int, offset_bound: float,
                              tile_h: int, tile_w: int,
                              tile_c: int | None = None,
+                             cores: int = 1,
                              interpret: bool = True,
                              dw_flush_every_step: bool | None = None
                              ) -> tuple[Array, Array, Array]:
@@ -227,16 +259,25 @@ def deform_conv_bwd_zerocopy(x_pad: Array, offsets: Array, g: Array,
              dx_pad includes the zero padding (caller un-pads), dw_tiles
              is in the same blocked layout as ``w_tiles``.
 
+    ``cores`` splits the batch axis into per-core shards (Megacore
+    ``parallel`` semantics on the leading grid axis; must divide N —
+    ``ops.check_batch_split`` raises the friendly error).  Each core
+    emits a partial ``d_weights`` block; the ``sum`` epilogue here
+    reduces them (exact no-op at cores=1).
+
     ``dw_flush_every_step`` controls the d_weights accumulator->output
     mirror cadence: every grid step (required under the interpreter,
     which re-materializes output block buffers per revisit) or only on
-    the last spatial step (the compiled cadence, h_tiles*w_tiles*batch
-    fewer modeled dw writes).  ``None`` follows ``interpret``.
+    the core-local last spatial step (the compiled cadence,
+    n_per_core*h_tiles*w_tiles fewer modeled dw writes per core).
+    ``None`` follows ``interpret``.
     """
     n, hp, wp, c = x_pad.shape
     _, ho, wo, _ = offsets.shape
     assert ho % tile_h == 0 and wo % tile_w == 0, (ho, wo, tile_h, tile_w)
     assert g.shape[:3] == (n, ho, wo), (g.shape, offsets.shape)
+    assert cores >= 1 and n % cores == 0, (n, cores)
+    n_per_core = n // cores
     h_tiles, w_tiles_n = ho // tile_h, wo // tile_w
     k2 = kernel_size * kernel_size
     tc = tile_c or c
@@ -259,36 +300,41 @@ def deform_conv_bwd_zerocopy(x_pad: Array, offsets: Array, g: Array,
     out_shapes = (
         jax.ShapeDtypeStruct((n, hp, wp, c), x_pad.dtype),        # dx_pad
         jax.ShapeDtypeStruct((n, ho, wo, 2 * k2), offsets.dtype),  # d_off
-        jax.ShapeDtypeStruct((c_steps, k2 * tc, m), jnp.float32),  # dw
+        # Per-core d_weights partials, reduced by the epilogue below.
+        jax.ShapeDtypeStruct((cores, c_steps, k2 * tc, m), jnp.float32),
     )
-    return pl.pallas_call(
+    npc = n_per_core
+    dxp, doff, dw_partials = pl.pallas_call(
         functools.partial(
             _bwd_zerocopy_kernel, kernel_size=kernel_size, stride=stride,
             dilation=dilation, offset_bound=offset_bound, tile_h=tile_h,
             tile_w=tile_w, band_h=band_h, band_w=band_w, tile_c=tc,
-            dw_flush_every_step=dw_flush_every_step),
-        grid=(n, h_tiles, w_tiles_n, c_steps),
+            n_per_core=npc, dw_flush_every_step=dw_flush_every_step),
+        grid=(cores, n_per_core, h_tiles, w_tiles_n, c_steps),
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.ANY),      # dx seed (aliased)
             pl.BlockSpec(memory_space=pltpu.ANY),      # whole padded input
             pl.BlockSpec((1, tile_h, tile_w, 2 * k2),
-                         lambda i, j, ww, cc: (i, j, ww, 0)),
+                         lambda co, b, j, ww, cc: (co * npc + b, j, ww, 0)),
             pl.BlockSpec((1, tile_h, tile_w, m),
-                         lambda i, j, ww, cc: (i, j, ww, 0)),
+                         lambda co, b, j, ww, cc: (co * npc + b, j, ww, 0)),
             pl.BlockSpec((1, k2 * tc, m),
-                         lambda i, j, ww, cc: (cc, 0, 0)),
+                         lambda co, b, j, ww, cc: (cc, 0, 0)),
         ],
         out_specs=(
             pl.BlockSpec(memory_space=pltpu.ANY),      # dx_pad (aliased)
             pl.BlockSpec((1, tile_h, tile_w, 2 * k2),
-                         lambda i, j, ww, cc: (i, j, ww, 0)),
-            pl.BlockSpec((1, k2 * tc, m),
-                         lambda i, j, ww, cc: (cc, 0, 0)),
+                         lambda co, b, j, ww, cc: (co * npc + b, j, ww, 0)),
+            pl.BlockSpec((1, 1, k2 * tc, m),
+                         lambda co, b, j, ww, cc: (co, cc, 0, 0)),
         ),
         out_shape=out_shapes,
         scratch_shapes=[
             pltpu.VMEM((N_BUFFERS, band_h, band_w, tc), x_pad.dtype),
             pltpu.VMEM((band_h, band_w, tc), x_pad.dtype),
+            # Private per core: hardware gives each core its own scratch
+            # instance; interpret mode runs core subgrids sequentially
+            # and the per-core init zeroes it between shards.
             pltpu.VMEM((c_steps, k2 * tc, m), jnp.float32),
             pltpu.VMEM((tile_h, tile_w, k2, 2), jnp.float32),
             pltpu.SemaphoreType.DMA((N_BUFFERS,)),
@@ -296,7 +342,11 @@ def deform_conv_bwd_zerocopy(x_pad: Array, offsets: Array, g: Array,
         ],
         input_output_aliases={0: 0},
         compiler_params=tpu_compiler_params(
-            dimension_semantics=("arbitrary", "arbitrary", "arbitrary",
-                                 "arbitrary")),
+            dimension_semantics=("parallel", "arbitrary", "arbitrary",
+                                 "arbitrary", "arbitrary")),
         interpret=interpret,
     )(dx0, x_pad, offsets, g, w_tiles)
+    # Cheap epilogue: reduce the per-core d_weights partials.  Exact at
+    # cores=1 (singleton-axis sum); at cores>1 this is the only place
+    # the fp32 summation order differs from the sequential kernel.
+    return dxp, doff, jnp.sum(dw_partials, axis=0)

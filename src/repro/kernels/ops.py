@@ -38,6 +38,22 @@ contraction with int32 accumulation, fp32 bilinear coefficients, fused
 per-out-channel dequant epilogue — tiles resolved against the
 dtype-aware budgets (4x Eq. 6 band density).  Scales come from
 ``repro.quant`` calibration or dynamic absmax.
+
+Parallel training (PR 4), two composable levels:
+
+* ``cores=`` splits the *backward* kernel's batch grid axis into
+  per-core shards (Megacore ``parallel`` dimension semantics; see
+  ``deform_conv_bwd.py``) with a cheap per-core ``d_weights`` reduce
+  epilogue.
+* When a mesh is active (``distributed.sharding.use_rules(mesh=...)``)
+  and the 'batch' logical axis maps to real mesh axes, the bounded
+  fp32 path wraps itself in ``shard_map`` over those axes: each device
+  runs the full zero-copy fwd/bwd kernels on its batch shard and the
+  custom VJP psums ``d_weights`` across the data axes — data-parallel
+  DCL training never falls back to GSPMD partitioning the kernel
+  internals (which replicates / re-gathers).  ``shard_batch`` selects
+  the mode: None (auto: shard when the mesh divides the batch),
+  True (require sharding — non-divisible batches raise), False (never).
 """
 from __future__ import annotations
 
@@ -47,9 +63,12 @@ import math
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.deform_conv import DCLConfig, sample_patches
 from repro.core.tiling import LayerShape, choose_kernel_tiles
+from repro.distributed.sharding import batch_mesh_axes
 from .deform_sample import (band_geometry, deform_sample_banded,
                             deform_sample_zerocopy)
 from .deform_conv_fused import (deform_conv_fused_banded,
@@ -85,6 +104,75 @@ def check_channel_tiles(c: int, m: int, tile_c: int | None,
             f"chooser)")
 
 
+def check_batch_split(n: int, *, cores: int = 1,
+                      shard_of: int | None = None) -> None:
+    """Reject batch splits that don't divide the batch — a clear
+    ``ValueError`` at the public entry (à la ``check_channel_tiles``)
+    instead of a deep Pallas grid assert / shard_map shape error later.
+
+    ``shard_of`` names the pre-shard global batch in the message when
+    ``n`` is already a per-device shard (mesh sharding composes with
+    the core split: each device's shard is further split over cores).
+    """
+    if cores < 1:
+        raise ValueError(f"cores={cores} must be >= 1")
+    if n % cores != 0:
+        ctx = (f" (per-device shard of global batch N={shard_of})"
+               if shard_of is not None else "")
+        raise ValueError(
+            f"cores={cores} does not divide batch N={n}{ctx}; the "
+            f"Megacore backward splits the batch grid axis into "
+            f"per-core shards — pass a divisor of the batch (or "
+            f"cores=1 for the sequential backward kernel)")
+
+
+@dataclasses.dataclass(frozen=True)
+class _ShardSpec:
+    """Hashable mesh context of one batch-sharded deform_conv call."""
+    mesh: Mesh
+    axes: tuple[str, ...]
+
+    def pspec(self, rank: int) -> P:
+        """Full-rank PartitionSpec sharding dim 0 over the batch axes."""
+        return P(self.axes, *([None] * (rank - 1)))
+
+
+def resolve_batch_shard(n: int, *, shard_batch: bool | None = None,
+                        cores: int = 1) -> _ShardSpec | None:
+    """Decide whether (and how) to shard the batch axis over the active
+    mesh, validating the core split either way.
+
+    * ``shard_batch=None`` (auto): shard iff a mesh is active under
+      ``distributed.sharding.use_rules`` and its batch-mapped axes
+      divide ``n``; otherwise run unsharded (same silent-fallback
+      philosophy as ``logical_spec``).
+    * ``shard_batch=True``: require sharding — no active mesh or a
+      non-dividing batch raises a ``ValueError`` naming the sizes.
+    * ``shard_batch=False``: never shard.
+    """
+    got = batch_mesh_axes() if shard_batch is not False else None
+    if got is None:
+        if shard_batch:
+            raise ValueError(
+                "shard_batch=True but no mesh maps the 'batch' logical "
+                "axis — activate one with distributed.sharding."
+                "use_rules(mesh=...) (axes of size > 1 required)")
+        check_batch_split(n, cores=cores)
+        return None
+    mesh, axes, size = got
+    if n % size != 0:
+        if shard_batch:
+            raise ValueError(
+                f"batch N={n} does not divide the mesh batch axes "
+                f"{axes} (total size {size}); the shard_map kernel "
+                f"path needs equal per-device shards — pad the batch "
+                f"to a multiple of {size} or pass shard_batch=False")
+        check_batch_split(n, cores=cores)
+        return None
+    check_batch_split(n // size, cores=cores, shard_of=n)
+    return _ShardSpec(mesh=mesh, axes=axes)
+
+
 def tile_weights(w: Array, tile_c: int) -> Array:
     """(K*K, C, M) deform weights -> (C//tile_c, K*K*tile_c, M) blocks
     so the fused kernel's C-step reads one contiguous VMEM block."""
@@ -110,7 +198,8 @@ def resolve_tiles(h: int, w: int, c: int, m: int, *, kernel_size: int,
                   tile_h: int | None, tile_w: int | None,
                   tile_c: int | None, tile_m: int | None,
                   objective: str = "training",
-                  dtype: str | None = None
+                  dtype: str | None = None,
+                  cores: int = 1
                   ) -> tuple[int, int, int, int]:
     """Fill unspecified tile sizes from the Sec. 3.2 chooser; explicit
     arguments win.  ``objective="training"`` (the ``deform_conv``
@@ -119,13 +208,16 @@ def resolve_tiles(h: int, w: int, c: int, m: int, *, kernel_size: int,
     under both VMEM working sets; the forward-only ``deform_sample``
     resolves with ``objective="forward"``.  ``dtype`` selects the
     element-width-aware budgets (``"int8"`` exploits the 4x band
-    density of the quantized datapath)."""
+    density of the quantized datapath); ``cores`` evaluates the
+    training objective at the per-core backward traffic of the
+    Megacore split."""
     if None in (tile_h, tile_w, tile_c, tile_m):
         shape = LayerShape(h=h, w=w, c_in=c, c_out=m,
                            kernel_size=kernel_size, stride=stride,
                            offset_bound=offset_bound)
         kt = choose_kernel_tiles(shape, dilation=dilation,
-                                 objective=objective, dtype=dtype)
+                                 objective=objective, dtype=dtype,
+                                 cores=cores)
         tile_h = tile_h or kt.tile_h
         tile_w = tile_w or kt.tile_w
         tile_c = tile_c or kt.tile_c
@@ -292,6 +384,7 @@ class _DCSpec:
     tile_m: int | None
     dataflow: str
     interpret: bool
+    cores: int = 1          # Megacore batch split of the backward grid
 
 
 def _bounded_forward(spec: _DCSpec, x: Array, offsets: Array,
@@ -366,7 +459,7 @@ def _spec_tiles(spec: _DCSpec, x: Array, offsets: Array,
         kernel_size=spec.kernel_size, stride=spec.stride,
         dilation=spec.dilation, offset_bound=spec.offset_bound,
         tile_h=spec.tile_h, tile_w=spec.tile_w, tile_c=spec.tile_c,
-        tile_m=spec.tile_m)
+        tile_m=spec.tile_m, cores=spec.cores)
     return min(th, ho), min(tw, wo), tc, tm
 
 
@@ -420,6 +513,32 @@ def _deform_conv_int8(x: Array, offsets: Array, w: Array, *,
     return y[:, :ho, :wo].astype(x.dtype)
 
 
+def _bounded_backward(spec: _DCSpec, x: Array, offsets: Array, w: Array,
+                      gy: Array) -> tuple[Array, Array, Array]:
+    """(d_input, d_offsets, d_weights) of one bounded call via the fused
+    zero-copy backward kernel — shared by the single-device VJP and the
+    per-shard body of the ``shard_map`` VJP."""
+    n, h, w_, c = x.shape
+    ho, wo = offsets.shape[1], offsets.shape[2]
+    th, tw, tc, _ = _spec_tiles(spec, x, offsets, w)
+    off_dtype = offsets.dtype
+    xp, offsets, w_tiled, gy = _zerocopy_inputs(spec, x, offsets, w,
+                                                th, tw, tc, extra=gy)
+    dxp, doff, dwt = deform_conv_bwd_zerocopy(
+        xp, offsets, gy, w_tiled, kernel_size=spec.kernel_size,
+        stride=spec.stride, dilation=spec.dilation,
+        offset_bound=spec.offset_bound, tile_h=th, tile_w=tw, tile_c=tc,
+        cores=spec.cores, interpret=spec.interpret)
+    # Un-pad: _pad_zerocopy put pad+hb zero rows/cols top-left.
+    p0 = spec.dilation * (spec.kernel_size // 2) \
+        + int(math.ceil(spec.offset_bound))
+    dx = dxp[:, p0:p0 + h, p0:p0 + w_]
+    doff = doff[:, :ho, :wo]
+    dw = untile_weights(dwt, spec.kernel_size)
+    return (dx.astype(x.dtype), doff.astype(off_dtype),
+            dw.astype(w.dtype))
+
+
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
 def _deform_conv_bounded(spec: _DCSpec, x: Array, offsets: Array,
                          w: Array) -> Array:
@@ -432,63 +551,78 @@ def _deform_conv_bounded_fwd(spec, x, offsets, w):
 
 def _deform_conv_bounded_bwd(spec, res, gy):
     x, offsets, w = res
-    n, h, w_, c = x.shape
-    ho, wo = offsets.shape[1], offsets.shape[2]
-    th, tw, tc, _ = _spec_tiles(spec, x, offsets, w)
-    xp, offsets, w_tiled, gy = _zerocopy_inputs(spec, x, offsets, w,
-                                                th, tw, tc, extra=gy)
-    dxp, doff, dwt = deform_conv_bwd_zerocopy(
-        xp, offsets, gy, w_tiled, kernel_size=spec.kernel_size,
-        stride=spec.stride, dilation=spec.dilation,
-        offset_bound=spec.offset_bound, tile_h=th, tile_w=tw, tile_c=tc,
-        interpret=spec.interpret)
-    # Un-pad: _pad_zerocopy put pad+hb zero rows/cols top-left.
-    p0 = spec.dilation * (spec.kernel_size // 2) \
-        + int(math.ceil(spec.offset_bound))
-    dx = dxp[:, p0:p0 + h, p0:p0 + w_]
-    doff = doff[:, :ho, :wo]
-    dw = untile_weights(dwt, spec.kernel_size)
-    return (dx.astype(x.dtype), doff.astype(res[1].dtype),
-            dw.astype(w.dtype))
+    return _bounded_backward(spec, x, offsets, w, gy)
 
 
 _deform_conv_bounded.defvjp(_deform_conv_bounded_fwd,
                             _deform_conv_bounded_bwd)
 
 
+# ---------------------------------------------------------------------------
+# Mesh-sharded bounded path: shard_map over the batch axis, custom VJP
+# with an explicit d_weights psum epilogue.
+#
+# The custom_vjp wraps the shard_maps (one for forward, one for
+# backward) rather than the other way round, so gradient correctness
+# never depends on shard_map's transpose rules: each device runs the
+# zero-copy kernels on its batch shard; d_input/d_offsets are
+# batch-sharded like their primals, and the replicated weights'
+# cotangent is psummed across the batch mesh axes inside the backward
+# body (this also covers the QAT fake-quant path — the STE wrappers
+# act on the replicated weights *outside* this function, so the psummed
+# kernel dw is exactly the cotangent they consume).
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _deform_conv_sharded(spec: _DCSpec, shard: _ShardSpec, x: Array,
+                         offsets: Array, w: Array) -> Array:
+    pb = shard.pspec(4)
+    fn = shard_map(functools.partial(_bounded_forward, spec),
+                   mesh=shard.mesh,
+                   in_specs=(pb, pb, P(None, None, None)),
+                   out_specs=pb, check_rep=False)
+    return fn(x, offsets, w)
+
+
+def _deform_conv_sharded_fwd(spec, shard, x, offsets, w):
+    return _deform_conv_sharded(spec, shard, x, offsets, w), (x, offsets, w)
+
+
+def _deform_conv_sharded_bwd(spec, shard, res, gy):
+    x, offsets, w = res
+    pb = shard.pspec(4)
+    rep_w = P(None, None, None)
+
+    def body(x, offsets, w, gy):
+        dx, doff, dw = _bounded_backward(spec, x, offsets, w, gy)
+        # psum epilogue: w is replicated across the batch axes, so its
+        # cotangent is the sum of every shard's partial d_weights.
+        return dx, doff, jax.lax.psum(dw, shard.axes)
+
+    fn = shard_map(body, mesh=shard.mesh,
+                   in_specs=(pb, pb, rep_w, pb),
+                   out_specs=(pb, pb, rep_w), check_rep=False)
+    return fn(x, offsets, w, gy)
+
+
+_deform_conv_sharded.defvjp(_deform_conv_sharded_fwd,
+                            _deform_conv_sharded_bwd)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("kernel_size", "stride", "dilation", "offset_bound",
                      "tile_h", "tile_w", "tile_c", "tile_m", "dataflow",
-                     "precision", "interpret"))
-def deform_conv(x: Array, offsets: Array, w: Array, *, kernel_size: int = 3,
-                stride: int = 1, dilation: int = 1,
-                offset_bound: float | None = None,
-                tile_h: int | None = None, tile_w: int | None = None,
-                tile_c: int | None = None, tile_m: int | None = None,
-                dataflow: str = DEFAULT_DATAFLOW,
-                precision: str = "fp32",
-                x_scale: Array | None = None,
-                w_scale: Array | None = None,
-                interpret: bool | None = None) -> Array:
-    """Fused DCL stage 1+2: y = g(x, o) * w_deform  (Eq. 2).
-
-    x: (N, H, W, C); offsets: (N, Ho, Wo, 2*K*K); w: (K*K, C, M).
-    Returns (N, Ho, Wo, M).  Unspecified tile sizes are resolved by the
-    Sec. 3.2 chooser against the combined fwd+bwd zero-copy traffic
-    model.  The bounded path is differentiable end-to-end: ``jax.grad``
-    routes through the fused backward kernel of ``deform_conv_bwd.py``
-    (a ``jax.custom_vjp``), never through an XLA gather/scatter.
-
-    ``precision="int8"`` (bounded zero-copy only) runs the quantized
-    inference datapath of ``deform_conv_q.py``: int8 band DMA + int8
-    MXU contraction with int32 accumulation, fp32 bilinear
-    coefficients, fused per-out-channel dequant epilogue.  ``x_scale``
-    (per-tensor) / ``w_scale`` (per-out-channel, shape (M,)) override
-    the dynamic absmax observers with calibrated values
-    (``repro.quant.calibrate``); tiles resolve against the int8
-    dtype-aware budgets (4x Eq. 6 band density per VMEM byte).
-    """
+                     "precision", "cores", "shard", "interpret"))
+def _deform_conv_impl(x: Array, offsets: Array, w: Array, *,
+                      kernel_size: int, stride: int, dilation: int,
+                      offset_bound: float | None,
+                      tile_h: int | None, tile_w: int | None,
+                      tile_c: int | None, tile_m: int | None,
+                      dataflow: str, precision: str, cores: int,
+                      shard: _ShardSpec | None,
+                      x_scale: Array | None, w_scale: Array | None,
+                      interpret: bool | None) -> Array:
     n, h, w_, c = x.shape
     ho, wo = offsets.shape[1], offsets.shape[2]
     k2 = kernel_size * kernel_size
@@ -530,5 +664,82 @@ def deform_conv(x: Array, offsets: Array, w: Array, *, kernel_size: int = 3,
     spec = _DCSpec(kernel_size=kernel_size, stride=stride, dilation=dilation,
                    offset_bound=offset_bound, tile_h=tile_h, tile_w=tile_w,
                    tile_c=tile_c, tile_m=tile_m, dataflow=dataflow,
-                   interpret=interpret)
+                   interpret=interpret, cores=cores)
+    if shard is not None:
+        return _deform_conv_sharded(spec, shard, x, offsets, w)
     return _deform_conv_bounded(spec, x, offsets, w)
+
+
+def deform_conv(x: Array, offsets: Array, w: Array, *, kernel_size: int = 3,
+                stride: int = 1, dilation: int = 1,
+                offset_bound: float | None = None,
+                tile_h: int | None = None, tile_w: int | None = None,
+                tile_c: int | None = None, tile_m: int | None = None,
+                dataflow: str = DEFAULT_DATAFLOW,
+                precision: str = "fp32",
+                cores: int = 1,
+                shard_batch: bool | None = None,
+                x_scale: Array | None = None,
+                w_scale: Array | None = None,
+                interpret: bool | None = None) -> Array:
+    """Fused DCL stage 1+2: y = g(x, o) * w_deform  (Eq. 2).
+
+    x: (N, H, W, C); offsets: (N, Ho, Wo, 2*K*K); w: (K*K, C, M).
+    Returns (N, Ho, Wo, M).  Unspecified tile sizes are resolved by the
+    Sec. 3.2 chooser against the combined fwd+bwd zero-copy traffic
+    model.  The bounded path is differentiable end-to-end: ``jax.grad``
+    routes through the fused backward kernel of ``deform_conv_bwd.py``
+    (a ``jax.custom_vjp``), never through an XLA gather/scatter.
+
+    ``cores`` splits the backward kernel's batch grid axis per Megacore
+    core (``parallel`` dimension semantics + per-core d_weights reduce;
+    must divide the per-device batch — ``check_batch_split`` raises the
+    friendly error).  ``shard_batch`` controls the data-parallel
+    ``shard_map`` wrap of the bounded fp32 path over the active mesh's
+    batch axes (see ``resolve_batch_shard``: None = auto, True =
+    require, False = never).  Sharding is resolved OUTSIDE this
+    function's own jit boundary from
+    ``distributed.sharding.current_rules()`` — the mesh context is a
+    static cache key of ``_deform_conv_impl``, so eager/top-level calls
+    under different ``use_rules`` contexts never reuse a stale layout.
+    The usual jit caveat still applies one level up: a CALLER's
+    ``jax.jit`` bakes the context seen at its own trace time into its
+    cache (the Trainer builds its step inside ``use_rules(mesh=...)``
+    and keeps one mesh per instance for exactly this reason); pass
+    ``shard_batch=True`` to fail loudly instead of silently running
+    unsharded when the mesh matters.
+
+    ``precision="int8"`` (bounded zero-copy only) runs the quantized
+    inference datapath of ``deform_conv_q.py``: int8 band DMA + int8
+    MXU contraction with int32 accumulation, fp32 bilinear
+    coefficients, fused per-out-channel dequant epilogue.  ``x_scale``
+    (per-tensor) / ``w_scale`` (per-out-channel, shape (M,)) override
+    the dynamic absmax observers with calibrated values
+    (``repro.quant.calibrate``); tiles resolve against the int8
+    dtype-aware budgets (4x Eq. 6 band density per VMEM byte).
+    """
+    shard = None
+    if offset_bound is not None and precision == "fp32":
+        shard = resolve_batch_shard(x.shape[0], shard_batch=shard_batch,
+                                    cores=cores)
+    else:
+        if shard_batch:
+            raise ValueError(
+                "shard_batch=True requires the bounded fp32 kernel path "
+                "(offset_bound set, precision='fp32'); the unbounded "
+                "gather baseline and the int8 inference datapath "
+                "partition via GSPMD instead")
+        if cores != 1:
+            raise ValueError(
+                f"cores={cores} applies to the bounded fp32 kernel path "
+                f"(offset_bound set, precision='fp32') — only its fused "
+                f"backward has the Megacore batch split; this call "
+                f"dispatches the "
+                f"{'int8 inference' if precision == 'int8' else 'unbounded gather'} "
+                f"path, so pass cores=1")
+    return _deform_conv_impl(
+        x, offsets, w, kernel_size=kernel_size, stride=stride,
+        dilation=dilation, offset_bound=offset_bound, tile_h=tile_h,
+        tile_w=tile_w, tile_c=tile_c, tile_m=tile_m, dataflow=dataflow,
+        precision=precision, cores=cores, shard=shard,
+        x_scale=x_scale, w_scale=w_scale, interpret=interpret)

@@ -510,6 +510,7 @@ def dcl_apply(params: Mapping[str, Array], x: Array, *,
               offset_bound: float | None = None, use_kernel: bool = False,
               dataflow: str = "zero_copy", quant: str = "none",
               quant_scales: Mapping[str, Any] | None = None,
+              cores: int = 1, shard_batch: bool | None = None,
               dtype: Any = jnp.float32) -> tuple[Array, Array]:
     """One DCL forward pass -> (y, o_max).
 
@@ -525,6 +526,16 @@ def dcl_apply(params: Mapping[str, Array], x: Array, *,
     path (``dcl_forward``) remains the parity reference.  ``o_max``
     (the Eq. 5 statistic) is computed from the raw offsets outside the
     kernel, so the regularizer gradient flows through XLA either way.
+
+    Parallel training (PR 4): ``cores`` splits the backward kernel's
+    batch grid per Megacore core, and ``shard_batch`` controls the
+    data-parallel ``shard_map`` wrap of the kernel path over the active
+    mesh's batch axes (None = auto when a mesh is live under
+    ``distributed.sharding.use_rules``; True requires it and raises a
+    clear ``ValueError`` on non-dividing batches) — both forwarded to
+    ``ops.deform_conv``, including under ``quant="qat"`` (the STE
+    wrappers act on replicated values outside the kernel, so the
+    sharded VJP's d_weights psum is exactly the cotangent they need).
 
     ``quant`` selects the int8 datapath modes of ``repro.quant``:
 
@@ -576,7 +587,8 @@ def dcl_apply(params: Mapping[str, Array], x: Array, *,
                 y = ops.deform_conv(xq, offsets, wq, kernel_size=k,
                                     stride=stride, dilation=dilation,
                                     offset_bound=offset_bound,
-                                    dataflow=dataflow)
+                                    dataflow=dataflow, cores=cores,
+                                    shard_batch=shard_batch)
             else:
                 y = ref.deform_conv_fused_ref(xq, offsets, wq,
                                               kernel_size=k, stride=stride,
@@ -612,7 +624,8 @@ def dcl_apply(params: Mapping[str, Array], x: Array, *,
         w = params["w_deform"].astype(x.dtype).reshape(k * k, cin, cout)
         y = ops.deform_conv(x, offsets, w, kernel_size=k, stride=stride,
                             dilation=dilation, offset_bound=offset_bound,
-                            dataflow=dataflow)
+                            dataflow=dataflow, cores=cores,
+                            shard_batch=shard_batch)
         return y + params["b_deform"].astype(x.dtype), o_max
     y, stats = dcl_forward(params, x, cfg)
     return y, stats["o_max"]

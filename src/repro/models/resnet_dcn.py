@@ -48,6 +48,11 @@ class ResNetDCNConfig:
     use_kernel: bool = False       # route DCLs through the Pallas kernel
     dataflow: str = "zero_copy"    # kernel dataflow: zero_copy | banded
     quant: str = "none"            # DCL datapath: none | qat | int8
+    bwd_cores: int = 1             # Megacore batch split of the bwd kernel
+    # Data-parallel shard_map of the kernel path over the active mesh's
+    # batch axes: None = auto (shard when a mesh is live and divides the
+    # batch), True = require (ValueError otherwise), False = never.
+    shard_batch: bool | None = None
 
     @property
     def total_blocks(self) -> int:
@@ -136,6 +141,7 @@ def _apply_dcl(params, x: Array, cfg: ResNetDCNConfig, *, stride=1,
                      offset_bound=cfg.offset_bound,
                      use_kernel=cfg.use_kernel, dataflow=cfg.dataflow,
                      quant=cfg.quant, quant_scales=quant_scales,
+                     cores=cfg.bwd_cores, shard_batch=cfg.shard_batch,
                      dtype=cfg.dtype)
 
 

@@ -3,6 +3,9 @@
 Production posture:
 
 * params/optimizer sharded by the logical rules (FSDP + TP);
+* batches laid out data-parallel on the mesh's 'batch' axes before the
+  step, so the shard_map DCL kernel path (PR 4) consumes local shards
+  with no resharding;
 * gradient accumulation over microbatches (scan inside jit);
 * optional int8 error-feedback gradient compression;
 * checkpoint every ``ckpt_every`` steps (async, atomic, keep-k);
@@ -29,7 +32,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.checkpoint import CheckpointManager
 from repro.distributed.compression import ef_compress_grads, init_ef_state
-from repro.distributed.sharding import use_rules
+from repro.distributed.sharding import named_sharding, use_rules
 from repro.optim import Optimizer
 
 Array = jax.Array
@@ -146,7 +149,29 @@ class Trainer:
                     x, (self.cfg.microbatches,
                         x.shape[0] // self.cfg.microbatches) + x.shape[1:]),
                 batch)
-        return batch
+        return self._shard_batch(batch)
+
+    def _shard_batch(self, batch):
+        """Lay the host batch out data-parallel before the step: the
+        sample axis is placed on the mesh's 'batch' logical axes (PR 4
+        — the shard_map DCL kernel path then consumes its local shard
+        with no resharding; non-dividing batches fall back to
+        replication via the logical-rules divisibility check).  The
+        sample axis is axis 1 under gradient accumulation (axis 0 is
+        the microbatch scan)."""
+        if self.mesh is None:
+            return batch
+        axis = 1 if self.cfg.microbatches > 1 else 0
+
+        def put(x):
+            x = jnp.asarray(x)
+            if x.ndim <= axis:
+                return x
+            axes = [None] * x.ndim
+            axes[axis] = "batch"
+            return jax.device_put(
+                x, named_sharding(self.mesh, x.shape, axes))
+        return jax.tree_util.tree_map(put, batch)
 
     def run(self) -> list[dict]:
         cfg = self.cfg

@@ -1,0 +1,174 @@
+"""Shared body of the mesh-sharded training tests (PR 4).
+
+Two entry modes, one implementation:
+
+* **In-process** — when the pytest process already sees >= 4 devices
+  (the CI job sets ``XLA_FLAGS=--xla_force_host_platform_device_count=4``
+  + ``REPRO_KEEP_XLA_FLAGS=1`` so ``conftest.py`` keeps the override),
+  ``tests/test_sharded_training.py`` imports this module and calls
+  :func:`run_checks` directly.
+* **Subprocess** — on a plain 1-device box the test file spawns
+  ``python tests/_sharded_checks.py`` with the same env override (the
+  device count is locked at first jax init, so it cannot be raised
+  in-process) and asserts on the JSON this prints.  Tier-1 therefore
+  PASSES everywhere instead of skipping.
+
+The checks cover this PR's acceptance criteria: full-param grad parity
+of the shard_map kernel path (fp32 and QAT) vs the single-device
+reference, a data-parallel ``Trainer`` run end-to-end through the
+zero-copy kernels, jaxpr evidence that the sharded step really routes
+through ``shard_map`` + the custom-VJP kernels (with the d_weights
+psum epilogue), and the friendly batch-divisibility ``ValueError``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import sys
+
+if __name__ == "__main__":       # subprocess mode: force the devices
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _max_diff(a, b) -> float:
+    return float(jnp.max(jnp.abs(jnp.asarray(a) - jnp.asarray(b))))
+
+
+def _tol_excess(a, b, *, rtol: float = 1e-4, atol: float = 1e-4) -> float:
+    """max(|a-b| - (atol + rtol*|b|)): <= 0 iff allclose under the
+    repo's standard parity tolerances (psum tree-sums reorder fp32
+    adds, so large-magnitude grads carry proportionally large noise)."""
+    a, b = jnp.asarray(a), jnp.asarray(b)
+    return float(jnp.max(jnp.abs(a - b) - (atol + rtol * jnp.abs(b))))
+
+
+def _grads(forward, x, offs, wgt):
+    loss = lambda a, b, c: jnp.sum(jnp.sin(forward(a, b, c)))  # noqa: E731
+    return jax.grad(loss, argnums=(0, 1, 2))(x, offs, wgt)
+
+
+def run_checks() -> dict:
+    assert jax.device_count() >= 4, jax.devices()
+    from jax.flatten_util import ravel_pytree
+    from repro.data import DetectionDataConfig, detection_batch
+    from repro.distributed.sharding import use_rules
+    from repro.kernels import ops, ref
+    from repro.models import resnet_dcn as R
+    from repro.models.layers import dcl_apply, dcl_def, init_tree
+
+    mesh = jax.make_mesh((4,), ("data",))
+    out: dict = {"device_count": jax.device_count()}
+
+    # -- 1. raw kernel-path grad parity, sharded vs XLA reference ------
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (4, 12, 12, 4), jnp.float32)
+    offs = jax.random.normal(jax.random.fold_in(key, 1),
+                             (4, 12, 12, 18), jnp.float32)
+    wgt = jax.random.normal(jax.random.fold_in(key, 2),
+                            (9, 4, 8), jnp.float32) * 0.2
+    g_ref = _grads(lambda a, b, c: ref.deform_conv_fused_ref(
+        a, b, c, offset_bound=2.0), x, offs, wgt)
+    with use_rules(mesh=mesh):
+        out["shard_active"] = ops.resolve_batch_shard(4) is not None
+        g_sh = _grads(lambda a, b, c: ops.deform_conv(
+            a, b, c, offset_bound=2.0, shard_batch=True), x, offs, wgt)
+    for name, a, b in zip(("dx", "doff", "dw"), g_sh, g_ref):
+        out[f"dconv_{name}_diff"] = _max_diff(a, b)
+
+    # -- 2. QAT layer grad parity under the mesh -----------------------
+    params = init_tree(jax.random.PRNGKey(7), dcl_def(4, 8))
+    params["w_offset"] = 0.1 * jax.random.normal(
+        jax.random.fold_in(key, 3), params["w_offset"].shape, jnp.float32)
+
+    def qat_loss(p, shard):
+        y, o_max = dcl_apply(p, x, offset_bound=2.0, quant="qat",
+                             use_kernel=True, shard_batch=shard)
+        return jnp.sum(jnp.sin(y)) + 0.1 * o_max
+
+    # Same kernel path with and without the mesh: isolates the
+    # shard_map + dw-psum machinery (kernel-vs-reference QAT parity is
+    # tier-1 test_quant territory).
+    gq_ref = jax.grad(lambda p: qat_loss(p, False))(params)
+    with use_rules(mesh=mesh):
+        gq_sh = jax.grad(lambda p: qat_loss(p, True))(params)
+    out["qat_grad_tol_excess"] = max(
+        _tol_excess(gq_sh[k], gq_ref[k]) for k in gq_ref)
+
+    # -- 3. full-model step grad parity + jaxpr evidence ---------------
+    cfg = R.ResNetDCNConfig(
+        stage_sizes=(1, 1, 1, 1), widths=(16, 32, 64, 128), stem_width=8,
+        num_dcn=2, num_classes=4, img_size=32, offset_bound=2.0,
+        use_kernel=True, shard_batch=True)
+    cfg_ref = dataclasses.replace(cfg, use_kernel=False, shard_batch=None)
+    data = DetectionDataConfig(img_size=32, global_batch=4, num_classes=4,
+                               seed=3)
+    mparams = R.init_params(jax.random.PRNGKey(0), cfg)
+    batch = {k: jnp.asarray(v) for k, v in detection_batch(data, 0).items()}
+
+    def step(c):
+        return jax.value_and_grad(
+            lambda p: R.train_loss(p, c, batch, lam=0.1)[0])(mparams)
+
+    l_ref, grad_ref = step(cfg_ref)
+    with use_rules(mesh=mesh):
+        l_sh, grad_sh = step(cfg)
+        jaxpr = str(jax.make_jaxpr(
+            jax.grad(lambda p: R.train_loss(p, cfg, batch, lam=0.1)[0]))(
+            mparams))
+    out["model_loss_diff"] = abs(float(l_sh) - float(l_ref))
+    out["model_grad_diff"] = _max_diff(ravel_pytree(grad_sh)[0],
+                                       ravel_pytree(grad_ref)[0])
+    out["jaxpr_shard_map"] = "shard_map" in jaxpr
+    out["jaxpr_psum"] = "psum" in jaxpr
+    out["jaxpr_custom_vjp"] = "custom_vjp" in jaxpr
+
+    # -- 4. Trainer end-to-end on the mesh -----------------------------
+    import tempfile
+    from repro.distributed.sharding import use_rules as _ur
+    from repro.models.layers import spec_tree
+    from repro.optim import constant, sgd
+    from repro.train import Trainer, TrainerConfig
+
+    finals = {}
+    for label, c, m in (("single", dataclasses.replace(cfg, shard_batch=None),
+                         None),
+                        ("sharded", cfg, mesh)):
+        param_specs = None
+        if m is not None:
+            with _ur(mesh=m):
+                param_specs = spec_tree(R.model_def(cfg))
+        with tempfile.TemporaryDirectory() as tmp:
+            tr = Trainer(
+                loss_fn=lambda p, b, _c=c: R.train_loss(p, _c, b, lam=0.1),
+                params=R.init_params(jax.random.PRNGKey(0), cfg),
+                optimizer=sgd(constant(0.05), momentum=0.9), mesh=m,
+                param_specs=param_specs,
+                batch_fn=lambda s: {k: jnp.asarray(v) for k, v in
+                                    detection_batch(data, s).items()},
+                config=TrainerConfig(total_steps=3, ckpt_every=100,
+                                     ckpt_dir=tmp, log_every=100))
+            tr.run()
+        finals[label] = np.asarray(ravel_pytree(tr.params)[0])
+        if m is not None:
+            out["trainer_steps"] = len(tr.step_seconds)
+    out["trainer_param_diff"] = float(
+        np.max(np.abs(finals["sharded"] - finals["single"])))
+
+    # -- 5. friendly divisibility error --------------------------------
+    with use_rules(mesh=mesh):
+        try:
+            ops.deform_conv(x[:3], offs[:3], wgt, offset_bound=2.0,
+                            shard_batch=True)
+            out["mesh_divide_error"] = ""
+        except ValueError as e:
+            out["mesh_divide_error"] = str(e)
+    return out
+
+
+if __name__ == "__main__":
+    print(json.dumps(run_checks()))

@@ -1,8 +1,13 @@
 import os
 
 # Tests must see the plain host device(s); the 512-device override is
-# strictly dryrun.py's (set there before any jax import).
-os.environ.pop("XLA_FLAGS", None)
+# strictly dryrun.py's (set there before any jax import).  Exception:
+# the sharded-training CI job opts in to a forced multi-device CPU
+# (XLA_FLAGS=--xla_force_host_platform_device_count=N) by also setting
+# REPRO_KEEP_XLA_FLAGS=1 — see tests/test_sharded_training.py and
+# .github/workflows/ci.yml.
+if os.environ.get("REPRO_KEEP_XLA_FLAGS") != "1":
+    os.environ.pop("XLA_FLAGS", None)
 
 import jax  # noqa: E402
 

@@ -191,6 +191,106 @@ def test_dw_flush_cadence_parity():
                                       err_msg=name)
 
 
+def test_bwd_megacore_split_parity():
+    """Tentpole (PR 4): the Megacore-split backward (cores>1, per-core
+    d_weights partials + reduce epilogue) vs the sequential kernel —
+    d_input and d_offsets are batch-indexed and must be BIT-identical
+    (disjoint per-core HBM regions); d_weights differs only in fp32
+    partial-sum order."""
+    from repro.kernels.deform_conv_bwd import deform_conv_bwd_zerocopy
+    from repro.kernels.ops import _pad_zerocopy, tile_weights
+
+    key = jax.random.PRNGKey(5)
+    x = jax.random.normal(key, (4, 16, 16, 8), jnp.float32)
+    offs = jax.random.normal(jax.random.fold_in(key, 1),
+                             (4, 16, 16, 18), jnp.float32) * 2
+    wgt = jax.random.normal(jax.random.fold_in(key, 2), (9, 8, 8),
+                            jnp.float32) * 0.2
+    g = jax.random.normal(jax.random.fold_in(key, 3), (4, 16, 16, 8),
+                          jnp.float32)
+    xp = _pad_zerocopy(x, kernel_size=3, stride=1, dilation=1,
+                       offset_bound=2.0, tile_h=4, tile_w=8, ho=16, wo=16)
+    wt = tile_weights(wgt, 4)
+    outs = {}
+    for cores in (1, 2, 4):
+        outs[cores] = deform_conv_bwd_zerocopy(
+            xp, offs, g, wt, kernel_size=3, stride=1, dilation=1,
+            offset_bound=2.0, tile_h=4, tile_w=8, tile_c=4, cores=cores,
+            interpret=True)
+    for cores in (2, 4):
+        np.testing.assert_array_equal(np.asarray(outs[cores][0]),
+                                      np.asarray(outs[1][0]),
+                                      err_msg=f"dx cores={cores}")
+        np.testing.assert_array_equal(np.asarray(outs[cores][1]),
+                                      np.asarray(outs[1][1]),
+                                      err_msg=f"doff cores={cores}")
+        np.testing.assert_allclose(np.asarray(outs[cores][2]),
+                                   np.asarray(outs[1][2]),
+                                   rtol=1e-5, atol=1e-5,
+                                   err_msg=f"dw cores={cores}")
+
+
+def test_megacore_grad_matches_reference():
+    """jax.grad through ops.deform_conv(cores=2) (the public dispatch +
+    custom VJP + split kernel + reduce epilogue) matches the XLA
+    reference on the standard parity case."""
+    x, offs, wgt = _case_arrays("mc", 16, 16, 8, 8, 3, 1, 1, 1.0)
+    got = _grads(
+        lambda a, b, c_: ops.deform_conv(
+            a, b, c_, offset_bound=2.0, tile_h=4, tile_w=8, cores=2),
+        x, offs, wgt)
+    want = _grads(
+        lambda a, b, c_: ref.deform_conv_fused_ref(a, b, c_,
+                                                   offset_bound=2.0),
+        x, offs, wgt)
+    for name_, g, r in zip(("d_input", "d_offsets", "d_weights"), got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(r),
+                                   rtol=1e-4, atol=1e-4, err_msg=name_)
+
+
+def test_core_split_value_error():
+    """Satellite: a core count that doesn't divide the batch raises the
+    friendly ValueError naming the offending sizes (not a deep Pallas
+    grid assert)."""
+    x, offs, wgt = _case_arrays("mcerr", 16, 16, 4, 4, 3, 1, 1, 1.0)
+    with pytest.raises(ValueError, match=r"cores=3 does not divide.*N=2"):
+        ops.deform_conv(x, offs, wgt, offset_bound=2.0, cores=3)
+    with pytest.raises(ValueError, match="cores=0"):
+        ops.deform_conv(x, offs, wgt, offset_bound=2.0, cores=0)
+    # paths without the Megacore backward reject cores instead of
+    # silently ignoring it
+    with pytest.raises(ValueError, match="cores=2 applies to"):
+        ops.deform_conv(x, offs, wgt, cores=2)
+    with pytest.raises(ValueError, match="cores=2 applies to"):
+        ops.deform_conv(x, offs, wgt, offset_bound=2.0, precision="int8",
+                        cores=2)
+
+
+def test_bwd_per_core_traffic_drops_cores_x():
+    """Acceptance (PR 4): per-core backward HBM traffic drops exactly
+    cores x for the dw-stationary (batch-indexed) terms; only the
+    per-core partial-d_weights flush stays whole."""
+    from repro.core.tiling import (LayerShape, TileConfig,
+                                   dcl_backward_hbm_bytes)
+    shape = LayerShape(h=64, w=64, c_in=128, c_out=128, offset_bound=2.0)
+    t = TileConfig(t_h=8, t_w=64, t_n=128, t_m=128)
+    dw = 9 * 128 * 128 * 4
+    base = dcl_backward_hbm_bytes(shape, t, batch=8)
+    for cores in (2, 4):
+        pc = dcl_backward_hbm_bytes(shape, t, batch=8, cores=cores,
+                                    per_core=True)
+        assert pc - dw == (base - dw) // cores, (cores, pc, base)
+        # aggregate honesty: the split only ADDs the partial flushes +
+        # reduce epilogue, it never shrinks total traffic
+        tot = dcl_backward_hbm_bytes(shape, t, batch=8, cores=cores)
+        assert tot == base + 2 * cores * dw, (cores, tot, base)
+    # the report the benches/EXPERIMENTS carry
+    from repro.core.perf_model import dataflow_traffic_report
+    rep = dataflow_traffic_report(h=64, w=64, c=128, m=128, batch=4,
+                                  tile_h=8, offset_bound=2.0, cores=2)
+    assert rep["bwd_per_core_ratio"] >= 1.9, rep["bwd_per_core_ratio"]
+
+
 def test_modeled_train_traffic_acceptance_gate():
     """PR-2 acceptance: combined fwd+bwd modeled HBM traffic for the
     bounded 3x3 reference layer (H=W=64, C=M=128, batch=4, tile_h=8)

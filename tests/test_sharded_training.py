@@ -1,0 +1,106 @@
+"""Mesh-sharded data-parallel DCL training (PR 4 tentpole, level 2).
+
+``jax.grad`` through the shard_map-wrapped zero-copy kernel path on a
+forced multi-device CPU mesh must match the single-device reference
+parameter-for-parameter (<= 1e-4, the acceptance bound), including the
+``quant="qat"`` path and a full data-parallel ``Trainer`` run; the
+batch-divisibility error must be friendly; and the traced step must
+show the sharded machinery (shard_map + custom-VJP kernels + the
+d_weights psum epilogue) rather than a GSPMD fallback.
+
+The heavy lifting lives in ``tests/_sharded_checks.py``, which runs
+in-process when this pytest already sees >= 4 devices (the CI
+``sharded-4dev`` job) and otherwise ONCE in a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` — jax locks the
+device count at first init, and skipping would hide the coverage from
+plain tier-1 boxes.
+"""
+import functools
+import json
+import os
+import subprocess
+import sys
+
+import jax
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+
+
+@functools.lru_cache(maxsize=1)
+def _results() -> dict:
+    if jax.device_count() >= 4:
+        sys.path.insert(0, HERE)
+        try:
+            import _sharded_checks
+        finally:
+            sys.path.remove(HERE)
+        return _sharded_checks.run_checks()
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.join(os.path.dirname(HERE), "src"),
+                    env.get("PYTHONPATH")) if p)
+    proc = subprocess.run(
+        [sys.executable, os.path.join(HERE, "_sharded_checks.py")],
+        capture_output=True, text=True, env=env, timeout=1200)
+    assert proc.returncode == 0, (proc.stdout[-2000:], proc.stderr[-4000:])
+    return json.loads(proc.stdout.splitlines()[-1])
+
+
+def test_mesh_really_multi_device():
+    r = _results()
+    assert r["device_count"] >= 4
+    assert r["shard_active"] is True
+
+
+def test_sharded_kernel_grad_parity():
+    """d_input/d_offsets/d_weights of the shard_map kernel path match
+    the XLA gather reference (the dw psum epilogue composes the
+    per-device partials)."""
+    r = _results()
+    for k in ("dconv_dx_diff", "dconv_doff_diff", "dconv_dw_diff"):
+        assert r[k] <= 1e-4, (k, r[k])
+
+
+def test_sharded_qat_grad_parity():
+    """quant='qat' (fake-quant STE outside the kernel) trains through
+    the sharded custom-VJP path with full-layer grad parity (rtol+atol
+    1e-4 — psum tree-sums reorder fp32 adds on large-magnitude
+    grads)."""
+    r = _results()
+    assert r["qat_grad_tol_excess"] <= 0.0, r["qat_grad_tol_excess"]
+
+
+def test_sharded_model_step_grad_parity():
+    """Acceptance: one value_and_grad step of the miniature ResNet-DCN
+    on the 4-device mesh matches the single-device reference over the
+    FULL parameter vector to <= 1e-4."""
+    r = _results()
+    assert r["model_loss_diff"] <= 1e-5, r["model_loss_diff"]
+    assert r["model_grad_diff"] <= 1e-4, r["model_grad_diff"]
+
+
+def test_sharded_step_routes_through_shard_map_kernels():
+    """No GSPMD fallback: the traced training step contains the
+    shard_map wrap, the custom-VJP kernel call, and the d_weights psum
+    epilogue."""
+    r = _results()
+    assert r["jaxpr_shard_map"], "shard_map missing from the step jaxpr"
+    assert r["jaxpr_custom_vjp"], "custom-VJP kernel missing"
+    assert r["jaxpr_psum"], "d_weights psum epilogue missing"
+
+
+def test_sharded_trainer_end_to_end():
+    """The production Trainer trains data-parallel through the
+    zero-copy kernels and lands on the single-device parameters."""
+    r = _results()
+    assert r["trainer_steps"] == 3
+    assert r["trainer_param_diff"] <= 1e-4, r["trainer_param_diff"]
+
+
+def test_mesh_divisibility_value_error():
+    """Satellite: a batch that doesn't divide the mesh data axis raises
+    the friendly ValueError naming the offending sizes."""
+    r = _results()
+    msg = r["mesh_divide_error"]
+    assert "N=3" in msg and "4" in msg and "does not divide" in msg, msg
