@@ -23,6 +23,14 @@ zero-copy kernel (``ops.deform_conv(precision="int8")``, dynamic
 absmax scales + fused dequant included in the timed call) and record
 the modeled quantized-dataflow traffic — the trajectory JSON carries
 both precisions so the >= 3x int8 traffic drop is tracked across PRs.
+
+Chain entries (``--chain`` / ``chain=True``: ``us_chain_*`` /
+``hbm_bytes_chain_*``) run two back-to-back DCLs through the chained
+datapath (``ops.deform_conv_chain`` — fused in-kernel offset conv,
+int8 emission consumed verbatim by the second layer) vs the per-layer
+int8 datapath (XLA offset pass + ``precision="int8"`` kernel + fp32
+output each), and record the modeled 2-layer traffic of both —
+``run.py`` gates the modeled chained reduction >= 1.3x.
 """
 from __future__ import annotations
 
@@ -37,6 +45,7 @@ from repro.core.tiling import (LayerShape, PAPER_TILES, choose_kernel_tiles,
 from repro.kernels import ops, ref
 
 BANDED_TILE_H = 8     # the legacy banded path's hand-tiled default
+CHAIN_TRAFFIC_GATE = 1.3   # modeled chained-vs-per-layer reduction floor
 
 
 def _time(fn, *args, reps=5):
@@ -58,7 +67,8 @@ def _grad_fn(forward):
         lambda x, o, w: jnp.sum(forward(x, o, w)), argnums=(0, 1, 2)))
 
 
-def records(*, smoke: bool = False, precision: str = "both") -> list[dict]:
+def records(*, smoke: bool = False, precision: str = "both",
+            chain: bool = False) -> list[dict]:
     """Structured per-kernel records: forward and backward wall time
     (interpret mode, best-of-N) and the modeled HBM traffic of both DCL
     dataflows for the measured shape.
@@ -67,10 +77,15 @@ def records(*, smoke: bool = False, precision: str = "both") -> list[dict]:
     records), ``"int8"`` (the quantized zero-copy kernel — ``us_q_*``
     wall time and ``hbm_bytes_q_*`` modeled traffic, dequant epilogue
     included in the timed call), or ``"both"`` (one record carrying
-    both sets, the default — what CI uploads).
+    both sets, the default — what CI uploads).  ``chain`` adds the
+    chained two-layer records (``us_chain_*`` / ``hbm_bytes_chain_*``,
+    needs an int8 precision).
     """
     if precision not in ("fp32", "int8", "both"):
         raise ValueError(f"unknown precision {precision!r}")
+    if chain and precision == "fp32":
+        raise ValueError("--chain records run the int8 chained datapath; "
+                         "pass --precision int8 or both")
     out: list[dict] = []
     key = jax.random.PRNGKey(0)
     shapes = [(16, 16, 32, 32)] if smoke else \
@@ -174,8 +189,59 @@ def records(*, smoke: bool = False, precision: str = "both") -> list[dict]:
                     f"({ktq.tile_h},{ktq.tile_w},{ktq.tile_c},"
                     f"{ktq.tile_m})",
             })
+        if chain:
+            rec.update(_chain_records(x, wgt, h=h, w=w, c=c, m=m, rep=rep))
         out.append(rec)
     return out
+
+
+def _chain_records(x, wgt, *, h, w, c, m, rep) -> dict:
+    """Two back-to-back DCLs: chained int8 datapath vs per-layer int8.
+
+    The chained pair runs ``ops.deform_conv_chain`` twice — layer 1
+    emits int8 on layer 2's activation grid and layer 2 consumes the
+    tensor verbatim (self-consistent ``y_scale = x_scale``, so the
+    chain is shape- and scale-closed at c == m).  The per-layer pair
+    runs the XLA offset conv + ``precision="int8"`` kernel + fp32
+    emission each — exactly what a model without chaining pays twice.
+    Wall times are interpret-mode scaling checks; the modeled
+    ``hbm_bytes_chain_*`` numbers carry the acceptance ratio.
+    """
+    from repro.core.deform_conv import conv2d
+    from repro.quant.qtypes import compute_scale
+
+    if c != m:              # chaining hands the tensor over verbatim —
+        return {}           # skip (don't kill the whole bench) off-square
+    key = jax.random.PRNGKey(17)
+    k2 = 9
+    woff = jax.random.normal(key, (k2, c, 2 * k2), jnp.float32) * 0.05
+    boff = jnp.zeros((2 * k2,), jnp.float32)
+    bd = jnp.zeros((m,), jnp.float32)
+    sx = float(compute_scale(x))
+
+    def chain2(a):
+        y1 = ops.deform_conv_chain(a, wgt, woff, boff, bd,
+                                   offset_bound=2.0, x_scale=sx,
+                                   y_scale=sx, emit="int8")
+        return ops.deform_conv_chain(y1, wgt, woff, boff, bd,
+                                     offset_bound=2.0, x_scale=sx,
+                                     emit="fp32")
+
+    def per_layer2(a):
+        y = a
+        for _ in range(2):
+            offs = conv2d(y, woff.reshape(3, 3, c, 2 * k2), padding=1)
+            y = ops.deform_conv(y, offs, wgt, offset_bound=2.0,
+                                precision="int8")
+        return y
+
+    return {
+        "us_chain_2layer": _time(jax.jit(chain2), x),
+        "us_chain_per_layer_int8": _time(jax.jit(per_layer2), x),
+        "hbm_bytes_chain_2layer": rep["chain_bytes"],
+        "hbm_bytes_chain_per_layer": rep["chain_per_layer_bytes"],
+        "hbm_chain_traffic_ratio": rep["chain_ratio"],
+    }
 
 
 def train_step_records() -> list[dict]:
@@ -236,6 +302,7 @@ def train_step_records() -> list[dict]:
 
 
 def run(*, smoke: bool = False, precision: str = "both",
+        chain: bool = False,
         kernel_records: list[dict] | None = None) -> list[str]:
     rows = []
     key = jax.random.PRNGKey(0)
@@ -243,7 +310,7 @@ def run(*, smoke: bool = False, precision: str = "both",
     # (pass kernel_records to avoid re-timing — run.py shares one
     # records() call between the CSV rows and BENCH_kernels.json)
     for r in kernel_records if kernel_records is not None \
-            else records(smoke=smoke, precision=precision):
+            else records(smoke=smoke, precision=precision, chain=chain):
         if "us_median_step" in r:
             rows.append(f"kernel/{r['name']},{r['us_median_step']:.0f},"
                         f"median_of_{r['steps']}_steps")
@@ -271,6 +338,17 @@ def run(*, smoke: bool = False, precision: str = "both",
                 f"q_total_ratio_vs_fp32="
                 f"{r['hbm_q_total_ratio_vs_fp32']:.2f}x;"
                 f"tiles_int8={r['tiles_timed_int8']}")
+        if "us_chain_2layer" in r:
+            rows.append(
+                f"kernel/{r['name']}_chain2,{r['us_chain_2layer']:.0f},"
+                f"interpret-mode; "
+                f"per_layer_int8={r['us_chain_per_layer_int8']:.0f}us;"
+                f"hbm_model_chain="
+                f"{r['hbm_bytes_chain_2layer'] / 1e6:.2f}MB;"
+                f"hbm_model_per_layer="
+                f"{r['hbm_bytes_chain_per_layer'] / 1e6:.2f}MB;"
+                f"chain_traffic_ratio="
+                f"{r['hbm_chain_traffic_ratio']:.2f}x")
     # flash attention kernel (interpret) vs dense reference
     from repro.kernels.flash_attention import flash_attention
     from repro.kernels.ref import flash_attention_ref
@@ -313,4 +391,14 @@ def run(*, smoke: bool = False, precision: str = "both",
 
 
 if __name__ == "__main__":
-    print("\n".join(run()))
+    import argparse
+    _ap = argparse.ArgumentParser()
+    _ap.add_argument("--smoke", action="store_true")
+    _ap.add_argument("--precision", default="both",
+                     choices=("fp32", "int8", "both"))
+    _ap.add_argument("--chain", action="store_true",
+                     help="add the chained two-layer int8 records "
+                          "(us_chain_* / hbm_bytes_chain_*)")
+    _args = _ap.parse_args()
+    print("\n".join(run(smoke=_args.smoke, precision=_args.precision,
+                        chain=_args.chain)))

@@ -34,14 +34,17 @@ import traceback
 
 
 def write_kernel_json(path: str, recs: list[dict], *, smoke: bool,
-                      precision: str = "both") -> None:
+                      precision: str = "both", chain: bool = False) -> None:
     payload = {
         "smoke": smoke,
         "precision": precision,
+        "chain": chain,
         "note": "wall times are interpret-mode (CPU, best-of-N) — scaling "
                 "only; us_bwd_* time one fwd+vjp pullback; hbm_bytes_* are "
                 "the analytic dataflow model (tile_h=8 convention); "
-                "us_q_*/hbm_bytes_q_* are the int8 zero-copy datapath",
+                "us_q_*/hbm_bytes_q_* are the int8 zero-copy datapath; "
+                "us_chain_*/hbm_bytes_chain_* are the chained two-layer "
+                "int8 datapath vs per-layer int8",
         "kernels": recs,
     }
     with open(path, "w") as f:
@@ -109,6 +112,27 @@ def gate_zero_copy_regression(recs: list[dict]) -> int:
     return failures
 
 
+def gate_chain_traffic(recs: list[dict]) -> int:
+    """Chained-layer acceptance gate: the MODELED two-layer HBM traffic
+    of the chained int8 datapath must sit >= 1.3x below the per-layer
+    int8 datapath on every measured shape (``hbm_chain_traffic_ratio``
+    from ``tiling.dcl_chain_hbm_bytes`` — an analytic number, so no
+    noise tolerance).  Returns #failures."""
+    from benchmarks.kernel_bench import CHAIN_TRAFFIC_GATE
+    failures = 0
+    for r in recs:
+        if "hbm_chain_traffic_ratio" not in r:
+            continue
+        ratio = r["hbm_chain_traffic_ratio"]
+        ok = ratio >= CHAIN_TRAFFIC_GATE
+        print(f"bench/gate_chain_{r['name']},0,"
+              f"modeled_chain_ratio={ratio:.2f}x"
+              f"{'>=' if ok else '<'}{CHAIN_TRAFFIC_GATE}x"
+              f"{'' if ok else ';REGRESSION'}")
+        failures += 0 if ok else 1
+    return failures
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -117,6 +141,10 @@ def main(argv=None) -> None:
                     choices=("fp32", "int8", "both"),
                     help="DCL datapaths to bench: the fp32 kernels, the "
                          "int8 quantized kernel, or both (default)")
+    ap.add_argument("--chain", action="store_true",
+                    help="add the chained two-layer int8 records "
+                         "(us_chain_*/hbm_bytes_chain_*) and the modeled "
+                         ">= 1.3x chained-traffic gate")
     ap.add_argument("--out", default=os.path.dirname(os.path.abspath(__file__)),
                     help="directory for BENCH_kernels.json")
     args = ap.parse_args(argv)
@@ -128,10 +156,12 @@ def main(argv=None) -> None:
 
     def kernel_section():
         kernel_recs.extend(kernel_bench.records(smoke=args.smoke,
-                                                precision=args.precision))
+                                                precision=args.precision,
+                                                chain=args.chain))
         if not args.smoke:
             kernel_recs.extend(kernel_bench.train_step_records())
         return kernel_bench.run(smoke=args.smoke, precision=args.precision,
+                                chain=args.chain,
                                 kernel_records=kernel_recs)
 
     if args.smoke:
@@ -158,12 +188,14 @@ def main(argv=None) -> None:
     try:
         if not kernel_recs:
             kernel_recs = kernel_bench.records(smoke=args.smoke,
-                                               precision=args.precision)
+                                               precision=args.precision,
+                                               chain=args.chain)
         os.makedirs(args.out, exist_ok=True)
         write_kernel_json(os.path.join(args.out, "BENCH_kernels.json"),
                           kernel_recs, smoke=args.smoke,
-                          precision=args.precision)
+                          precision=args.precision, chain=args.chain)
         failures += gate_zero_copy_regression(kernel_recs)
+        failures += gate_chain_traffic(kernel_recs)
     except Exception:  # noqa: BLE001
         failures += 1
         print("bench/json,nan,ERROR")

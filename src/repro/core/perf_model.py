@@ -28,9 +28,9 @@ import math
 
 from .tiling import (LayerShape, TileConfig, V5E_HBM_BW, V5E_ICI_BW,
                      choose_kernel_tiles, dcl_backward_hbm_bytes,
-                     dcl_dataflow_hbm_bytes, dcl_total_hbm_bytes,
-                     dcl_train_hbm_bytes, input_buffer_size,
-                     receptive_field, PAPER_TILES)
+                     dcl_chain_hbm_bytes, dcl_dataflow_hbm_bytes,
+                     dcl_total_hbm_bytes, dcl_train_hbm_bytes,
+                     input_buffer_size, receptive_field, PAPER_TILES)
 
 # ---------------------------------------------------------------------------
 # Calibration constants
@@ -262,6 +262,17 @@ def dataflow_traffic_report(*, h: int = 64, w: int = 64, c: int = 128,
     ``zero_copy_bwd_bytes_mc_total`` is the aggregate including every
     core's partial-d_weights flush + the reduce epilogue (the honest
     price of the split).
+
+    Chained-layer records (``chain_*`` keys): two back-to-back int8
+    DCLs through the per-layer datapath (each layer pays the fp32
+    offset pass, the fp32->int8 quantize pass, and a fp32 output that
+    the next layer re-reads) vs the chained datapath
+    (``quant="int8_chain"``: in-kernel offset conv over the staged
+    band, int8 emission on the next layer's grid — every inter-layer
+    tensor crosses HBM once at 1 byte/elem).  ``chain_ratio`` is this
+    PR's >= 1.3x acceptance gate (``tiling.dcl_chain_hbm_bytes``);
+    ``total_bytes_q_fused_offsets`` is the single-layer kernel-only
+    view (``dcl_total_hbm_bytes(fused_offsets=True)``).
     """
     shape = LayerShape(h=h, w=w, c_in=c, c_out=m, kernel_size=kernel_size,
                        stride=stride, offset_bound=offset_bound)
@@ -307,6 +318,20 @@ def dataflow_traffic_report(*, h: int = 64, w: int = 64, c: int = 128,
     band_train = dcl_train_hbm_bytes(shape, t, dataflow="materialized_band",
                                      batch=batch,
                                      bytes_per_elem=bytes_per_elem)
+    if c == m:
+        chain_shape = shape
+    else:  # chaining needs C_in == C_out; model the square analogue
+        chain_shape = LayerShape(h=h, w=w, c_in=c, c_out=c,
+                                 kernel_size=kernel_size, stride=stride,
+                                 offset_bound=offset_bound)
+    chain_per_layer = dcl_chain_hbm_bytes(chain_shape, t, layers=2,
+                                          batch=batch, chained=False)
+    chain_fused = dcl_chain_hbm_bytes(chain_shape, t, layers=2,
+                                      batch=batch, chained=True)
+    total_q_fused = dcl_total_hbm_bytes(shape, t, dataflow="zero_copy",
+                                        batch=batch, bytes_per_elem=1,
+                                        out_bytes_per_elem=1,
+                                        fused_offsets=True)
     return {
         "tiles": t,
         "zero_copy_bytes": zero,
@@ -331,6 +356,11 @@ def dataflow_traffic_report(*, h: int = 64, w: int = 64, c: int = 128,
         "zero_copy_total_bytes_q": total_q,
         "q_total_ratio": zero_total / max(total_q, 1),
         "tiles_int8": kt_q,
+        "chain_layers": 2,
+        "chain_per_layer_bytes": chain_per_layer,
+        "chain_bytes": chain_fused,
+        "chain_ratio": chain_per_layer / max(chain_fused, 1),
+        "total_bytes_q_fused_offsets": total_q_fused,
     }
 
 

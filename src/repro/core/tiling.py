@@ -294,7 +294,8 @@ def dcl_total_hbm_bytes(shape: LayerShape, t: TileConfig, *,
                         dataflow: str = "zero_copy", batch: int = 1,
                         dilation: int = 1, bytes_per_elem: int = 4,
                         offset_bytes_per_elem: int | None = None,
-                        out_bytes_per_elem: int | None = None) -> int:
+                        out_bytes_per_elem: int | None = None,
+                        fused_offsets: bool = False) -> int:
     """Whole-layer HBM traffic: input dataflow + offsets + weights + out.
 
     Weight blocks are re-fetched per (row-tile, width-tile) because the
@@ -306,6 +307,12 @@ def dcl_total_hbm_bytes(shape: LayerShape, t: TileConfig, *,
     datapath keeps both at fp32 (address generation is full precision
     and the fused dequant epilogue emits fp32) while the input band and
     weight blocks travel at 1 byte/elem.
+
+    ``fused_offsets`` models the chained datapath's in-kernel offset
+    stage (``band_pipeline.offset_conv_stage``): the offsets never
+    exist in HBM (the term drops entirely) and the offset-conv weight
+    blocks are re-fetched per spatial tile alongside the deform blocks
+    instead.
     """
     k2 = shape.kernel_size ** 2
     off_b = offset_bytes_per_elem or bytes_per_elem
@@ -317,11 +324,86 @@ def dcl_total_hbm_bytes(shape: LayerShape, t: TileConfig, *,
     inp = dcl_dataflow_hbm_bytes(shape, t, dataflow=dataflow, batch=batch,
                                  dilation=dilation,
                                  bytes_per_elem=bytes_per_elem)
-    offs = batch * ho * wo * 2 * k2 * off_b
+    if fused_offsets:
+        offs = batch * h_tiles * w_tiles * k2 * shape.c_in * 2 * k2 \
+            * bytes_per_elem
+    else:
+        offs = batch * ho * wo * 2 * k2 * off_b
     wgt = batch * h_tiles * w_tiles * k2 * shape.c_in * shape.c_out \
         * bytes_per_elem
     out = batch * ho * wo * shape.c_out * out_b
     return inp + offs + wgt + out
+
+
+def dcl_chain_hbm_bytes(shape: LayerShape, t: TileConfig, *,
+                        layers: int = 2, batch: int = 1,
+                        dilation: int = 1,
+                        chained: bool = True) -> int:
+    """Whole-stack HBM bytes of ``layers`` back-to-back int8 DCLs —
+    the chained-layer accounting behind the ``quant="int8_chain"``
+    datapath (requires ``shape.c_in == shape.c_out``: chaining hands
+    the tensor over verbatim).
+
+    ``chained=False`` models the per-layer int8 datapath, charging each
+    layer everything it actually costs end to end:
+
+    * the XLA offset pass reads the fp32 input plane and writes the
+      fp32 offsets, which the kernel then re-reads;
+    * the quantize pass reads the fp32 plane again and writes the int8
+      plane the band DMA consumes;
+    * the kernel streams int8 bands + weight blocks and emits the
+      output fp32 — which is exactly the fp32 plane the NEXT layer's
+      offset/quantize passes re-read (no double counting: each layer
+      owns its own input prep).
+
+    ``chained=True`` models the fused datapath: the input arrives int8
+    (the head is quantized once — charged to the first layer), the
+    offset conv runs in-kernel over the already-staged band (its only
+    extra HBM traffic is the int8 offset-weight blocks, re-fetched per
+    spatial tile like the deform blocks; the offsets themselves never
+    exist in HBM), and each inter-layer tensor is emitted int8 on the
+    next layer's grid — crossing HBM once, at 1 byte/elem.  The chain
+    TAIL is priced honestly at fp32 (the last layer has no ``y_scale``
+    and emits through the dequant epilogue — exactly the ``emit="fp32"``
+    configuration the benchmarks time), so both sides of the ratio end
+    in the same fp32 tensor.
+
+    The modeled chained/per-layer ratio is gated >= 1.3x in
+    ``tests/test_chain.py`` and ``benchmarks/run.py`` (the PR
+    acceptance number reported by ``perf_model.dataflow_traffic_report``
+    ``chain_*`` keys).
+    """
+    if shape.c_in != shape.c_out:
+        raise ValueError(
+            f"chained layers hand the tensor over verbatim, so C_in "
+            f"must equal C_out (got {shape.c_in} != {shape.c_out})")
+    k2 = shape.kernel_size ** 2
+    c, m = shape.c_in, shape.c_out
+    ho, wo = out_hw(shape.h, shape.w, kernel_size=shape.kernel_size,
+                    stride=shape.stride, dilation=dilation)
+    h_tiles = -(-ho // t.t_h)
+    w_tiles = -(-wo // t.t_w)
+    plane = shape.h * shape.w * c                  # input plane elems
+    off_elems = ho * wo * 2 * k2
+    band_q = dcl_dataflow_hbm_bytes(shape, t, dataflow="zero_copy",
+                                    batch=batch, dilation=dilation,
+                                    bytes_per_elem=1)
+    wgt_q = batch * h_tiles * w_tiles * k2 * c * m            # int8 blocks
+    if not chained:
+        per_layer = (
+            band_q
+            + batch * (plane * 4                  # offset pass: fp32 read
+                       + off_elems * 4            # offsets written fp32
+                       + off_elems * 4            # ... re-read by kernel
+                       + plane * 4 + plane        # quantize: read + write
+                       + ho * wo * m * 4)         # fp32 output emission
+            + wgt_q)
+        return layers * per_layer
+    woff_q = batch * h_tiles * w_tiles * k2 * c * 2 * k2      # int8 blocks
+    head_quant = batch * (plane * 4 + plane)      # quantize once, layer 0
+    per_layer = band_q + wgt_q + woff_q + batch * ho * wo * m  # int8 out
+    tail_fp32 = batch * ho * wo * m * 3           # last emission 4B, not 1B
+    return layers * per_layer + head_quant + tail_fp32
 
 
 def dcl_backward_hbm_bytes(shape: LayerShape, t: TileConfig, *,

@@ -10,10 +10,13 @@ makes backward scatters provably in-band, so all irregularity stays in
 VMEM.
 
 One fused kernel produces all three cotangents per (batch, row-tile,
-width-tile, C-chunk) grid step, re-using a single Eq. 6 band DMA:
+width-tile, C-chunk) grid step, re-using a single Eq. 6 band DMA — the
+same ``band_pipeline.BandStager`` double-buffer pipeline the forward
+kernels are emitted with (the stager's warmup/prefetch/wait are called
+individually here so the d_input read-modify-write DMA can be
+interleaved into the overlap window):
 
-* the input band chunk streams HBM -> VMEM through the same
-  double-buffered ``make_async_copy`` pipeline as the forward kernel,
+* the input band chunk streams HBM -> VMEM through the shared stager,
   and the sampled patches are **recomputed** from it (cheap-recompute
   wins the traffic model: saving the (N, Ho, Wo, K^2, C) patch tensor
   as a residual would re-read ``K^2`` times the input volume from HBM,
@@ -77,21 +80,22 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from ._compat import tpu_compiler_params
-from .deform_sample import (N_BUFFERS, band_geometry, corner_geometry,
-                            make_band_dma)
+from .band_pipeline import (N_BUFFERS, BandSpec, DCLPlan, corner_geometry)
 
 Array = jax.Array
 
 
-def _bwd_zerocopy_kernel(dx0_hbm, x_hbm, off_ref, g_ref, w_ref,
-                         dx_hbm, doff_ref, dw_ref,
+def _bwd_zerocopy_kernel(plan: DCLPlan, dx0_hbm, x_hbm, off_ref, g_ref,
+                         w_ref, dx_hbm, doff_ref, dw_ref,
                          band_ref, rmw_ref, dw_acc, doff_acc,
-                         sem_ref, rmw_sem, *, kernel_size: int, stride: int,
-                         dilation: int, offset_bound: float, tile_h: int,
-                         tile_w: int, band_h: int, band_w: int, tile_c: int,
-                         n_per_core: int, dw_flush_every_step: bool):
+                         sem_ref, rmw_sem, *, n_per_core: int,
+                         dw_flush_every_step: bool):
     del dx0_hbm  # aliased with dx_hbm (zero-initialized output)
-    k2 = kernel_size * kernel_size
+    b_ = plan.band
+    k2 = b_.k2
+    tile_h, tile_w = b_.tile_h, b_.tile_w
+    band_h, band_w = b_.band_h, b_.band_w
+    tile_c = plan.tile_c
     core = pl.program_id(0)
     b = pl.program_id(1)
     j = pl.program_id(2)
@@ -99,14 +103,11 @@ def _bwd_zerocopy_kernel(dx0_hbm, x_hbm, off_ref, g_ref, w_ref,
     cc = pl.program_id(4)
     c_steps = pl.num_programs(4)
     i = core * n_per_core + b        # batch sample this grid step owns
-    row0 = j * (tile_h * stride)
-    col0 = ww * (tile_w * stride)
+    row0 = j * (tile_h * b_.stride)
+    col0 = ww * (tile_w * b_.stride)
 
-    def dma(step, slot):
-        return make_band_dma(
-            x_hbm, band_ref, sem_ref, batch=i, row0=row0, col0=col0,
-            c0=step * tile_c, band_h=band_h, band_w=band_w,
-            tile_c=tile_c, slot=slot)
+    stager = plan.stager(x_hbm, band_ref, sem_ref, batch=i, row0=row0,
+                         col0=col0)
 
     def rmw_dma(write: bool):
         region = dx_hbm.at[i, pl.ds(row0, band_h), pl.ds(col0, band_w),
@@ -118,7 +119,7 @@ def _bwd_zerocopy_kernel(dx0_hbm, x_hbm, off_ref, g_ref, w_ref,
     @pl.when(cc == 0)
     def _init_tile():
         doff_acc[...] = jnp.zeros_like(doff_acc)
-        dma(0, 0).start()
+        stager.warmup()
 
     # First step of THIS core's batch shard: zero the per-core d_weights
     # accumulator.  The condition is core-local (b, not i) so every
@@ -133,18 +134,15 @@ def _bwd_zerocopy_kernel(dx0_hbm, x_hbm, off_ref, g_ref, w_ref,
     # grid + the write wait at the end of each step).
     rmw_dma(write=False).start()
 
-    @pl.when(cc + 1 < c_steps)
-    def _prefetch():
-        dma(cc + 1, (cc + 1) % N_BUFFERS).start()
-
-    dma(cc, cc % N_BUFFERS).wait()
+    stager.prefetch(cc, c_steps)
+    band = stager.wait(cc)
 
     off_raw = off_ref[0].reshape(tile_h, tile_w, k2, 2)
     y0, x0, ty, tx = corner_geometry(
-        off_raw, kernel_size=kernel_size, stride=stride, dilation=dilation,
-        offset_bound=offset_bound, tile_h=tile_h, wo=tile_w)
+        off_raw, kernel_size=b_.kernel_size, stride=b_.stride,
+        dilation=b_.dilation, offset_bound=b_.offset_bound, tile_h=tile_h,
+        wo=tile_w)
 
-    band = band_ref[cc % N_BUFFERS]
     flat = band.reshape(band_h * band_w, tile_c)
     p = tile_h * tile_w * k2
     idx00 = (y0 * band_w + x0).reshape(p)
@@ -213,8 +211,8 @@ def _bwd_zerocopy_kernel(dx0_hbm, x_hbm, off_ref, g_ref, w_ref,
     def _flush_doff():
         # Eq. 5 clamp VJP: gradient flows only where the raw offset is
         # inside [-B, B] (ties are measure-zero; see module docstring).
-        mask = ((off_raw >= -offset_bound)
-                & (off_raw <= offset_bound)).astype(jnp.float32)
+        mask = ((off_raw >= -b_.offset_bound)
+                & (off_raw <= b_.offset_bound)).astype(jnp.float32)
         doff_ref[0] = (doff_acc[...] * mask).reshape(
             tile_h, tile_w, 2 * k2).astype(doff_ref.dtype)
 
@@ -254,7 +252,7 @@ def deform_conv_bwd_zerocopy(x_pad: Array, offsets: Array, g: Array,
     x_pad:   (N, Hp, Wp, C) zero-padded input, left whole in ANY/HBM
     offsets: (N, Ho, Wo, 2*K*K) *raw* offsets, Ho/Wo multiples of tiles
     g:       (N, Ho, Wo, M) output cotangent
-    w_tiles: (C//tile_c, K*K*tile_c, M) — ``ops.tile_weights`` layout
+    w_tiles: (C//tile_c, K*K*tile_c, M) — ``plan.tile_weights`` layout
     returns: (dx_pad fp-matched to x_pad, d_offsets, dw_tiles fp32) —
              dx_pad includes the zero padding (caller un-pads), dw_tiles
              is in the same blocked layout as ``w_tiles``.
@@ -285,14 +283,13 @@ def deform_conv_bwd_zerocopy(x_pad: Array, offsets: Array, g: Array,
     c_steps = c // tc
     assert w_tiles.shape[0] == c_steps and w_tiles.shape[1] == k2 * tc
     m = w_tiles.shape[2]
-    _, band_h = band_geometry(kernel_size=kernel_size, stride=stride,
-                              dilation=dilation, offset_bound=offset_bound,
-                              tile_h=tile_h)
-    _, band_w = band_geometry(kernel_size=kernel_size, stride=stride,
-                              dilation=dilation, offset_bound=offset_bound,
-                              tile_h=tile_w)
-    assert (h_tiles - 1) * tile_h * stride + band_h <= hp, "underpadded H"
-    assert (w_tiles_n - 1) * tile_w * stride + band_w <= wp, "underpadded W"
+    plan = DCLPlan(
+        band=BandSpec(kernel_size=kernel_size, stride=stride,
+                      dilation=dilation, offset_bound=offset_bound,
+                      tile_h=tile_h, tile_w=tile_w),
+        tile_c=tc, tile_m=None, cores=cores)
+    band_h, band_w = plan.band.band_h, plan.band.band_w
+    plan.band.check_padded(hp, wp, h_tiles, w_tiles_n)
     if dw_flush_every_step is None:
         dw_flush_every_step = interpret
 
@@ -306,10 +303,8 @@ def deform_conv_bwd_zerocopy(x_pad: Array, offsets: Array, g: Array,
     npc = n_per_core
     dxp, doff, dw_partials = pl.pallas_call(
         functools.partial(
-            _bwd_zerocopy_kernel, kernel_size=kernel_size, stride=stride,
-            dilation=dilation, offset_bound=offset_bound, tile_h=tile_h,
-            tile_w=tile_w, band_h=band_h, band_w=band_w, tile_c=tc,
-            n_per_core=npc, dw_flush_every_step=dw_flush_every_step),
+            _bwd_zerocopy_kernel, plan, n_per_core=npc,
+            dw_flush_every_step=dw_flush_every_step),
         grid=(cores, n_per_core, h_tiles, w_tiles_n, c_steps),
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.ANY),      # dx seed (aliased)
@@ -330,6 +325,8 @@ def deform_conv_bwd_zerocopy(x_pad: Array, offsets: Array, g: Array,
         ),
         out_shape=out_shapes,
         scratch_shapes=[
+            # Band scratch follows x's dtype (the fp32 training path;
+            # plan.band_scratch() would pin float32 — keep it general).
             pltpu.VMEM((N_BUFFERS, band_h, band_w, tc), x_pad.dtype),
             pltpu.VMEM((band_h, band_w, tc), x_pad.dtype),
             # Private per core: hardware gives each core its own scratch
@@ -337,7 +334,7 @@ def deform_conv_bwd_zerocopy(x_pad: Array, offsets: Array, g: Array,
             # and the per-core init zeroes it between shards.
             pltpu.VMEM((c_steps, k2 * tc, m), jnp.float32),
             pltpu.VMEM((tile_h, tile_w, k2, 2), jnp.float32),
-            pltpu.SemaphoreType.DMA((N_BUFFERS,)),
+            plan.dma_sem(),
             pltpu.SemaphoreType.DMA((2,)),
         ],
         input_output_aliases={0: 0},

@@ -9,26 +9,17 @@ registers and immediately feeds the MXU — the patches never exist in
 HBM.  Per Eq. 7, that removes 2*K^2*T_W*T_N elements/tile of round-trip
 traffic (the dominant HBM term for small N; see EXPERIMENTS.md §Perf).
 
-Two dataflows:
+The zero-copy kernel is emitted by ``band_pipeline.forward_call`` from a
+fp32 ``DCLPlan`` (grid ``(n, h_tiles, w_tiles, m_tiles, c_steps)``,
+double-buffered band stager, fp32 MXU accumulation, plain-cast flush) —
+the same emitter that instantiates the int8 and chained variants
+(``deform_conv_q``) and whose band staging the backward kernel shares.
 
-* **zero-copy** (default) — ``deform_conv_fused_zerocopy``: grid
-  ``(n, h_tiles, w_tiles, m_tiles, c_steps)``.  The padded input stays
-  whole in ``ANY``/HBM; each grid step DMAs one Eq. 6 (band_h, band_w)
-  band chunk into a double-buffered VMEM scratch via
-  ``pltpu.make_async_copy``, starting the next C-chunk's fetch before
-  the current chunk's gather + MXU work so the copy rides under the
-  compute.  Halo rows are re-read from HBM only at tile boundaries; the
-  input is never duplicated and VMEM is bounded independent of image
-  width (the width-tile axis).
-* **banded** (legacy) — ``deform_conv_fused_banded``: consumes the
-  HBM-materialized overlapping bands of ``ops._pad_and_band`` (a
-  ``band_h/(tile_h*stride)``-fold duplication of the input written and
-  re-read through HBM) and stages full-width bands per block.  Kept as
-  the parity/regression baseline.
-
-The channel contraction is innermost, accumulated in fp32 VMEM scratch —
-the same schedule as ``matmul.py``, fed by the sampler of
-``deform_sample.py``.
+``deform_conv_fused_banded`` (legacy) consumes the HBM-materialized
+overlapping bands of ``kernels.plan.pad_and_band`` (a
+``band_h/(tile_h*stride)``-fold duplication of the input written and
+re-read through HBM) and stages full-width bands per block via the
+BlockSpec pipeline.  Kept as the parity/regression baseline.
 """
 from __future__ import annotations
 
@@ -40,59 +31,10 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from ._compat import tpu_compiler_params
-from .deform_sample import (N_BUFFERS, _bilinear_from_band, band_geometry,
-                            make_band_dma)
+from .band_pipeline import (BandSpec, DCLPlan, _bilinear_from_band,
+                            forward_call)
 
 Array = jax.Array
-
-
-def _fused_zerocopy_kernel(x_hbm, off_ref, w_ref, out_ref, band_ref,
-                           acc_ref, sem_ref, *, kernel_size: int,
-                           stride: int, dilation: int, offset_bound: float,
-                           tile_h: int, tile_w: int, band_h: int,
-                           band_w: int, tile_c: int):
-    k2 = kernel_size * kernel_size
-    i = pl.program_id(0)
-    j = pl.program_id(1)
-    ww = pl.program_id(2)
-    cc = pl.program_id(4)
-    c_steps = pl.num_programs(4)
-
-    def dma(step, slot):
-        return make_band_dma(
-            x_hbm, band_ref, sem_ref, batch=i,
-            row0=j * (tile_h * stride), col0=ww * (tile_w * stride),
-            c0=step * tile_c, band_h=band_h, band_w=band_w,
-            tile_c=tile_c, slot=slot)
-
-    @pl.when(cc == 0)
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-        dma(0, 0).start()
-
-    # Double buffering: the next C-chunk's band streams in underneath
-    # this chunk's gather + MXU work.
-    @pl.when(cc + 1 < c_steps)
-    def _prefetch():
-        dma(cc + 1, (cc + 1) % N_BUFFERS).start()
-
-    dma(cc, cc % N_BUFFERS).wait()
-
-    off = off_ref[0].reshape(tile_h, tile_w, k2, 2)
-    patches = _bilinear_from_band(
-        band_ref[cc % N_BUFFERS], off, kernel_size=kernel_size,
-        stride=stride, dilation=dilation, offset_bound=offset_bound,
-        tile_h=tile_h, wo=tile_w)
-    # (tile_h*tile_w, k2*tc) @ (k2*tc, tm) on the MXU, fp32 accumulation.
-    lhs = patches.reshape(tile_h * tile_w, k2 * tile_c)
-    acc_ref[...] += jnp.dot(lhs, w_ref[0],
-                            preferred_element_type=jnp.float32)
-
-    @pl.when(cc == c_steps - 1)
-    def _flush():
-        tm = out_ref.shape[-1]
-        out_ref[0] = acc_ref[...].reshape(tile_h, tile_w, tm) \
-            .astype(out_ref.dtype)
 
 
 @functools.partial(
@@ -111,56 +53,19 @@ def deform_conv_fused_zerocopy(x_pad: Array, offsets: Array,
     x_pad:   (N, Hp, Wp, C) zero-padded input, left whole in ANY/HBM
     offsets: (N, Ho, Wo, 2*K*K), Ho = h_tiles*tile_h, Wo = w_tiles*tile_w
     w_tiles: (C//tile_c, K*K*tile_c, M) — deform weights pre-tiled by
-             ``ops.tile_weights`` so each C-step reads one contiguous block.
+             ``plan.tile_weights`` so each C-step reads one contiguous block.
     returns: (N, Ho, Wo, M)
     """
-    n, hp, wp, c = x_pad.shape
-    _, ho, wo, _ = offsets.shape
-    assert ho % tile_h == 0 and wo % tile_w == 0, (ho, wo, tile_h, tile_w)
-    h_tiles, w_tiles_n = ho // tile_h, wo // tile_w
-    k2 = kernel_size * kernel_size
-    tc = tile_c or c
-    assert c % tc == 0
-    c_steps = c // tc
-    assert w_tiles.shape[0] == c_steps and w_tiles.shape[1] == k2 * tc
+    c = x_pad.shape[-1]
     m = w_tiles.shape[2]
-    tm = tile_m or m
-    assert m % tm == 0
-    _, band_h = band_geometry(kernel_size=kernel_size, stride=stride,
-                              dilation=dilation, offset_bound=offset_bound,
-                              tile_h=tile_h)
-    _, band_w = band_geometry(kernel_size=kernel_size, stride=stride,
-                              dilation=dilation, offset_bound=offset_bound,
-                              tile_h=tile_w)
-    assert (h_tiles - 1) * tile_h * stride + band_h <= hp, "underpadded H"
-    assert (w_tiles_n - 1) * tile_w * stride + band_w <= wp, "underpadded W"
-
-    return pl.pallas_call(
-        functools.partial(
-            _fused_zerocopy_kernel, kernel_size=kernel_size, stride=stride,
-            dilation=dilation, offset_bound=offset_bound, tile_h=tile_h,
-            tile_w=tile_w, band_h=band_h, band_w=band_w, tile_c=tc),
-        grid=(n, h_tiles, w_tiles_n, m // tm, c_steps),
-        in_specs=[
-            pl.BlockSpec(memory_space=pltpu.ANY),      # whole padded input
-            pl.BlockSpec((1, tile_h, tile_w, 2 * k2),
-                         lambda i, j, ww, mm, cc: (i, j, ww, 0)),
-            pl.BlockSpec((1, k2 * tc, tm),
-                         lambda i, j, ww, mm, cc: (cc, 0, mm)),
-        ],
-        out_specs=pl.BlockSpec((1, tile_h, tile_w, tm),
-                               lambda i, j, ww, mm, cc: (i, j, ww, mm)),
-        out_shape=jax.ShapeDtypeStruct((n, ho, wo, m), x_pad.dtype),
-        scratch_shapes=[
-            pltpu.VMEM((N_BUFFERS, band_h, band_w, tc), x_pad.dtype),
-            pltpu.VMEM((tile_h * tile_w, tm), jnp.float32),
-            pltpu.SemaphoreType.DMA((N_BUFFERS,)),
-        ],
-        compiler_params=tpu_compiler_params(
-            dimension_semantics=("parallel", "parallel", "parallel",
-                                 "arbitrary", "arbitrary")),
-        interpret=interpret,
-    )(x_pad, offsets, w_tiles)
+    plan = DCLPlan(
+        band=BandSpec(kernel_size=kernel_size, stride=stride,
+                      dilation=dilation, offset_bound=offset_bound,
+                      tile_h=tile_h, tile_w=tile_w),
+        tile_c=tile_c or c, tile_m=tile_m or m, epilogue="cast",
+        band_dtype=x_pad.dtype.name)
+    return forward_call(plan, x_pad, offsets, w_tiles,
+                        out_dtype=x_pad.dtype, interpret=interpret)
 
 
 # ---------------------------------------------------------------------------
@@ -208,7 +113,7 @@ def deform_conv_fused_banded(bands: Array, offsets: Array, w_tiles: Array, *,
     bands:   (N, n_tiles, band_h, w_pad, C)
     offsets: (N, Ho, Wo, 2*K*K)
     w_tiles: (C//tile_c, K*K*tile_c, M) — deform weights pre-tiled by
-             ``ops.tile_weights`` so each C-step reads one contiguous block.
+             ``plan.tile_weights`` so each C-step reads one contiguous block.
     returns: (N, Ho, Wo, M)
     """
     n, n_tiles, band_h, w_pad, c = bands.shape

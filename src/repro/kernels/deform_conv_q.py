@@ -1,4 +1,4 @@
-"""int8 zero-copy fused DCL kernel (quantized datapath).
+"""int8 zero-copy fused DCL kernels (quantized datapath + layer chaining).
 
 The paper's accelerator computes in fixed point; the TPU analogue is an
 int8 band dataflow: the Eq. 6 geometry is dtype-independent, but at
@@ -11,8 +11,8 @@ Precision split (CoDeNet / Xu et al. 2021 — deformable conv tolerates
 8-bit weights/activations when interpolation stays high precision):
 
 * the **band DMA** streams symmetric-int8 activations HBM -> VMEM
-  through the same double-buffered ``make_async_copy`` pipeline as the
-  fp32 kernel (``make_band_dma`` — one geometry, two dtypes);
+  through the same double-buffered pipeline as the fp32 kernel
+  (``band_pipeline.BandStager`` — one geometry, two dtypes);
 * **bilinear coefficients are fp32**: corner indices/fractions come
   from the shared ``corner_geometry`` (address generation is always
   full precision), the int8 corner values combine in fp32, and the
@@ -22,14 +22,26 @@ Precision split (CoDeNet / Xu et al. 2021 — deformable conv tolerates
   exactly the activation scale;
 * the **MXU contraction runs int8 x int8 -> int32** (exact
   accumulation, no fp32 rounding inside the reduction);
-* a **fused dequant epilogue** rescales the int32 accumulator by the
-  per-output-channel combined scale ``s_x * s_w[m]`` and emits fp32 —
-  the quantized tensor never round-trips HBM.
+* the epilogue is plan-selected: a **fused dequant**
+  (``deform_conv_fused_zerocopy_q`` — rescale by the per-output-channel
+  ``s_x * s_w[m]``, emit fp32) or a **fused requant**
+  (``deform_conv_fused_zerocopy_chain`` — rescale by
+  ``s_x * s_w[m] / s_y`` with the bias folded as ``b[m] / s_y``, round,
+  clip, emit int8 on the next layer's activation grid).  Either way the
+  quantized tensor never round-trips HBM at fp32.
 
-Quantization/padding commute because the grid is symmetric (0 -> 0),
-so ``ops._pad_zerocopy`` pads the int8 plane directly.  This kernel is
-the *inference* datapath; training uses the fake-quant QAT wrappers of
-``repro.quant.qat`` through the fp32 custom-VJP kernels.
+The chain kernel additionally fuses the **offset-conv stage**
+(``band_pipeline.offset_conv_stage``): the offset conv's undeformed
+taps are a static-index subset of the staged Eq. 6 band, so the raw
+offsets are produced in-kernel from the int8 band + quantized offset
+weights — no separate fp32 offset pass and no offsets in HBM at all.
+
+Both kernels are emitted by ``band_pipeline.forward_call``; this module
+only builds their ``DCLPlan``s.  Quantization/padding commute because
+the grid is symmetric (0 -> 0), so the padded int8 plane needs no
+special casing.  These are *inference* datapaths; training uses the
+fake-quant QAT/chain wrappers of ``repro.quant.qat`` (STE) through the
+fp32 custom-VJP kernels.
 """
 from __future__ import annotations
 
@@ -37,94 +49,22 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-from ._compat import tpu_compiler_params
-from .deform_sample import (N_BUFFERS, band_geometry, corner_geometry,
-                            make_band_dma)
+from .band_pipeline import (  # noqa: F401  (re-export)
+    BandSpec, DCLPlan, _bilinear_int8_from_band, forward_call)
 
 Array = jax.Array
 
 
-def _bilinear_int8_from_band(band, off, *, kernel_size: int, stride: int,
-                             dilation: int, offset_bound: float,
-                             tile_h: int, wo: int):
-    """Sample an int8 VMEM band with fp32 coefficients -> int8 patches.
-
-    band: (band_h, w_pad, tc) int8; off: (tile_h, wo, K*K, 2) raw.
-    Returns (tile_h*wo*K*K, tc) int8 — integer values on the activation
-    grid (the convex bilinear mix of int8 values stays in [-127, 127]).
-    """
-    k2 = kernel_size * kernel_size
-    band_h, w_pad, tc = band.shape
-    y0, x0, ty, tx = corner_geometry(
-        off, kernel_size=kernel_size, stride=stride, dilation=dilation,
-        offset_bound=offset_bound, tile_h=tile_h, wo=wo)
-
-    flat = band.reshape(band_h * w_pad, tc)
-    p = tile_h * wo * k2
-    idx00 = (y0 * w_pad + x0).reshape(p)
-    ty = ty.reshape(p, 1)
-    tx = tx.reshape(p, 1)
-
-    def gat(idx):
-        return jnp.take(flat, idx, axis=0).astype(jnp.float32)
-
-    # Same corner order + accumulation order as the fp32 kernel, so the
-    # pre-round fp32 values match ``_bilinear_from_band`` bit-for-bit.
-    out = gat(idx00) * ((1 - ty) * (1 - tx))
-    out += gat(idx00 + 1) * ((1 - ty) * tx)
-    out += gat(idx00 + w_pad) * (ty * (1 - tx))
-    out += gat(idx00 + w_pad + 1) * (ty * tx)
-    return jnp.round(out).astype(jnp.int8)
-
-
-def _fused_zerocopy_q_kernel(x_hbm, off_ref, w_ref, scale_ref, out_ref,
-                             band_ref, acc_ref, sem_ref, *,
-                             kernel_size: int, stride: int, dilation: int,
-                             offset_bound: float, tile_h: int, tile_w: int,
-                             band_h: int, band_w: int, tile_c: int):
-    k2 = kernel_size * kernel_size
-    i = pl.program_id(0)
-    j = pl.program_id(1)
-    ww = pl.program_id(2)
-    cc = pl.program_id(4)
-    c_steps = pl.num_programs(4)
-
-    def dma(step, slot):
-        return make_band_dma(
-            x_hbm, band_ref, sem_ref, batch=i,
-            row0=j * (tile_h * stride), col0=ww * (tile_w * stride),
-            c0=step * tile_c, band_h=band_h, band_w=band_w,
-            tile_c=tile_c, slot=slot)
-
-    @pl.when(cc == 0)
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-        dma(0, 0).start()
-
-    @pl.when(cc + 1 < c_steps)
-    def _prefetch():
-        dma(cc + 1, (cc + 1) % N_BUFFERS).start()
-
-    dma(cc, cc % N_BUFFERS).wait()
-
-    off = off_ref[0].reshape(tile_h, tile_w, k2, 2)
-    patches_q = _bilinear_int8_from_band(
-        band_ref[cc % N_BUFFERS], off, kernel_size=kernel_size,
-        stride=stride, dilation=dilation, offset_bound=offset_bound,
-        tile_h=tile_h, wo=tile_w)
-    # (th*tw, k2*tc) int8 @ (k2*tc, tm) int8 -> int32 on the MXU.
-    lhs = patches_q.reshape(tile_h * tile_w, k2 * tile_c)
-    acc_ref[...] += jnp.dot(lhs, w_ref[0],
-                            preferred_element_type=jnp.int32)
-
-    @pl.when(cc == c_steps - 1)
-    def _dequant_flush():
-        tm = out_ref.shape[-1]
-        y = acc_ref[...].astype(jnp.float32) * scale_ref[0]
-        out_ref[0] = y.reshape(tile_h, tile_w, tm).astype(out_ref.dtype)
+def _int8_plan(*, kernel_size: int, stride: int, dilation: int,
+               offset_bound: float, tile_h: int, tile_w: int, tile_c: int,
+               tile_m: int, epilogue: str, fuse_offsets: bool) -> DCLPlan:
+    return DCLPlan(
+        band=BandSpec(kernel_size=kernel_size, stride=stride,
+                      dilation=dilation, offset_bound=offset_bound,
+                      tile_h=tile_h, tile_w=tile_w),
+        tile_c=tile_c, tile_m=tile_m, band_dtype="int8", acc_dtype="int32",
+        epilogue=epilogue, fuse_offsets=fuse_offsets)
 
 
 @functools.partial(
@@ -143,60 +83,68 @@ def deform_conv_fused_zerocopy_q(x_pad_q: Array, offsets: Array,
 
     x_pad_q:   (N, Hp, Wp, C) int8 zero-padded input, whole in ANY/HBM
     offsets:   (N, Ho, Wo, 2*K*K) fp32 raw offsets (full precision)
-    w_tiles_q: (C//tile_c, K*K*tile_c, M) int8 ``ops.tile_weights`` layout
+    w_tiles_q: (C//tile_c, K*K*tile_c, M) int8 ``plan.tile_weights`` layout
     scale:     (1, M) fp32 combined dequant scale ``s_x * s_w[m]``
     returns:   (N, Ho, Wo, M) fp32 (dequantized by the fused epilogue)
     """
-    n, hp, wp, c = x_pad_q.shape
-    _, ho, wo, _ = offsets.shape
     assert x_pad_q.dtype == jnp.int8, x_pad_q.dtype
     assert w_tiles_q.dtype == jnp.int8, w_tiles_q.dtype
-    assert ho % tile_h == 0 and wo % tile_w == 0, (ho, wo, tile_h, tile_w)
-    h_tiles, w_tiles_n = ho // tile_h, wo // tile_w
-    k2 = kernel_size * kernel_size
-    tc = tile_c or c
-    assert c % tc == 0
-    c_steps = c // tc
-    assert w_tiles_q.shape[0] == c_steps and w_tiles_q.shape[1] == k2 * tc
+    c = x_pad_q.shape[-1]
     m = w_tiles_q.shape[2]
-    tm = tile_m or m
-    assert m % tm == 0
-    assert scale.shape == (1, m), scale.shape
-    _, band_h = band_geometry(kernel_size=kernel_size, stride=stride,
-                              dilation=dilation, offset_bound=offset_bound,
-                              tile_h=tile_h)
-    _, band_w = band_geometry(kernel_size=kernel_size, stride=stride,
-                              dilation=dilation, offset_bound=offset_bound,
-                              tile_h=tile_w)
-    assert (h_tiles - 1) * tile_h * stride + band_h <= hp, "underpadded H"
-    assert (w_tiles_n - 1) * tile_w * stride + band_w <= wp, "underpadded W"
+    plan = _int8_plan(kernel_size=kernel_size, stride=stride,
+                      dilation=dilation, offset_bound=offset_bound,
+                      tile_h=tile_h, tile_w=tile_w, tile_c=tile_c or c,
+                      tile_m=tile_m or m, epilogue="dequant",
+                      fuse_offsets=False)
+    return forward_call(plan, x_pad_q, offsets, w_tiles_q, scale=scale,
+                        out_dtype=jnp.float32, interpret=interpret)
 
-    return pl.pallas_call(
-        functools.partial(
-            _fused_zerocopy_q_kernel, kernel_size=kernel_size,
-            stride=stride, dilation=dilation, offset_bound=offset_bound,
-            tile_h=tile_h, tile_w=tile_w, band_h=band_h, band_w=band_w,
-            tile_c=tc),
-        grid=(n, h_tiles, w_tiles_n, m // tm, c_steps),
-        in_specs=[
-            pl.BlockSpec(memory_space=pltpu.ANY),      # whole int8 input
-            pl.BlockSpec((1, tile_h, tile_w, 2 * k2),
-                         lambda i, j, ww, mm, cc: (i, j, ww, 0)),
-            pl.BlockSpec((1, k2 * tc, tm),
-                         lambda i, j, ww, mm, cc: (cc, 0, mm)),
-            pl.BlockSpec((1, tm),
-                         lambda i, j, ww, mm, cc: (0, mm)),
-        ],
-        out_specs=pl.BlockSpec((1, tile_h, tile_w, tm),
-                               lambda i, j, ww, mm, cc: (i, j, ww, mm)),
-        out_shape=jax.ShapeDtypeStruct((n, ho, wo, m), jnp.float32),
-        scratch_shapes=[
-            pltpu.VMEM((N_BUFFERS, band_h, band_w, tc), jnp.int8),
-            pltpu.VMEM((tile_h * tile_w, tm), jnp.int32),
-            pltpu.SemaphoreType.DMA((N_BUFFERS,)),
-        ],
-        compiler_params=tpu_compiler_params(
-            dimension_semantics=("parallel", "parallel", "parallel",
-                                 "arbitrary", "arbitrary")),
-        interpret=interpret,
-    )(x_pad_q, offsets, w_tiles_q, scale)
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("kernel_size", "stride", "dilation", "offset_bound",
+                     "tile_h", "tile_w", "tile_m", "emit", "ho", "wo",
+                     "interpret"))
+def deform_conv_fused_zerocopy_chain(x_pad_q: Array, w_tiles_q: Array,
+                                     woff_tiles_q: Array, off_scale: Array,
+                                     off_bias: Array, out_scale: Array,
+                                     out_bias: Array, *, kernel_size: int,
+                                     stride: int, dilation: int,
+                                     offset_bound: float, tile_h: int,
+                                     tile_w: int, tile_m: int | None = None,
+                                     emit: str = "int8", ho: int, wo: int,
+                                     interpret: bool = True) -> Array:
+    """Chained int8 DCL: fused offset-conv stage + int8 output emission.
+
+    x_pad_q:      (N, Hp, Wp, C) int8 zero-padded input (the previous
+                  chained layer's emission, or the chain head quantized
+                  once) — the whole C extent is staged per band
+                  (``tile_c = C``, required by the fused offset stage)
+    w_tiles_q:    (1, K*K*C, M) int8 deform weights
+    woff_tiles_q: (1, K*K*C, 2*K*K) int8 offset-conv weights
+    off_scale:    (1, 2*K*K) fp32 ``s_x * s_woff`` dequant scales
+    off_bias:     (1, 2*K*K) fp32 offset-conv bias
+    out_scale:    (1, M) fp32 — ``s_x * s_w[m] / s_y`` (``emit="int8"``,
+                  the per-channel requant onto the next layer's grid) or
+                  ``s_x * s_w[m]`` (``emit="fp32"``, the chain tail)
+    out_bias:     (1, M) fp32 — ``b[m] / s_y`` resp. ``b[m]``
+    returns:      (N, ho, wo, M) int8 on the ``s_y`` grid, or fp32
+    """
+    assert x_pad_q.dtype == jnp.int8, x_pad_q.dtype
+    assert w_tiles_q.dtype == jnp.int8, w_tiles_q.dtype
+    assert woff_tiles_q.dtype == jnp.int8, woff_tiles_q.dtype
+    if emit not in ("int8", "fp32"):
+        raise ValueError(f"unknown emit {emit!r}; expected 'int8' or 'fp32'")
+    c = x_pad_q.shape[-1]
+    m = w_tiles_q.shape[2]
+    plan = _int8_plan(kernel_size=kernel_size, stride=stride,
+                      dilation=dilation, offset_bound=offset_bound,
+                      tile_h=tile_h, tile_w=tile_w, tile_c=c,
+                      tile_m=tile_m or m,
+                      epilogue="requant" if emit == "int8" else "dequant",
+                      fuse_offsets=True)
+    return forward_call(plan, x_pad_q, None, w_tiles_q, scale=out_scale,
+                        bias=out_bias, woff_tiles=woff_tiles_q,
+                        off_scale=off_scale, off_bias=off_bias, ho=ho, wo=wo,
+                        out_dtype=jnp.int8 if emit == "int8" else jnp.float32,
+                        interpret=interpret)

@@ -18,175 +18,31 @@ no cache miss"), and the input is zero-pre-padded so no validity masks
 are needed inside the kernel either: bounded offsets mean every corner
 index is in-band by construction.
 
-Two dataflows are provided (dispatched by ``ops.py``):
+The zero-copy kernel itself is emitted by ``band_pipeline.forward_call``
+from a contraction-free ``DCLPlan`` (``tile_m=None``): the shared
+double-buffered band stager + the fp32 bilinear gather, with the
+patches as the output.  The geometry helpers (``band_geometry``,
+``corner_geometry``, ``_bilinear_from_band``) live in ``band_pipeline``
+and are re-exported here for compatibility.
 
-* **zero-copy** (default) — ``deform_sample_zerocopy``: the padded
-  input stays whole in ``ANY``/HBM memory space; the kernel issues
-  manual ``pltpu.make_async_copy`` DMAs for each (row-tile, width-tile)
-  band into a double-buffered VMEM scratch, overlapping the next band's
-  fetch with the current tile's gather work.  Halo rows are re-read from
-  HBM only at tile boundaries; nothing is ever duplicated in HBM, and
-  the VMEM footprint is bounded by ``(band_h, band_w)`` independent of
-  image size (the Eq. 6 width-band geometry).
-* **banded** (legacy) — ``deform_sample_banded``: ``ops._pad_and_band``
-  materializes every overlapping row band in HBM via a gather (a
-  ``band_h / (tile_h*stride)`` ~ 2-3x duplication of the input) and the
-  BlockSpec pipeline stages full-width bands into VMEM.  Kept as the
-  parity/regression baseline; see EXPERIMENTS.md §Perf for the measured
-  traffic difference.
+``deform_sample_banded`` (legacy) consumes the HBM-materialized
+overlapping bands of ``kernels.plan.pad_and_band`` through a BlockSpec
+pipeline — kept as the parity/regression baseline (no in-kernel DMA, so
+it does not go through the band stager).
 """
 from __future__ import annotations
 
 import functools
-import math
 
 import jax
-import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 from ._compat import tpu_compiler_params
+from .band_pipeline import (  # noqa: F401  (re-exports)
+    N_BUFFERS, BandSpec, DCLPlan, _bilinear_from_band, band_geometry,
+    corner_geometry, forward_call, make_band_dma)
 
 Array = jax.Array
-
-N_BUFFERS = 2     # double buffering: fetch band i+1 while computing band i
-
-
-def band_geometry(*, kernel_size: int, stride: int, dilation: int,
-                  offset_bound: float, tile_h: int) -> tuple[int, int]:
-    """(halo, band_h): halo = ceil(B)+1 rows each side (bilinear +1);
-    band_h per Eq. 6 with the bilinear corner accounted.  The same
-    algebra applies along width with ``tile_h`` replaced by ``tile_w``.
-    Delegates to ``core.tiling.band_extent`` so the kernels and the
-    traffic/VMEM models can never disagree on the geometry.
-    """
-    from repro.core.tiling import band_extent
-    hb = int(math.ceil(offset_bound))
-    band_h = band_extent(tile_h, kernel_size=kernel_size, stride=stride,
-                         dilation=dilation, offset_bound=offset_bound)
-    return hb, band_h
-
-
-def corner_geometry(off, *, kernel_size: int, stride: int, dilation: int,
-                    offset_bound: float, tile_h: int, wo: int):
-    """Bilinear corner geometry for one output tile, in band-local coords.
-
-    off: (tile_h, wo, K*K, 2) raw offsets (clamped here to the Eq. 5 bound).
-    Returns (y0, x0, ty, tx): int32 top-left corner indices and fp32
-    fractional coefficients, each (tile_h, wo, K*K).  Shared between the
-    forward gather (``_bilinear_from_band``) and the backward kernels of
-    ``deform_conv_bwd.py`` — the same bound ``B`` that keeps forward
-    gathers in-band keeps backward scatters in-band, so both sides use
-    one geometry.
-    """
-    k, s, d = kernel_size, stride, dilation
-    k2 = k * k
-    hb = int(math.ceil(offset_bound))       # static: offset_bound is Python
-
-    # Positions/coefficients in fp32 (address generation is full precision
-    # even on a bf16 datapath).
-    off = jnp.clip(off.astype(jnp.float32), -offset_bound, offset_bound)
-
-    # Base tap positions in band-local (pre-padded) coordinates: the band
-    # starts ``hb`` rows above the first tap row, and the width axis is
-    # pre-padded by (pad + hb) so the same formula applies.
-    ky = jax.lax.broadcasted_iota(jnp.int32, (k, k), 0).reshape(k2) * d
-    kx = jax.lax.broadcasted_iota(jnp.int32, (k, k), 1).reshape(k2) * d
-    oy = jax.lax.iota(jnp.int32, tile_h) * s + hb
-    ox = jax.lax.iota(jnp.int32, wo) * s + hb
-
-    base_y = (oy[:, None, None] + ky[None, None, :]).astype(jnp.float32)
-    base_x = (ox[None, :, None] + kx[None, None, :]).astype(jnp.float32)
-    pos_y = base_y + off[..., 0]                  # (tile_h, wo, k2)
-    pos_x = base_x + off[..., 1]
-
-    y0f = jnp.floor(pos_y)
-    x0f = jnp.floor(pos_x)
-    ty = pos_y - y0f
-    tx = pos_x - x0f
-    return y0f.astype(jnp.int32), x0f.astype(jnp.int32), ty, tx
-
-
-def _bilinear_from_band(band, off, *, kernel_size: int, stride: int,
-                        dilation: int, offset_bound: float, tile_h: int,
-                        wo: int):
-    """Sample (tile_h, wo, K*K) positions from a VMEM band.
-
-    band: (band_h, w_pad, tc) zero-padded input rows
-    off:  (tile_h, wo, K*K, 2) raw offsets (clamped here)
-    returns (tile_h, wo, K*K, tc) interpolated values
-    """
-    k2 = kernel_size * kernel_size
-    band_h, w_pad, tc = band.shape
-    y0, x0, ty, tx = corner_geometry(
-        off, kernel_size=kernel_size, stride=stride, dilation=dilation,
-        offset_bound=offset_bound, tile_h=tile_h, wo=wo)
-
-    flat = band.reshape(band_h * w_pad, tc)
-    p = tile_h * wo * k2
-
-    def corner(yc, xc, wgt):
-        idx = (yc * w_pad + xc).reshape(p)
-        v = jnp.take(flat, idx, axis=0)           # VMEM gather — in-band
-        return v.astype(jnp.float32) * wgt.reshape(p, 1)
-
-    # Values accumulate in fp32, round once.
-    out = corner(y0, x0, (1 - ty) * (1 - tx))
-    out += corner(y0, x0 + 1, (1 - ty) * tx)
-    out += corner(y0 + 1, x0, ty * (1 - tx))
-    out += corner(y0 + 1, x0 + 1, ty * tx)
-    return out.reshape(tile_h, wo, k2, tc).astype(band.dtype)
-
-
-def make_band_dma(x_hbm, band_ref, sem_ref, *, batch, row0, col0, c0,
-                  band_h: int, band_w: int, tile_c: int, slot):
-    """DMA descriptor for one (row-tile, width-tile, C-chunk) band:
-    HBM -> VMEM scratch slot.  Reconstructed identically to start and to
-    wait (the standard Pallas async-copy pattern)."""
-    return pltpu.make_async_copy(
-        x_hbm.at[batch,
-                 pl.ds(row0, band_h),
-                 pl.ds(col0, band_w),
-                 pl.ds(c0, tile_c)],
-        band_ref.at[slot],
-        sem_ref.at[slot])
-
-
-def _sample_zerocopy_kernel(x_hbm, off_ref, out_ref, band_ref, sem_ref, *,
-                            kernel_size: int, stride: int, dilation: int,
-                            offset_bound: float, tile_h: int, tile_w: int,
-                            band_h: int, band_w: int, tile_c: int):
-    k2 = kernel_size * kernel_size
-    i = pl.program_id(0)
-    j = pl.program_id(1)
-    ww = pl.program_id(2)
-    cc = pl.program_id(3)
-    c_steps = pl.num_programs(3)
-
-    def dma(step, slot):
-        return make_band_dma(
-            x_hbm, band_ref, sem_ref, batch=i,
-            row0=j * (tile_h * stride), col0=ww * (tile_w * stride),
-            c0=step * tile_c, band_h=band_h, band_w=band_w,
-            tile_c=tile_c, slot=slot)
-
-    # Warm-up fetch for the first C-chunk of this (row, width) tile.
-    @pl.when(cc == 0)
-    def _warmup():
-        dma(0, 0).start()
-
-    # Overlap: kick off the next chunk's band fetch before computing.
-    @pl.when(cc + 1 < c_steps)
-    def _prefetch():
-        dma(cc + 1, (cc + 1) % N_BUFFERS).start()
-
-    dma(cc, cc % N_BUFFERS).wait()
-
-    off = off_ref[0].reshape(tile_h, tile_w, k2, 2)
-    out_ref[0] = _bilinear_from_band(
-        band_ref[cc % N_BUFFERS], off, kernel_size=kernel_size,
-        stride=stride, dilation=dilation, offset_bound=offset_bound,
-        tile_h=tile_h, wo=tile_w)
 
 
 @functools.partial(
@@ -204,45 +60,13 @@ def deform_sample_zerocopy(x_pad: Array, offsets: Array, *, kernel_size: int,
     offsets: (N, Ho, Wo, 2*K*K), Ho = h_tiles*tile_h, Wo = w_tiles*tile_w
     returns: (N, Ho, Wo, K*K, C) patches
     """
-    n, hp, wp, c = x_pad.shape
-    _, ho, wo, _ = offsets.shape
-    assert ho % tile_h == 0 and wo % tile_w == 0, (ho, wo, tile_h, tile_w)
-    h_tiles, w_tiles = ho // tile_h, wo // tile_w
-    k2 = kernel_size * kernel_size
-    tc = tile_c or c
-    assert c % tc == 0, (c, tc)
-    _, band_h = band_geometry(kernel_size=kernel_size, stride=stride,
-                              dilation=dilation, offset_bound=offset_bound,
-                              tile_h=tile_h)
-    _, band_w = band_geometry(kernel_size=kernel_size, stride=stride,
-                              dilation=dilation, offset_bound=offset_bound,
-                              tile_h=tile_w)
-    assert (h_tiles - 1) * tile_h * stride + band_h <= hp, "underpadded H"
-    assert (w_tiles - 1) * tile_w * stride + band_w <= wp, "underpadded W"
-
-    return pl.pallas_call(
-        functools.partial(
-            _sample_zerocopy_kernel, kernel_size=kernel_size, stride=stride,
-            dilation=dilation, offset_bound=offset_bound, tile_h=tile_h,
-            tile_w=tile_w, band_h=band_h, band_w=band_w, tile_c=tc),
-        grid=(n, h_tiles, w_tiles, c // tc),
-        in_specs=[
-            pl.BlockSpec(memory_space=pltpu.ANY),      # whole padded input
-            pl.BlockSpec((1, tile_h, tile_w, 2 * k2),
-                         lambda i, j, ww, cc: (i, j, ww, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, tile_h, tile_w, k2, tc),
-                               lambda i, j, ww, cc: (i, j, ww, 0, cc)),
-        out_shape=jax.ShapeDtypeStruct((n, ho, wo, k2, c), x_pad.dtype),
-        scratch_shapes=[
-            pltpu.VMEM((N_BUFFERS, band_h, band_w, tc), x_pad.dtype),
-            pltpu.SemaphoreType.DMA((N_BUFFERS,)),
-        ],
-        compiler_params=tpu_compiler_params(
-            dimension_semantics=("parallel", "parallel", "parallel",
-                                 "arbitrary")),
-        interpret=interpret,
-    )(x_pad, offsets)
+    c = x_pad.shape[-1]
+    plan = DCLPlan(
+        band=BandSpec(kernel_size=kernel_size, stride=stride,
+                      dilation=dilation, offset_bound=offset_bound,
+                      tile_h=tile_h, tile_w=tile_w),
+        tile_c=tile_c or c, tile_m=None, band_dtype=x_pad.dtype.name)
+    return forward_call(plan, x_pad, offsets, interpret=interpret)
 
 
 # ---------------------------------------------------------------------------

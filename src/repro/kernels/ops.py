@@ -1,4 +1,4 @@
-"""Public entry points for the Pallas kernels (padding, tiling, dispatch).
+"""Public entry points for the Pallas kernels (checking, VJPs, dispatch).
 
 The dispatch mirrors the paper's co-design argument:
 
@@ -7,6 +7,13 @@ The dispatch mirrors the paper's co-design argument:
 * ``offset_bound`` None (the lambda=0 baseline) -> the pure-XLA gather
   path of ``repro.core.deform_conv`` — dynamic gathers from HBM, exactly
   the "irregular DRAM access" regime the paper measures against.
+
+Every bounded kernel is emitted by the unified band-pipeline emitter
+(``kernels.band_pipeline`` — ``BandSpec``/``DCLPlan`` + the
+double-buffered ``make_async_copy`` band stager); the plan building and
+the runner bodies live in ``kernels.plan`` (see ``docs/kernels.md``).
+This module is the thin public surface: argument checking, mesh/shard
+resolution, the ``jax.custom_vjp`` wiring, and the precision dispatch.
 
 Bounded kernels support two dataflows (``dataflow=``):
 
@@ -17,7 +24,7 @@ Bounded kernels support two dataflows (``dataflow=``):
   size.  Tile sizes default to the Sec. 3.2 chooser
   (``repro.core.tiling.choose_kernel_tiles``); pass explicit tiles to
   override.
-* ``"banded"`` (legacy) — ``_pad_and_band`` materializes overlapping
+* ``"banded"`` (legacy) — ``plan.pad_and_band`` materializes overlapping
   full-width row bands in HBM via an XLA gather (a
   ``band_h/(tile_h*stride)`` ~ 2-3x duplication of the input) before
   the kernel runs.  Kept as the parity baseline; see EXPERIMENTS.md
@@ -33,11 +40,19 @@ pass), so Eq. 5-bounded *training* also runs the zero-copy dataflow —
 never an XLA gather/scatter against HBM.
 
 ``deform_conv(precision="int8")`` dispatches the quantized inference
-datapath (``deform_conv_q.py``): symmetric int8 band DMA + int8 MXU
-contraction with int32 accumulation, fp32 bilinear coefficients, fused
-per-out-channel dequant epilogue — tiles resolved against the
-dtype-aware budgets (4x Eq. 6 band density).  Scales come from
-``repro.quant`` calibration or dynamic absmax.
+datapath: symmetric int8 band DMA + int8 MXU contraction with int32
+accumulation, fp32 bilinear coefficients, fused per-out-channel dequant
+epilogue — tiles resolved against the dtype-aware budgets (4x Eq. 6
+band density).  Scales come from ``repro.quant`` calibration or dynamic
+absmax.
+
+``deform_conv_chain`` is the int8 layer-chaining entry (ROADMAP int8
+follow-ups, both): the offset conv is fused into the kernel (an int8
+MXU stage over the already-staged Eq. 6 band — no separate fp32 offset
+pass, no offsets in HBM) and the output is emitted int8 on the *next*
+layer's activation grid via a fused per-channel requant, so
+back-to-back DCLs chain int8 -> int8 with no fp32 HBM round-trip
+between layers (``models.layers.dcl_apply(quant="int8_chain")``).
 
 Parallel training (PR 4), two composable levels:
 
@@ -59,7 +74,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import math
 
 import jax
 import jax.numpy as jnp
@@ -67,19 +81,25 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.deform_conv import DCLConfig, sample_patches
-from repro.core.tiling import LayerShape, choose_kernel_tiles
 from repro.distributed.sharding import batch_mesh_axes
-from .deform_sample import (band_geometry, deform_sample_banded,
-                            deform_sample_zerocopy)
-from .deform_conv_fused import (deform_conv_fused_banded,
-                                deform_conv_fused_zerocopy)
-from .deform_conv_bwd import deform_conv_bwd_zerocopy
-from .deform_conv_q import deform_conv_fused_zerocopy_q
+from . import plan as _plan
+from .deform_sample import deform_sample_banded, deform_sample_zerocopy
 from .matmul import matmul  # re-export  # noqa: F401
+from .plan import (DCSpec as _DCSpec, chain_forward, int8_forward,
+                   resolve_tiles, tile_weights, untile_weights)
 
 Array = jax.Array
 
 DEFAULT_DATAFLOW = "zero_copy"
+
+# Back-compat aliases (tests and older callers import the underscored
+# names from here).
+_pad_and_band = _plan.pad_and_band
+_pad_zerocopy = _plan.pad_zerocopy
+_zerocopy_inputs = _plan.zerocopy_inputs
+_bounded_forward = _plan.bounded_forward
+_bounded_backward = _plan.bounded_backward
+_spec_tiles = _plan.spec_tiles
 
 
 def default_interpret() -> bool:
@@ -173,123 +193,6 @@ def resolve_batch_shard(n: int, *, shard_batch: bool | None = None,
     return _ShardSpec(mesh=mesh, axes=axes)
 
 
-def tile_weights(w: Array, tile_c: int) -> Array:
-    """(K*K, C, M) deform weights -> (C//tile_c, K*K*tile_c, M) blocks
-    so the fused kernel's C-step reads one contiguous VMEM block."""
-    k2, c, m = w.shape
-    assert c % tile_c == 0, (c, tile_c)
-    n_c = c // tile_c
-    wt = w.reshape(k2, n_c, tile_c, m).transpose(1, 0, 2, 3)
-    return wt.reshape(n_c, k2 * tile_c, m)
-
-
-def untile_weights(wt: Array, kernel_size: int) -> Array:
-    """Inverse of ``tile_weights``: (C//tc, K*K*tc, M) -> (K*K, C, M)."""
-    k2 = kernel_size * kernel_size
-    n_c, k2tc, m = wt.shape
-    tc = k2tc // k2
-    w = wt.reshape(n_c, k2, tc, m).transpose(1, 0, 2, 3)
-    return w.reshape(k2, n_c * tc, m)
-
-
-@functools.lru_cache(maxsize=256)
-def resolve_tiles(h: int, w: int, c: int, m: int, *, kernel_size: int,
-                  stride: int, dilation: int, offset_bound: float,
-                  tile_h: int | None, tile_w: int | None,
-                  tile_c: int | None, tile_m: int | None,
-                  objective: str = "training",
-                  dtype: str | None = None,
-                  cores: int = 1
-                  ) -> tuple[int, int, int, int]:
-    """Fill unspecified tile sizes from the Sec. 3.2 chooser; explicit
-    arguments win.  ``objective="training"`` (the ``deform_conv``
-    default — the same resolved tiles serve the forward kernel and its
-    custom-VJP backward) minimizes combined fwd+bwd zero-copy traffic
-    under both VMEM working sets; the forward-only ``deform_sample``
-    resolves with ``objective="forward"``.  ``dtype`` selects the
-    element-width-aware budgets (``"int8"`` exploits the 4x band
-    density of the quantized datapath); ``cores`` evaluates the
-    training objective at the per-core backward traffic of the
-    Megacore split."""
-    if None in (tile_h, tile_w, tile_c, tile_m):
-        shape = LayerShape(h=h, w=w, c_in=c, c_out=m,
-                           kernel_size=kernel_size, stride=stride,
-                           offset_bound=offset_bound)
-        kt = choose_kernel_tiles(shape, dilation=dilation,
-                                 objective=objective, dtype=dtype,
-                                 cores=cores)
-        tile_h = tile_h or kt.tile_h
-        tile_w = tile_w or kt.tile_w
-        tile_c = tile_c or kt.tile_c
-        tile_m = tile_m or kt.tile_m
-    check_channel_tiles(c, m, tile_c, tile_m)
-    return tile_h, tile_w, tile_c, tile_m
-
-
-def _pad_and_band(x: Array, *, kernel_size: int, stride: int, dilation: int,
-                  offset_bound: float, tile_h: int,
-                  ho: int) -> tuple[Array, int]:
-    """Zero-pad x and slice it into overlapping row bands (legacy banded
-    dataflow).
-
-    Returns (bands, n_tiles): bands (N, n_tiles, band_h, w_pad, C).  The
-    top/left zero padding of ``pad + halo`` (+1 bottom/right for the
-    bilinear corner) makes every in-band corner index valid, so the
-    kernel needs no masks — the bounded receptive field is the guarantee.
-    """
-    n, h, w, c = x.shape
-    pad = dilation * (kernel_size // 2)
-    hb, band_h = band_geometry(kernel_size=kernel_size, stride=stride,
-                               dilation=dilation, offset_bound=offset_bound,
-                               tile_h=tile_h)
-    n_tiles = -(-ho // tile_h)
-
-    p0 = pad + hb
-    hp_needed = (n_tiles - 1) * tile_h * stride + band_h
-    p1 = max(0, hp_needed - p0 - h)
-    # Left pad aligns the kernel's band-local base (ox*S + hb); the +1 is
-    # only needed on the right for the bilinear corner x0+1.
-    xp = jnp.pad(x, ((0, 0), (p0, p1), (pad + hb, pad + hb + 1), (0, 0)))
-
-    # Overlapping bands via a row gather (the halo duplication the paper
-    # pays in BRAM; here it is an HBM-materialized copy produced by XLA —
-    # exactly the redundant traffic the zero-copy dataflow removes).
-    starts = jnp.arange(n_tiles) * (tile_h * stride)
-    rows = starts[:, None] + jnp.arange(band_h)[None, :]     # (n_tiles, band_h)
-    bands = jnp.take(xp, rows.reshape(-1), axis=1)
-    bands = bands.reshape(n, n_tiles, band_h, xp.shape[2], c)
-    return bands, n_tiles
-
-
-def _pad_zerocopy(x: Array, *, kernel_size: int, stride: int, dilation: int,
-                  offset_bound: float, tile_h: int, tile_w: int,
-                  ho: int, wo: int) -> Array:
-    """Zero-pad x once for the zero-copy kernels — no band
-    materialization; every (row-tile, width-tile) Eq. 6 band is a plain
-    rectangular window of the result, DMA'd by the kernel itself."""
-    n, h, w, c = x.shape
-    pad = dilation * (kernel_size // 2)
-    hb, band_h = band_geometry(kernel_size=kernel_size, stride=stride,
-                               dilation=dilation, offset_bound=offset_bound,
-                               tile_h=tile_h)
-    _, band_w = band_geometry(kernel_size=kernel_size, stride=stride,
-                              dilation=dilation, offset_bound=offset_bound,
-                              tile_h=tile_w)
-    h_tiles = ho // tile_h
-    w_tiles = wo // tile_w
-    p0 = pad + hb
-    pb = max(0, (h_tiles - 1) * tile_h * stride + band_h - p0 - h)
-    pr = max(0, (w_tiles - 1) * tile_w * stride + band_w - p0 - w)
-    return jnp.pad(x, ((0, 0), (p0, pb), (p0, pr), (0, 0)))
-
-
-def _out_hw(h: int, w: int, *, kernel_size: int, stride: int,
-            dilation: int) -> tuple[int, int]:
-    from repro.core.tiling import out_hw
-    return out_hw(h, w, kernel_size=kernel_size, stride=stride,
-                  dilation=dilation)
-
-
 @functools.partial(
     jax.jit,
     static_argnames=("kernel_size", "stride", "dilation", "offset_bound",
@@ -326,7 +229,7 @@ def deform_sample(x: Array, offsets: Array, *, kernel_size: int = 3,
         pad_h = (-ho) % th
         if pad_h:
             offsets = jnp.pad(offsets, ((0, 0), (0, pad_h), (0, 0), (0, 0)))
-        bands, n_tiles = _pad_and_band(
+        bands, n_tiles = _plan.pad_and_band(
             x, kernel_size=kernel_size, stride=stride, dilation=dilation,
             offset_bound=offset_bound, tile_h=th, ho=ho + pad_h)
         patches = deform_sample_banded(
@@ -348,7 +251,7 @@ def deform_sample(x: Array, offsets: Array, *, kernel_size: int = 3,
     if pad_h or pad_w:
         offsets = jnp.pad(offsets,
                           ((0, 0), (0, pad_h), (0, pad_w), (0, 0)))
-    xp = _pad_zerocopy(
+    xp = _plan.pad_zerocopy(
         x, kernel_size=kernel_size, stride=stride, dilation=dilation,
         offset_bound=offset_bound, tile_h=th, tile_w=tw,
         ho=ho + pad_h, wo=wo + pad_w)
@@ -360,7 +263,7 @@ def deform_sample(x: Array, offsets: Array, *, kernel_size: int = 3,
 
 
 # ---------------------------------------------------------------------------
-# Bounded path: custom VJP over the fused kernels.
+# Bounded path: custom VJP over the emitted kernels.
 #
 # Forward runs the zero-copy (or legacy banded) fused kernel; backward
 # runs the fused zero-copy backward kernel of ``deform_conv_bwd.py``
@@ -368,190 +271,23 @@ def deform_sample(x: Array, offsets: Array, *, kernel_size: int = 3,
 # math, not the dataflow — both forwards match ``ref.py`` bit-for-near).
 # Residuals are just (x, offsets, w): patches are recomputed in-kernel
 # from the Eq. 6 band, which the traffic model favors over saving the
-# (N, Ho, Wo, K^2, C) patch tensor (see ``deform_conv_bwd.py``).
+# (N, Ho, Wo, K^2, C) patch tensor (see ``deform_conv_bwd.py``).  The
+# runner bodies live in ``kernels.plan``.
 # ---------------------------------------------------------------------------
-
-@dataclasses.dataclass(frozen=True)
-class _DCSpec:
-    """Hashable static configuration of one bounded deform_conv call."""
-    kernel_size: int
-    stride: int
-    dilation: int
-    offset_bound: float
-    tile_h: int | None
-    tile_w: int | None
-    tile_c: int | None
-    tile_m: int | None
-    dataflow: str
-    interpret: bool
-    cores: int = 1          # Megacore batch split of the backward grid
-
-
-def _bounded_forward(spec: _DCSpec, x: Array, offsets: Array,
-                     w: Array) -> Array:
-    ho, wo = offsets.shape[1], offsets.shape[2]
-    c, m = x.shape[-1], w.shape[-1]
-
-    if spec.dataflow == "banded":
-        th = spec.tile_h or 8
-        tc = spec.tile_c or c
-        pad_h = (-ho) % th
-        if pad_h:
-            offsets = jnp.pad(offsets, ((0, 0), (0, pad_h), (0, 0), (0, 0)))
-        bands, n_tiles = _pad_and_band(
-            x, kernel_size=spec.kernel_size, stride=spec.stride,
-            dilation=spec.dilation, offset_bound=spec.offset_bound,
-            tile_h=th, ho=ho + pad_h)
-        w_tiles = tile_weights(w.astype(x.dtype), tc)
-        y = deform_conv_fused_banded(
-            bands, offsets, w_tiles, kernel_size=spec.kernel_size,
-            stride=spec.stride, dilation=spec.dilation,
-            offset_bound=spec.offset_bound, tile_h=th, tile_c=tc,
-            tile_m=spec.tile_m, interpret=spec.interpret)
-        return y[:, :ho]
-
-    if spec.dataflow != "zero_copy":
-        raise ValueError(
-            f"unknown dataflow {spec.dataflow!r}; expected 'zero_copy' or "
-            f"'banded'")
-    th, tw, tc, tm = _spec_tiles(spec, x, offsets, w)
-    xp, offsets, w_tiled = _zerocopy_inputs(spec, x, offsets, w, th, tw, tc)
-    y = deform_conv_fused_zerocopy(
-        xp, offsets, w_tiled, kernel_size=spec.kernel_size,
-        stride=spec.stride, dilation=spec.dilation,
-        offset_bound=spec.offset_bound, tile_h=th, tile_w=tw,
-        tile_c=tc, tile_m=tm, interpret=spec.interpret)
-    return y[:, :ho, :wo]
-
-
-def _zerocopy_inputs(spec: _DCSpec, x: Array, offsets: Array, w: Array,
-                     th: int, tw: int, tc: int,
-                     extra: Array | None = None):
-    """Shared input prep of the zero-copy forward and backward kernels:
-    pad offsets (and ``extra``, the backward cotangent) to tile
-    multiples, zero-pad the input per ``_pad_zerocopy``, and block the
-    weights.  One code path so the backward's un-pad slice can never
-    disagree with the forward's padded geometry."""
-    ho, wo = offsets.shape[1], offsets.shape[2]
-    pad_h, pad_w = (-ho) % th, (-wo) % tw
-    if pad_h or pad_w:
-        offsets = jnp.pad(offsets, ((0, 0), (0, pad_h), (0, pad_w), (0, 0)))
-        if extra is not None:
-            extra = jnp.pad(extra, ((0, 0), (0, pad_h), (0, pad_w), (0, 0)))
-    xp = _pad_zerocopy(
-        x, kernel_size=spec.kernel_size, stride=spec.stride,
-        dilation=spec.dilation, offset_bound=spec.offset_bound,
-        tile_h=th, tile_w=tw, ho=ho + pad_h, wo=wo + pad_w)
-    w_tiled = tile_weights(w.astype(x.dtype), tc)
-    if extra is not None:
-        return xp, offsets, w_tiled, extra
-    return xp, offsets, w_tiled
-
-
-def _spec_tiles(spec: _DCSpec, x: Array, offsets: Array,
-                w: Array) -> tuple[int, int, int, int]:
-    """Resolve (tile_h, tile_w, tile_c, tile_m) for one call — chooser
-    defaults (combined fwd+bwd traffic), explicit spec values win, and
-    spatial tiles are clamped to the output extent."""
-    ho, wo = offsets.shape[1], offsets.shape[2]
-    th, tw, tc, tm = resolve_tiles(
-        x.shape[1], x.shape[2], x.shape[-1], w.shape[-1],
-        kernel_size=spec.kernel_size, stride=spec.stride,
-        dilation=spec.dilation, offset_bound=spec.offset_bound,
-        tile_h=spec.tile_h, tile_w=spec.tile_w, tile_c=spec.tile_c,
-        tile_m=spec.tile_m, cores=spec.cores)
-    return min(th, ho), min(tw, wo), tc, tm
-
-
-def _deform_conv_int8(x: Array, offsets: Array, w: Array, *,
-                      kernel_size: int, stride: int, dilation: int,
-                      offset_bound: float, tile_h: int | None,
-                      tile_w: int | None, tile_c: int | None,
-                      tile_m: int | None, x_scale: Array | None,
-                      w_scale: Array | None, interpret: bool) -> Array:
-    """int8 inference datapath: quantize (symmetric, per-tensor x /
-    per-out-channel w), pad the int8 plane (0 -> 0, so padding and
-    quantization commute), and run the fused int8->int32 zero-copy
-    kernel with its per-M dequant epilogue.  Tiles resolve against the
-    dtype-aware budgets (4x band density).  Training quantized models
-    goes through ``repro.quant.qat`` (fake-quant over the fp32
-    custom-VJP path), not here — ``jnp.round`` has no useful gradient.
-    """
-    from repro.quant.qtypes import compute_scale, quantize_values
-
-    n, h, w_, c = x.shape
-    ho, wo = offsets.shape[1], offsets.shape[2]
-    m = w.shape[-1]
-    th, tw, tc, tm = resolve_tiles(
-        h, w_, c, m, kernel_size=kernel_size, stride=stride,
-        dilation=dilation, offset_bound=offset_bound, tile_h=tile_h,
-        tile_w=tile_w, tile_c=tile_c, tile_m=tile_m,
-        objective="forward", dtype="int8")
-    th, tw = min(th, ho), min(tw, wo)
-
-    sx = compute_scale(x) if x_scale is None \
-        else jnp.asarray(x_scale, jnp.float32)
-    sw = compute_scale(w, axis=-1) if w_scale is None \
-        else jnp.asarray(w_scale, jnp.float32).reshape(1, 1, m)
-    xq = quantize_values(x, sx)
-    wq = quantize_values(w, sw)
-
-    pad_h, pad_w = (-ho) % th, (-wo) % tw
-    if pad_h or pad_w:
-        offsets = jnp.pad(offsets, ((0, 0), (0, pad_h), (0, pad_w), (0, 0)))
-    xp = _pad_zerocopy(
-        xq, kernel_size=kernel_size, stride=stride, dilation=dilation,
-        offset_bound=offset_bound, tile_h=th, tile_w=tw,
-        ho=ho + pad_h, wo=wo + pad_w)
-    w_tiled = tile_weights(wq, tc)
-    scale = (sx * sw).reshape(1, m).astype(jnp.float32)
-    y = deform_conv_fused_zerocopy_q(
-        xp, offsets.astype(jnp.float32), w_tiled, scale,
-        kernel_size=kernel_size, stride=stride, dilation=dilation,
-        offset_bound=offset_bound, tile_h=th, tile_w=tw, tile_c=tc,
-        tile_m=tm, interpret=interpret)
-    return y[:, :ho, :wo].astype(x.dtype)
-
-
-def _bounded_backward(spec: _DCSpec, x: Array, offsets: Array, w: Array,
-                      gy: Array) -> tuple[Array, Array, Array]:
-    """(d_input, d_offsets, d_weights) of one bounded call via the fused
-    zero-copy backward kernel — shared by the single-device VJP and the
-    per-shard body of the ``shard_map`` VJP."""
-    n, h, w_, c = x.shape
-    ho, wo = offsets.shape[1], offsets.shape[2]
-    th, tw, tc, _ = _spec_tiles(spec, x, offsets, w)
-    off_dtype = offsets.dtype
-    xp, offsets, w_tiled, gy = _zerocopy_inputs(spec, x, offsets, w,
-                                                th, tw, tc, extra=gy)
-    dxp, doff, dwt = deform_conv_bwd_zerocopy(
-        xp, offsets, gy, w_tiled, kernel_size=spec.kernel_size,
-        stride=spec.stride, dilation=spec.dilation,
-        offset_bound=spec.offset_bound, tile_h=th, tile_w=tw, tile_c=tc,
-        cores=spec.cores, interpret=spec.interpret)
-    # Un-pad: _pad_zerocopy put pad+hb zero rows/cols top-left.
-    p0 = spec.dilation * (spec.kernel_size // 2) \
-        + int(math.ceil(spec.offset_bound))
-    dx = dxp[:, p0:p0 + h, p0:p0 + w_]
-    doff = doff[:, :ho, :wo]
-    dw = untile_weights(dwt, spec.kernel_size)
-    return (dx.astype(x.dtype), doff.astype(off_dtype),
-            dw.astype(w.dtype))
-
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
 def _deform_conv_bounded(spec: _DCSpec, x: Array, offsets: Array,
                          w: Array) -> Array:
-    return _bounded_forward(spec, x, offsets, w)
+    return _plan.bounded_forward(spec, x, offsets, w)
 
 
 def _deform_conv_bounded_fwd(spec, x, offsets, w):
-    return _bounded_forward(spec, x, offsets, w), (x, offsets, w)
+    return _plan.bounded_forward(spec, x, offsets, w), (x, offsets, w)
 
 
 def _deform_conv_bounded_bwd(spec, res, gy):
     x, offsets, w = res
-    return _bounded_backward(spec, x, offsets, w, gy)
+    return _plan.bounded_backward(spec, x, offsets, w, gy)
 
 
 _deform_conv_bounded.defvjp(_deform_conv_bounded_fwd,
@@ -577,7 +313,7 @@ _deform_conv_bounded.defvjp(_deform_conv_bounded_fwd,
 def _deform_conv_sharded(spec: _DCSpec, shard: _ShardSpec, x: Array,
                          offsets: Array, w: Array) -> Array:
     pb = shard.pspec(4)
-    fn = shard_map(functools.partial(_bounded_forward, spec),
+    fn = shard_map(functools.partial(_plan.bounded_forward, spec),
                    mesh=shard.mesh,
                    in_specs=(pb, pb, P(None, None, None)),
                    out_specs=pb, check_rep=False)
@@ -594,7 +330,7 @@ def _deform_conv_sharded_bwd(spec, shard, res, gy):
     rep_w = P(None, None, None)
 
     def body(x, offsets, w, gy):
-        dx, doff, dw = _bounded_backward(spec, x, offsets, w, gy)
+        dx, doff, dw = _plan.bounded_backward(spec, x, offsets, w, gy)
         # psum epilogue: w is replicated across the batch axes, so its
         # cotangent is the sum of every shard's partial d_weights.
         return dx, doff, jax.lax.psum(dw, shard.axes)
@@ -644,7 +380,7 @@ def _deform_conv_impl(x: Array, offsets: Array, w: Array, *,
                 f"(got {dataflow!r})")
         if interpret is None:
             interpret = default_interpret()
-        return _deform_conv_int8(
+        return int8_forward(
             x, offsets, w, kernel_size=kernel_size, stride=stride,
             dilation=dilation, offset_bound=offset_bound, tile_h=tile_h,
             tile_w=tile_w, tile_c=tile_c, tile_m=tile_m,
@@ -710,13 +446,13 @@ def deform_conv(x: Array, offsets: Array, w: Array, *, kernel_size: int = 3,
     unsharded when the mesh matters.
 
     ``precision="int8"`` (bounded zero-copy only) runs the quantized
-    inference datapath of ``deform_conv_q.py``: int8 band DMA + int8
-    MXU contraction with int32 accumulation, fp32 bilinear
-    coefficients, fused per-out-channel dequant epilogue.  ``x_scale``
-    (per-tensor) / ``w_scale`` (per-out-channel, shape (M,)) override
-    the dynamic absmax observers with calibrated values
-    (``repro.quant.calibrate``); tiles resolve against the int8
-    dtype-aware budgets (4x Eq. 6 band density per VMEM byte).
+    inference datapath: int8 band DMA + int8 MXU contraction with int32
+    accumulation, fp32 bilinear coefficients, fused per-out-channel
+    dequant epilogue.  ``x_scale`` (per-tensor) / ``w_scale``
+    (per-out-channel, shape (M,)) override the dynamic absmax observers
+    with calibrated values (``repro.quant.calibrate``); tiles resolve
+    against the int8 dtype-aware budgets (4x Eq. 6 band density per
+    VMEM byte).
     """
     shard = None
     if offset_bound is not None and precision == "fp32":
@@ -743,3 +479,60 @@ def deform_conv(x: Array, offsets: Array, w: Array, *, kernel_size: int = 3,
         tile_w=tile_w, tile_c=tile_c, tile_m=tile_m, dataflow=dataflow,
         precision=precision, cores=cores, shard=shard,
         x_scale=x_scale, w_scale=w_scale, interpret=interpret)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("kernel_size", "stride", "dilation", "offset_bound",
+                     "tile_h", "tile_w", "tile_c", "tile_m", "emit",
+                     "interpret"))
+def deform_conv_chain(x: Array, w: Array, w_offset: Array,
+                      b_offset: Array, b_deform: Array | None = None, *,
+                      kernel_size: int = 3, stride: int = 1,
+                      dilation: int = 1, offset_bound: float,
+                      x_scale, w_scale=None, w_offset_scale=None,
+                      y_scale=None,
+                      tile_h: int | None = None, tile_w: int | None = None,
+                      tile_c: int | None = None, tile_m: int | None = None,
+                      emit: str = "int8",
+                      interpret: bool | None = None) -> Array:
+    """One chained int8 DCL layer: fused offset conv + int8 emission.
+
+    x: (N, H, W, C) — int8 values on the ``x_scale`` grid (the previous
+    chained layer's emission) or fp32 (the chain head, quantized here
+    with ``x_scale``).  w: (K*K, C, M) fp32 deform weights; w_offset:
+    (K*K, C, 2*K*K) fp32 offset-conv weights; b_offset/b_deform the
+    biases (the deform bias is folded into the requant epilogue —
+    int8 emission must quantize ``y + b``, not ``y``).
+
+    Returns (N, Ho, Wo, M) int8 on the ``y_scale`` grid (``emit="int8"``
+    — ``y_scale`` is the NEXT layer's activation scale, required) or
+    fp32 (``emit="fp32"``, the chain tail).  Offsets never exist in
+    HBM: the offset conv runs in-kernel over the staged Eq. 6 band
+    (requires ``tile_c == C`` — a clear ``ValueError`` otherwise).
+    Training chained models uses the STE reference
+    (``repro.quant.qat.fake_quant_dcl_chain_reference``) — this entry
+    is the inference datapath.
+    """
+    if offset_bound is None:
+        raise ValueError(
+            "deform_conv_chain requires a trained offset_bound — the "
+            "fused offset stage exists because Eq. 6 bounds the band")
+    if x_scale is None:
+        raise ValueError(
+            "deform_conv_chain requires x_scale: chained layers exchange "
+            "int8 values whose grid must be pinned by calibration "
+            "(repro.quant.calibrate — the table's per-layer x_scale)")
+    if emit == "int8" and y_scale is None:
+        raise ValueError(
+            "emit='int8' requires y_scale (the NEXT layer's activation "
+            "scale — the per-channel requant target grid); pass "
+            "emit='fp32' for the chain tail instead")
+    if interpret is None:
+        interpret = default_interpret()
+    return chain_forward(
+        x, w, w_offset, b_offset, b_deform, kernel_size=kernel_size,
+        stride=stride, dilation=dilation, offset_bound=offset_bound,
+        x_scale=x_scale, w_scale=w_scale, w_offset_scale=w_offset_scale,
+        y_scale=y_scale, tile_h=tile_h, tile_w=tile_w, tile_c=tile_c,
+        tile_m=tile_m, emit=emit, interpret=interpret)

@@ -550,13 +550,51 @@ def dcl_apply(params: Mapping[str, Array], x: Array, *,
       with fused dequant); the non-kernel path runs the bit-level
       fake-quant reference (including the patch requantization the
       kernel performs before its MXU step).
+    * ``"int8_chain"`` — the layer-chaining datapath: the offset conv
+      is fused into the kernel (quantized, computed from the staged
+      Eq. 6 band — no separate fp32 pass) and, when the calibration
+      table carries a ``y_scale``, the output is emitted int8 on that
+      grid (a ``repro.quant.QTensor``) with the deform bias folded
+      into the fused requant — back-to-back DCLs chain int8 -> int8
+      with no fp32 HBM round-trip (see ``dcl_chain_apply``).  Requires
+      calibrated ``quant_scales`` (``calibrate_resnet_dcn`` records
+      x/w/w_offset/y scales) and a trained ``offset_bound``.  The
+      kernel path is inference (``o_max`` is None — the fused offsets
+      never leave VMEM); with ``use_kernel=False`` the differentiable
+      STE chain reference runs instead, so chained configs *train*
+      through the production ``Trainer`` unchanged.
     """
     from repro.core.deform_conv import (DCLConfig, conv2d, dcl_forward,
                                         offset_abs_max)
-    if quant not in ("none", "qat", "int8"):
+    if quant not in ("none", "qat", "int8", "int8_chain"):
         raise ValueError(
-            f"unknown quant mode {quant!r}; expected 'none', 'qat' or "
-            f"'int8'")
+            f"unknown quant mode {quant!r}; expected 'none', 'qat', "
+            f"'int8' or 'int8_chain'")
+    if quant == "int8_chain":
+        # Fail loudly on configuration the chained datapath cannot
+        # honor (mirroring the int8 branch's dataflow passthrough
+        # contract) instead of silently running zero-copy/unsharded.
+        if dataflow != "zero_copy":
+            raise ValueError(
+                f"quant='int8_chain' supports only the zero-copy "
+                f"dataflow (got {dataflow!r}); the fused offset stage "
+                f"and int8 emission are band-pipeline plans")
+        if shard_batch:
+            raise ValueError(
+                "shard_batch=True is not supported by the chained int8 "
+                "inference datapath (it partitions via GSPMD like the "
+                "int8 branch); train chain configs via the STE "
+                "reference (use_kernel=False)")
+        if cores != 1:
+            raise ValueError(
+                f"cores={cores} applies to the fp32 training backward "
+                f"only — the chained int8 datapath is inference, pass "
+                f"cores=1")
+        return _dcl_chain_layer(params, x, kernel_size=kernel_size,
+                                stride=stride, dilation=dilation,
+                                offset_bound=offset_bound,
+                                use_kernel=use_kernel,
+                                quant_scales=quant_scales, dtype=dtype)
     cin = x.shape[-1]
     cout = params["w_deform"].shape[-1]
     cfg = DCLConfig(in_channels=cin, out_channels=cout,
@@ -629,6 +667,172 @@ def dcl_apply(params: Mapping[str, Array], x: Array, *,
         return y + params["b_deform"].astype(x.dtype), o_max
     y, stats = dcl_forward(params, x, cfg)
     return y, stats["o_max"]
+
+
+def _dcl_chain_layer(params: Mapping[str, Array], x, *, kernel_size: int,
+                     stride: int, dilation: int,
+                     offset_bound: float | None, use_kernel: bool,
+                     quant_scales: Mapping[str, Any] | None, dtype: Any):
+    """``quant="int8_chain"`` body of ``dcl_apply`` — one chained DCL.
+
+    x may be a fp32 array (the chain head, quantized onto the table's
+    ``x_scale``) or a ``QTensor`` handed over by the previous chained
+    layer (consumed directly — no dequant/requant round-trip).  Returns
+    ``(y, o_max)`` where y is a ``QTensor`` on the ``y_scale`` grid
+    (kernel path with a calibrated ``y_scale``) or a fp32 array (the
+    chain tail, or the differentiable STE reference path).
+    """
+    from repro.quant.qat import fake_quant_dcl_chain_reference
+    from repro.quant.qtypes import QTensor
+
+    if offset_bound is None:
+        raise ValueError(
+            "quant='int8_chain' requires a trained offset_bound — the "
+            "fused offset-conv stage exists because Eq. 6 bounds the "
+            "band (train with the Eq. 5 regularizer first)")
+    scales = quant_scales or {}
+    x_scale = scales.get("x_scale")
+    if x_scale is None:
+        raise ValueError(
+            "quant='int8_chain' requires calibrated quant_scales with at "
+            "least x_scale (repro.quant.calibrate_resnet_dcn records "
+            "x/w/w_offset/y scales per DCL block): chained layers "
+            "exchange int8 values on a pinned activation grid, so "
+            "dynamic absmax would break the producer/consumer contract")
+    w_scale = scales.get("w_scale")
+    wo_scale = scales.get("w_offset_scale")
+    y_scale = scales.get("y_scale")
+    cin = x.shape[-1]
+    cout = params["w_deform"].shape[-1]
+    k = kernel_size
+    w = params["w_deform"].astype(jnp.float32).reshape(k * k, cin, cout)
+    w_off = params["w_offset"].astype(jnp.float32) \
+        .reshape(k * k, cin, 2 * k * k)
+
+    if use_kernel:
+        from repro.kernels import ops
+        if isinstance(x, QTensor):
+            # A handed-over QTensor carries the grid it was emitted on;
+            # decoding it with a different table scale would be silently
+            # wrong.  The check needs a concrete value — under jit the
+            # scale is a tracer and the static check_chain_compat guard
+            # (dcl_chain_apply) is the line of defense instead.
+            try:
+                carried = float(x.scale)
+            except (jax.errors.ConcretizationTypeError, TypeError):
+                carried = None
+            if carried is not None and not math.isclose(
+                    carried, float(x_scale), rel_tol=1e-6):
+                raise ValueError(
+                    f"int8 input was emitted on scale {carried} but the "
+                    f"layer's calibration table decodes x_scale="
+                    f"{float(x_scale)} — the consumer's x_scale must BE "
+                    f"the producer's y_scale (recalibrate the pair "
+                    f"together)")
+        xin = x.values if isinstance(x, QTensor) else x.astype(dtype)
+        ws = None if w_scale is None else jnp.asarray(w_scale, jnp.float32)
+        wos = None if wo_scale is None \
+            else jnp.asarray(wo_scale, jnp.float32)
+        emit = "int8" if y_scale is not None else "fp32"
+        y = ops.deform_conv_chain(
+            xin, w, w_off, params["b_offset"], params["b_deform"],
+            kernel_size=k, stride=stride, dilation=dilation,
+            offset_bound=offset_bound, x_scale=x_scale, w_scale=ws,
+            w_offset_scale=wos, y_scale=y_scale, emit=emit)
+        if emit == "int8":
+            y = QTensor(values=y, scale=jnp.asarray(y_scale, jnp.float32))
+        # The fused offsets never leave VMEM — there is no o_max to
+        # observe on the inference datapath (training uses the STE
+        # reference below, which returns the real statistic).
+        return y, None
+
+    xin = x.dequantize(dtype) if isinstance(x, QTensor) else x.astype(dtype)
+    y, offsets = fake_quant_dcl_chain_reference(
+        xin, w, w_off, params["b_offset"], params["b_deform"],
+        kernel_size=k, stride=stride, dilation=dilation,
+        offset_bound=offset_bound, x_scale=x_scale, w_scale=w_scale,
+        w_offset_scale=wo_scale, y_scale=y_scale)
+    from repro.core.deform_conv import offset_abs_max
+    return y, offset_abs_max(offsets)
+
+
+def check_chain_compat(scales_seq: Sequence[Mapping[str, Any]],
+                       couts: Sequence[int] | None = None,
+                       cins: Sequence[int] | None = None) -> None:
+    """Validate that adjacent chained layers can actually hand each
+    other int8 tensors — a clear ``ValueError`` naming the layer pair
+    instead of a silent wrong-grid dequant (scales) or a deep kernel
+    shape error (tiles/channels).
+
+    Producer ``i`` emits on its ``y_scale`` grid; consumer ``i+1``
+    decodes on its ``x_scale`` grid — they must be the same number.
+    When channel extents are given, producer C_out must equal consumer
+    C_in (the chained kernel stages the whole C extent per band).
+    """
+    for i in range(len(scales_seq) - 1):
+        ys = scales_seq[i].get("y_scale")
+        xs = scales_seq[i + 1].get("x_scale")
+        if ys is None:
+            raise ValueError(
+                f"chained layer {i} has no y_scale: the int8 emission "
+                f"grid must be calibrated (calibrate_resnet_dcn records "
+                f"it from the DCL output observer) before layer {i + 1} "
+                f"can consume the tensor")
+        if xs is None or not math.isclose(float(ys), float(xs),
+                                          rel_tol=1e-6):
+            raise ValueError(
+                f"adjacent chained layers disagree on the exchange "
+                f"grid: layer {i} emits on y_scale={ys} but layer "
+                f"{i + 1} decodes on x_scale={xs} — recalibrate the "
+                f"pair together (the consumer's x_scale IS the "
+                f"producer's y_scale)")
+        if couts is not None and cins is not None \
+                and couts[i] != cins[i + 1]:
+            raise ValueError(
+                f"chained layer {i} emits C_out={couts[i]} channels but "
+                f"layer {i + 1} expects C_in={cins[i + 1]} — int8 "
+                f"chaining hands the tensor over verbatim, so the "
+                f"channel extents must match")
+
+
+def dcl_chain_apply(params_seq: Sequence[Mapping[str, Array]], x: Array, *,
+                    scales_seq: Sequence[Mapping[str, Any]],
+                    kernel_size: int = 3, stride: int = 1,
+                    dilation: int = 1, offset_bound: float | None = None,
+                    use_kernel: bool = True,
+                    dtype: Any = jnp.float32) -> tuple[Array, list]:
+    """Run back-to-back DCLs chained int8 -> int8.
+
+    Layer ``i`` emits a ``QTensor`` on its calibrated ``y_scale`` grid
+    and layer ``i+1`` consumes it verbatim (its ``x_scale`` — validated
+    equal by ``check_chain_compat``): between chained layers the
+    activation touches HBM only as int8, the offsets never touch it at
+    all, and the single fp32 boundary is the chain head (quantized
+    once) and tail (the last layer's table has no ``y_scale``, or the
+    caller dequantizes).  With ``use_kernel=False`` the differentiable
+    STE chain reference runs layer by layer — the training path.
+
+    Returns ``(y, o_maxes)``; o_maxes entries are None on the kernel
+    path (the fused offsets never leave VMEM).
+    """
+    if len(params_seq) != len(scales_seq):
+        raise ValueError(
+            f"got {len(params_seq)} chained layers but "
+            f"{len(scales_seq)} scale-table entries")
+    check_chain_compat(
+        scales_seq,
+        couts=[p["w_deform"].shape[-1] for p in params_seq],
+        cins=[p["w_deform"].shape[-2] for p in params_seq])
+    o_maxes = []
+    y = x
+    for params, scales in zip(params_seq, scales_seq):
+        y, o_max = dcl_apply(params, y, kernel_size=kernel_size,
+                             stride=stride, dilation=dilation,
+                             offset_bound=offset_bound,
+                             use_kernel=use_kernel, quant="int8_chain",
+                             quant_scales=scales, dtype=dtype)
+        o_maxes.append(o_max)
+    return y, o_maxes
 
 
 # ---------------------------------------------------------------------------

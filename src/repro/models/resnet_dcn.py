@@ -47,7 +47,12 @@ class ResNetDCNConfig:
     dtype: Any = jnp.float32
     use_kernel: bool = False       # route DCLs through the Pallas kernel
     dataflow: str = "zero_copy"    # kernel dataflow: zero_copy | banded
-    quant: str = "none"            # DCL datapath: none | qat | int8
+    # DCL datapath: none | qat | int8 | int8_chain (int8_chain fuses the
+    # offset conv in-kernel and emits the DCL output int8 on the
+    # calibrated y_scale grid — 1 byte/elem through HBM, dequantized by
+    # the consumer; with use_kernel=False the differentiable STE chain
+    # reference runs instead, so chain configs train in the Trainer).
+    quant: str = "none"
     bwd_cores: int = 1             # Megacore batch split of the bwd kernel
     # Data-parallel shard_map of the kernel path over the active mesh's
     # batch axes: None = auto (shard when a mesh is live and divides the
@@ -155,6 +160,13 @@ def _apply_block(params, x: Array, cfg: ResNetDCNConfig, *, stride: int,
             tap(name, h)
         h, o_max = _apply_dcl(params["dcl"], h, cfg, stride=stride,
                               quant_scales=quant_scales)
+        if hasattr(h, "dequantize"):
+            # int8_chain emission: the DCL output crossed HBM as int8
+            # (QTensor); the GroupNorm consumer decodes it here — the
+            # only fp32 materialization of the tensor.
+            h = h.dequantize(cfg.dtype)
+        if tap is not None:
+            tap(f"{name}/out", h)
     else:
         h = conv2d(h, params["conv2"].astype(x.dtype), stride=stride)
     h = jax.nn.relu(group_norm(h, params["gn2"]))

@@ -10,4 +10,5 @@ from .calibrate import (  # noqa: F401
     load_scale_table, make_observer, save_scale_table,
     weight_channel_scales)
 from .qat import (  # noqa: F401
-    fake_quant_dcl_reference, qat_dcl_apply, qat_quantize_inputs)
+    fake_quant_dcl_chain_reference, fake_quant_dcl_reference, qat_dcl_apply,
+    qat_quantize_inputs)

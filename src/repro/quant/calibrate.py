@@ -2,13 +2,18 @@
 
 A calibration run sweeps a handful of batches through the fp32 model
 (``models.resnet_dcn.forward`` with its ``tap`` hook), feeds every DCL
-input activation into an observer, and emits a *scale table*
+input AND output activation into observers, and emits a *scale table*
 
     {block_name: {"x_scale": float,            # per-tensor activation
-                  "w_scale": [float, ...]}}    # per-out-channel weights
+                  "w_scale": [float, ...],     # per-out-channel weights
+                  "w_offset_scale": [...],     # per-channel offset-conv w
+                  "y_scale": float}}           # per-tensor DCL output
 
-that the int8 datapath (``ops.deform_conv(precision="int8")``) and the
-model-level PTQ mode (``ResNetDCNConfig.quant="int8"``) consume.  Two
+that the int8 datapath (``ops.deform_conv(precision="int8")``), the
+model-level PTQ mode (``ResNetDCNConfig.quant="int8"``), and the
+chained datapath (``quant="int8_chain"`` — ``w_offset_scale`` feeds the
+fused in-kernel offset conv, ``y_scale`` pins the int8 emission grid
+that the next consumer reads) consume.  Two
 observers are provided:
 
 * ``absmax`` — running max of |x| (exact, outlier-sensitive);
@@ -101,6 +106,12 @@ def calibrate_resnet_dcn(params: Mapping[str, Any], cfg, batches: Iterable,
     yields image arrays (N, H, W, 3) or dicts with an ``"images"`` key.
     The sweep always runs the fp32 reference semantics (whatever
     ``cfg.quant`` says) — calibration observes the un-quantized network.
+
+    The model taps each DCL's input under its block name and its output
+    under ``<name>/out``; the output observer becomes the block's
+    ``y_scale`` (the int8 emission grid of the chained datapath), and
+    the offset-conv weights get exact per-channel ``w_offset_scale``
+    entries alongside the deform ``w_scale``.
     """
     import dataclasses
 
@@ -128,11 +139,18 @@ def calibrate_resnet_dcn(params: Mapping[str, Any], cfg, batches: Iterable,
 
     table: dict[str, dict] = {}
     for name, o in sorted(obs.items()):
+        if name.endswith("/out"):
+            continue                    # folded into y_scale below
         w = params[name]["dcl"]["w_deform"]
+        w_off = params[name]["dcl"]["w_offset"]
         table[name] = {
             "x_scale": float(o.scale()),
             "w_scale": [float(s) for s in weight_channel_scales(w)],
+            "w_offset_scale": [float(s)
+                               for s in weight_channel_scales(w_off)],
         }
+        if f"{name}/out" in obs:
+            table[name]["y_scale"] = float(obs[f"{name}/out"].scale())
     table["_meta"] = {"observer": observer, "percentile": percentile,
                       "batches": n_batches}
     return table

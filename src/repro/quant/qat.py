@@ -78,6 +78,79 @@ def qat_dcl_apply(params: Mapping[str, Array], x: Array, *,
     return dcl_apply(qparams, xq, **dcl_kwargs)
 
 
+def fake_quant_dcl_chain_reference(x: Array, w: Array, w_offset: Array,
+                                   b_offset: Array,
+                                   b_deform: Array | None = None, *,
+                                   kernel_size: int = 3, stride: int = 1,
+                                   dilation: int = 1,
+                                   offset_bound: float | None = None,
+                                   x_scale=None, w_scale=None,
+                                   w_offset_scale=None, y_scale=None
+                                   ) -> tuple[Array, Array]:
+    """STE fake-quant oracle of the chained int8 kernel — the *training*
+    path of ``quant="int8_chain"`` (differentiable end-to-end).
+
+    Simulates every quantization boundary of
+    ``kernels.deform_conv_q.deform_conv_fused_zerocopy_chain`` on the
+    fp32 graph with straight-through estimators:
+
+    * input and weights fake-quantize onto their calibrated grids
+      (activation per-tensor, deform/offset weights per-out-channel);
+    * the offsets come from the *quantized* offset conv (the fused
+      in-kernel stage) plus the fp32 bias — address generation itself
+      stays fp32, matching the kernel's dequant;
+    * the sampled patches re-round onto the activation grid (the
+      kernel's patch requantization before its MXU step);
+    * the output (bias folded first — int8 emission quantizes ``y + b``)
+      fake-quantizes onto the next layer's ``y_scale`` grid when given
+      (the per-channel requant epilogue; ``y_scale=None`` is the fp32
+      chain tail).
+
+    Returns ``(y, offsets)`` — offsets feed the Eq. 5 ``o_max``
+    statistic, which the fused kernel never materializes.  Values agree
+    with the kernel to <= 1 LSB of the emission grid (fp32 product
+    rounding in the offset conv vs the kernel's exact int32
+    accumulation; see ``tests/test_chain.py``).
+    """
+    from repro.core.deform_conv import conv2d
+    from repro.kernels.ref import deform_sample_ref
+
+    k = kernel_size
+    k2 = k * k
+    cin = x.shape[-1]
+    cout = w.shape[-1]
+    if x_scale is None:
+        raise ValueError(
+            "the chain reference needs x_scale: chained layers exchange "
+            "values on a pinned activation grid (calibrate first)")
+    sx = jnp.asarray(x_scale, jnp.float32)
+    xq = fake_quant(x, sx)
+    if w_scale is None:
+        wq = fake_quant_absmax(w, axis=-1)
+    else:
+        wq = fake_quant(w, jnp.asarray(w_scale, jnp.float32)
+                        .reshape(1, 1, cout))
+    if w_offset_scale is None:
+        woq = fake_quant_absmax(w_offset, axis=-1)
+    else:
+        woq = fake_quant(w_offset, jnp.asarray(w_offset_scale, jnp.float32)
+                         .reshape(1, 1, 2 * k2))
+    offsets = conv2d(xq, woq.reshape(k, k, cin, 2 * k2), stride=stride,
+                     dilation=dilation, padding=dilation * (k // 2))
+    offsets = offsets + jnp.asarray(b_offset, jnp.float32)
+    patches = deform_sample_ref(
+        xq, offsets, kernel_size=k, stride=stride, dilation=dilation,
+        offset_bound=offset_bound)
+    patches_q = fake_quant(patches, sx)
+    y = jnp.einsum("nhwkc,kcm->nhwm", patches_q, wq,
+                   preferred_element_type=jnp.float32)
+    if b_deform is not None:
+        y = y + jnp.asarray(b_deform, jnp.float32)
+    if y_scale is not None:
+        y = fake_quant(y, jnp.asarray(y_scale, jnp.float32))
+    return y.astype(x.dtype), offsets
+
+
 def fake_quant_dcl_reference(x: Array, offsets: Array, w: Array, *,
                              kernel_size: int = 3, stride: int = 1,
                              dilation: int = 1,

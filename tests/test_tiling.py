@@ -57,6 +57,44 @@ def test_fused_beats_two_stage_ctc():
         assert fused.ctc > two.ctc
 
 
+def test_choose_kernel_tiles_memoized():
+    """The chooser's full candidate sweep is memoized per layer shape
+    (``lru_cache``): repeated un-jitted ``deform_conv`` calls at the
+    same shape must hit the cache instead of re-running the sweep —
+    and distinct shapes/dtypes must not collide."""
+    T.choose_kernel_tiles.cache_clear()
+    shape = T.LayerShape(h=48, w=48, c_in=96, c_out=96, offset_bound=2.0)
+    first = T.choose_kernel_tiles(shape)
+    base = T.choose_kernel_tiles.cache_info()
+    assert base.misses >= 1
+    for _ in range(5):
+        assert T.choose_kernel_tiles(shape) == first
+    info = T.choose_kernel_tiles.cache_info()
+    assert info.hits == base.hits + 5
+    assert info.misses == base.misses          # no re-sweep
+    # different arguments are distinct cache entries, not stale hits
+    T.choose_kernel_tiles(shape, dtype="int8", objective="forward")
+    assert T.choose_kernel_tiles.cache_info().misses == base.misses + 1
+
+
+def test_resolve_tiles_memoized_end_to_end():
+    """``kernels.plan.resolve_tiles`` (what every un-jitted
+    ``deform_conv`` call goes through) caches the resolved call too —
+    the chooser sweep runs at most once per layer shape."""
+    from repro.kernels.plan import resolve_tiles
+    resolve_tiles.cache_clear()
+    T.choose_kernel_tiles.cache_clear()
+    kw = dict(kernel_size=3, stride=1, dilation=1, offset_bound=2.0,
+              tile_h=None, tile_w=None, tile_c=None, tile_m=None)
+    a = resolve_tiles(40, 40, 64, 64, **kw)
+    sweep = T.choose_kernel_tiles.cache_info()
+    for _ in range(3):
+        assert resolve_tiles(40, 40, 64, 64, **kw) == a
+    assert resolve_tiles.cache_info().hits >= 3
+    # the repeated calls never even consulted the chooser again
+    assert T.choose_kernel_tiles.cache_info() == sweep
+
+
 @given(b=st.floats(0.5, 16.0))
 @settings(max_examples=30, deadline=None)
 def test_inverse_bound(b):
