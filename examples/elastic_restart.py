@@ -62,17 +62,17 @@ def main() -> None:
         with use_rules(mesh=mesh):
             tr.run()
         print(f"phase 1 done at step {tr.step}; loss "
-              f"{tr.history[-1]['loss']:.4f}")
+              f"{tr.last_loss:.4f}")
     else:
+        # try_resume reshards the whole bundle (params, optimizer state,
+        # step) onto THIS mesh via CheckpointManager.restore(shardings=...)
+        # — no hand-resharding needed.
         assert tr.try_resume(), "no checkpoint found"
         print(f"resumed at step {tr.step} onto the NEW mesh")
-        # reshard restored state to the new mesh's shardings
-        from jax.sharding import NamedSharding
-        tr.params = jax.device_put(tr.params, tr._named(tr.param_specs))
         with use_rules(mesh=mesh):
             tr.run()
         print(f"phase 2 done at step {tr.step}; loss "
-              f"{tr.history[-1]['loss']:.4f}")
+              f"{tr.last_loss:.4f}")
         # oracle: a straight 20-step run must match.  NOT bit-exact:
         # phase 1 ran its first 10 steps on a different mesh, and
         # all-reduce grouping differs (fp32 reduction order) — the

@@ -1,9 +1,9 @@
-"""Fault-tolerant checkpointing: atomic, keep-k, async, elastic restore.
+"""Fault-tolerant checkpointing: atomic, keep-k, async, elastic, verified.
 
 Layout (one directory per step):
 
     <dir>/step_000120/
-        manifest.json        {step, leaf paths, shapes, dtypes}
+        manifest.json        {step, treedef, leaves: [{shape, dtype, crc32}]}
         000.npy ... NNN.npy  one file per pytree leaf
 
 Writes go to ``step_X.tmp`` and are atomically ``os.rename``d — a crash
@@ -11,6 +11,15 @@ mid-write can never corrupt the latest checkpoint (restart resumes from
 the previous complete one).  ``keep`` bounds disk usage.  The async
 writer moves host transfer + serialization off the training thread; a
 barrier before the next save (or shutdown) guarantees ordering.
+
+Hardening (PR 6): every leaf's CRC32 and the saved treedef are recorded
+in the manifest and verified on restore.  A checkpoint that fails
+verification (truncated leaf, bad manifest, CRC mismatch — bit-rot or
+a corrupting crash that slipped past the rename barrier) raises
+:class:`CheckpointCorruptError`; the auto-latest restore catches it,
+logs a warning, and falls back to the previous complete step instead of
+taking the job down.  ``CheckpointManager`` also sweeps stale
+``step_*.tmp`` directories on init (debris from a killed writer).
 
 Elastic restore: arrays are loaded host-side and ``jax.device_put`` with
 whatever sharding the RESTART mesh prescribes — the checkpoint carries
@@ -20,17 +29,25 @@ no mesh assumptions, so a 256-chip run restores onto 512 chips (or onto
 from __future__ import annotations
 
 import json
+import logging
 import os
 import pathlib
 import re
 import shutil
 import threading
+import zlib
 from typing import Any
 
 import jax
 import numpy as np
 
 PathLike = str | os.PathLike
+
+_log = logging.getLogger("repro.resilience")
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A stored checkpoint failed verification (manifest / leaf / CRC)."""
 
 
 def _flatten(tree):
@@ -61,7 +78,8 @@ def save_checkpoint(directory: PathLike, step: int, tree: Any,
                 {1: np.uint8, 2: np.uint16, 4: np.uint32}[arr.dtype.itemsize])
         np.save(tmp / f"{i:03d}.npy", arr)
         manifest["leaves"].append({
-            "index": i, "shape": list(arr.shape), "dtype": logical})
+            "index": i, "shape": list(arr.shape), "dtype": logical,
+            "crc32": zlib.crc32(np.ascontiguousarray(arr).tobytes())})
     (tmp / "manifest.json").write_text(json.dumps(manifest))
     if final.exists():
         shutil.rmtree(final)
@@ -80,38 +98,85 @@ def _gc(directory: pathlib.Path, keep: int) -> None:
         shutil.rmtree(p, ignore_errors=True)
 
 
-def latest_step(directory: PathLike) -> int | None:
+def complete_steps(directory: PathLike) -> list[int]:
+    """Steps with a published directory + manifest, newest first."""
     directory = pathlib.Path(directory)
     if not directory.exists():
-        return None
+        return []
     steps = [int(p.name.split("_")[1]) for p in directory.iterdir()
              if re.fullmatch(r"step_\d{8}", p.name)
              and (p / "manifest.json").exists()]
-    return max(steps) if steps else None
+    return sorted(steps, reverse=True)
 
 
-def restore_checkpoint(directory: PathLike, tree_like: Any,
-                       *, step: int | None = None,
-                       shardings: Any | None = None) -> tuple[Any, int]:
-    """Restore into the structure of ``tree_like``; reshard to
-    ``shardings`` (a pytree of jax.sharding.Sharding) if given —
-    the elastic path."""
-    directory = pathlib.Path(directory)
-    if step is None:
-        step = latest_step(directory)
-        if step is None:
-            raise FileNotFoundError(f"no checkpoint in {directory}")
-    path = directory / f"step_{step:08d}"
-    manifest = json.loads((path / "manifest.json").read_text())
-    leaves_like, treedef = _flatten(tree_like)
+def latest_step(directory: PathLike) -> int | None:
+    steps = complete_steps(directory)
+    return steps[0] if steps else None
+
+
+def _load_manifest(path: pathlib.Path) -> dict:
+    mf = path / "manifest.json"
+    if not mf.exists():
+        raise CheckpointCorruptError(f"{path}: manifest.json missing")
+    try:
+        manifest = json.loads(mf.read_text())
+    except (json.JSONDecodeError, UnicodeDecodeError) as e:
+        raise CheckpointCorruptError(
+            f"{path}: manifest.json unreadable ({e})") from e
+    if not isinstance(manifest.get("leaves"), list):
+        raise CheckpointCorruptError(
+            f"{path}: manifest has no leaf table")
+    return manifest
+
+
+def _restore_step(path: pathlib.Path, leaves_like, treedef,
+                  shardings) -> Any:
+    """Load + verify one published checkpoint directory.
+
+    Raises :class:`CheckpointCorruptError` for on-disk damage (missing
+    or truncated leaves, CRC mismatch, unreadable manifest) and
+    ``ValueError`` for a restore-target mismatch (leaf count / treedef)
+    — target mismatches are a caller bug that no older checkpoint can
+    fix, so they never trigger the fallback path.
+    """
+    manifest = _load_manifest(path)
     n = len(leaves_like)
-    assert n == len(manifest["leaves"]), (
-        f"checkpoint has {len(manifest['leaves'])} leaves, "
-        f"restore target has {n}")
+    if n != len(manifest["leaves"]):
+        raise ValueError(
+            f"checkpoint {path} has {len(manifest['leaves'])} leaves "
+            f"but the restore target has {n} — the stored pytree and "
+            f"the template passed to restore_checkpoint disagree")
+    stored_treedef = manifest.get("treedef")
+    if stored_treedef is not None and stored_treedef != str(treedef):
+        raise ValueError(
+            f"checkpoint {path} was saved with treedef\n"
+            f"  {stored_treedef}\nbut the restore target has\n"
+            f"  {treedef}\n— same leaf count, different structure; "
+            f"restore into the structure that was saved")
     arrs = []
     for i in range(n):
-        arr = np.load(path / f"{i:03d}.npy")
-        logical = manifest["leaves"][i]["dtype"]
+        entry = manifest["leaves"][i]
+        leaf_path = path / f"{i:03d}.npy"
+        if not leaf_path.exists():
+            raise CheckpointCorruptError(f"{path}: leaf {i:03d}.npy missing")
+        try:
+            arr = np.load(leaf_path)
+        except (ValueError, OSError, EOFError) as e:
+            raise CheckpointCorruptError(
+                f"{path}: leaf {i:03d}.npy unreadable ({e})") from e
+        if list(arr.shape) != list(entry["shape"]):
+            raise CheckpointCorruptError(
+                f"{path}: leaf {i:03d}.npy has shape {list(arr.shape)}, "
+                f"manifest says {entry['shape']}")
+        want_crc = entry.get("crc32")
+        if want_crc is not None:
+            got_crc = zlib.crc32(np.ascontiguousarray(arr).tobytes())
+            if got_crc != want_crc:
+                raise CheckpointCorruptError(
+                    f"{path}: leaf {i:03d}.npy CRC32 {got_crc:#010x} != "
+                    f"manifest {want_crc:#010x} (bit-rot or a partial "
+                    f"write)")
+        logical = entry["dtype"]
         if str(arr.dtype) != logical:
             import ml_dtypes
             arr = arr.view(np.dtype(getattr(ml_dtypes, logical, logical)))
@@ -119,14 +184,64 @@ def restore_checkpoint(directory: PathLike, tree_like: Any,
     if shardings is not None:
         sh_leaves = jax.tree_util.tree_leaves(
             shardings, is_leaf=lambda x: isinstance(x, jax.sharding.Sharding))
+        if len(sh_leaves) != n:
+            raise ValueError(
+                f"checkpoint {path} has {n} leaves but shardings has "
+                f"{len(sh_leaves)} — pass a sharding per restored leaf")
         arrs = [jax.device_put(a, s) for a, s in zip(arrs, sh_leaves)]
     else:
         arrs = [jax.device_put(a) for a in arrs]
-    return jax.tree_util.tree_unflatten(treedef, arrs), step
+    return jax.tree_util.tree_unflatten(treedef, arrs)
+
+
+def restore_checkpoint(directory: PathLike, tree_like: Any,
+                       *, step: int | None = None,
+                       shardings: Any | None = None) -> tuple[Any, int]:
+    """Restore into the structure of ``tree_like``; reshard to
+    ``shardings`` (a pytree of jax.sharding.Sharding) if given —
+    the elastic path.
+
+    Every leaf is CRC-verified against the manifest.  With ``step=None``
+    (auto-latest) a corrupt checkpoint is logged and skipped: the
+    restore falls back to the previous complete step rather than taking
+    the run down with it.  An explicit ``step`` raises
+    :class:`CheckpointCorruptError` directly — the caller asked for that
+    exact state.
+    """
+    directory = pathlib.Path(directory)
+    leaves_like, treedef = _flatten(tree_like)
+    if step is not None:
+        path = directory / f"step_{step:08d}"
+        return _restore_step(path, leaves_like, treedef, shardings), step
+    steps = complete_steps(directory)
+    if not steps:
+        raise FileNotFoundError(f"no checkpoint in {directory}")
+    last_err: CheckpointCorruptError | None = None
+    for s in steps:
+        path = directory / f"step_{s:08d}"
+        try:
+            restored = _restore_step(path, leaves_like, treedef, shardings)
+        except CheckpointCorruptError as e:
+            _log.warning(
+                "checkpoint step %d failed verification (%s); falling "
+                "back to the previous complete step", s, e)
+            last_err = e
+            continue
+        if last_err is not None:
+            _log.warning("recovered from corrupt checkpoint: restored "
+                         "step %d instead", s)
+        return restored, s
+    raise CheckpointCorruptError(
+        f"every checkpoint in {directory} failed verification; "
+        f"last error: {last_err}")
 
 
 class CheckpointManager:
-    """Async wrapper with a single in-flight write and keep-k GC."""
+    """Async wrapper with a single in-flight write and keep-k GC.
+
+    On init, stale ``step_*.tmp`` directories (debris of a writer that
+    died mid-save) are swept so they can never shadow a real save.
+    """
 
     def __init__(self, directory: PathLike, *, keep: int = 3,
                  async_write: bool = True):
@@ -135,6 +250,11 @@ class CheckpointManager:
         self.async_write = async_write
         self._thread: threading.Thread | None = None
         self._error: BaseException | None = None
+        if self.directory.exists():
+            for p in self.directory.glob("step_*.tmp"):
+                if p.is_dir():
+                    _log.warning("removing stale checkpoint temp dir %s", p)
+                    shutil.rmtree(p, ignore_errors=True)
 
     def wait(self) -> None:
         if self._thread is not None:
@@ -164,9 +284,9 @@ class CheckpointManager:
         self._thread = threading.Thread(target=_work, daemon=True)
         self._thread.start()
 
-    def restore(self, tree_like: Any, *, shardings=None):
+    def restore(self, tree_like: Any, *, shardings=None, step=None):
         return restore_checkpoint(self.directory, tree_like,
-                                  shardings=shardings)
+                                  step=step, shardings=shardings)
 
     def latest_step(self):
         return latest_step(self.directory)

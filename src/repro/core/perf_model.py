@@ -496,3 +496,54 @@ def energy_ratio(n_channels: int, lam_ours: float, lam_conv: float = 0.0,
     """Fig. 9: energy of conventional (unregularized model) over ours."""
     wl = DCLWorkload(n=n_channels, m=n_channels, **kw)
     return energy_conventional(wl, lam_conv) / energy_ours(wl, lam_ours)
+
+
+# ---------------------------------------------------------------------------
+# Runtime health: bound saturation (PR 6)
+# ---------------------------------------------------------------------------
+#
+# The whole dataflow is only as correct as the Eq. 5 bound: an
+# out-of-distribution input whose offsets hit the clamp makes the kernel
+# silently saturate where unbounded reference math would have sampled
+# farther away.  The fraction of offset components clamped at B is a
+# cheap health metric — compute it host-side on the (N, Ho, Wo, 2*K*K)
+# offset tensor a layer already produced (numpy only; this module stays
+# importable without jax).
+
+def bound_saturation(offsets, offset_bound: float, *,
+                     atol: float = 1e-6) -> float:
+    """Fraction of offset components with |o| >= B (the Eq. 5 clamp).
+
+    ``offsets`` is any array-like of raw offset-conv outputs; components
+    within ``atol`` of the bound count as clamped (the kernel's clip
+    makes |o| == B exactly).  0.0 for an empty tensor.
+    """
+    import numpy as np
+
+    if offset_bound is None or offset_bound <= 0:
+        raise ValueError(
+            f"bound_saturation needs a positive offset_bound (got "
+            f"{offset_bound!r}); the unbounded baseline has no clamp to "
+            f"saturate")
+    off = np.asarray(offsets, dtype=np.float32)
+    if off.size == 0:
+        return 0.0
+    return float(np.mean(np.abs(off) >= (offset_bound - atol)))
+
+
+def runtime_health_report(offsets, offset_bound: float, *,
+                          threshold: float = 0.05) -> dict:
+    """Gate ``bound_saturation`` against a deployment threshold.
+
+    A healthy Eq. 5-trained model keeps the trained offsets well inside
+    B (the half-normal tail puts ~1e-4 of the mass at o_max); a clamp
+    fraction above ``threshold`` means the input distribution has
+    drifted past what the bound was trained for — the signal to fall
+    back down the degradation ladder (docs/robustness.md) or retrain
+    the bound.
+    """
+    frac = bound_saturation(offsets, offset_bound)
+    return {"offset_bound": float(offset_bound),
+            "bound_saturation": frac,
+            "threshold": float(threshold),
+            "healthy": frac <= threshold}

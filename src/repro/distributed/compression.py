@@ -22,7 +22,6 @@ Two entry points:
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax
@@ -61,18 +60,31 @@ def ef_compress_grads(grads: Any, ef_state: Any) -> tuple[Any, Any]:
     return pick(0), pick(1)
 
 
-@functools.partial(jax.jit, static_argnames=("axis_name",))
-def _psum_int8(q, scale, axis_name):
-    # int8 payload crosses the interconnect; scales (scalars) ride along.
+def _psum_int8(q: Array, scale: Array, axis_name: str) -> Array:
+    """int8 payload (as int32 — psum needs an accumulator type) crosses
+    the interconnect; ``scale`` is the SHARED grid every shard already
+    quantized onto, so the dequant is a plain scalar multiply."""
     s = jax.lax.psum(q.astype(jnp.int32), axis_name)
-    sc = jax.lax.pmax(scale, axis_name)
-    return s.astype(jnp.float32) * sc
+    return s.astype(jnp.float32) * scale
 
 
 def compressed_psum(x: Array, axis_name: str) -> Array:
-    """Quantize-then-psum: only int8 bytes traverse `axis_name` links.
-    Call inside shard_map."""
-    q, scale = _quantize(x.astype(jnp.float32))
-    s = jax.lax.psum(q.astype(jnp.int32), axis_name)
-    sc = jax.lax.pmax(scale, axis_name)
-    return s.astype(jnp.float32) * sc
+    """Quantize-then-psum: only int8 bytes traverse ``axis_name`` links.
+    Call inside shard_map.
+
+    Deterministic and shard-symmetric: the quantization grid is agreed
+    FIRST (``pmax`` of the per-shard absmax scales), every shard
+    quantizes onto that shared grid, and the int8 payloads psum exactly
+    in int32 — the result is invariant to shard order and reduction
+    grouping.  (An earlier formulation quantized each shard on its own
+    local grid and rescaled the sum by ``pmax(scale)`` afterwards,
+    which inflated every shard whose local absmax was below the max —
+    an asymmetry that made the collective depend on which shard held
+    the largest gradient.)  Costs one extra scalar pmax before the
+    payload psum; the bytes on the links are unchanged.
+    """
+    x = x.astype(jnp.float32)
+    local = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    scale = jax.lax.pmax(local, axis_name)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return _psum_int8(q, scale, axis_name)

@@ -74,6 +74,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import logging
 
 import jax
 import jax.numpy as jnp
@@ -104,6 +105,78 @@ _spec_tiles = _plan.spec_tiles
 
 def default_interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# Graceful degradation (PR 6).
+#
+# Argument validation (bad tiles, missing scales, unknown modes) is
+# hoisted into the un-jitted public wrappers and still RAISES — a wrong
+# call is a caller bug, and the friendly ValueErrors are part of the
+# API.  Failures past validation — plan resolution, the emitter, kernel
+# lowering, or an injected dispatch fault — are bounded-path problems a
+# correct XLA graph can serve, so the wrappers fall back to the
+# reference path (``ref.deform_conv_fused_ref`` / the fake-quant
+# oracles of ``repro.quant.qat``) with exactly one warning per
+# (entry, precision) on the ``repro.resilience`` logger.  The ladder:
+# int8_chain -> int8 -> fp32 kernel -> XLA reference
+# (docs/robustness.md); each rung's fallback is the reference form of
+# the SAME arithmetic, so degraded outputs stay parity-close.
+#
+# ``set_dispatch_hook`` installs a callable consulted (with a context
+# dict) before each bounded dispatch — the chaos harness's injection
+# seam.  It lives in the un-jitted wrappers on purpose: inside the
+# jitted impl it would fire once per trace, then never again.
+# ---------------------------------------------------------------------------
+
+_log = logging.getLogger("repro.resilience")
+
+_dispatch_hook = None
+_degrade_enabled = True
+_FALLBACK_WARNED: set = set()
+
+
+def set_dispatch_hook(hook):
+    """Install (or clear, with None) the dispatcher hook; returns the
+    previous hook.  Called as ``hook(context_dict)`` before every
+    bounded kernel dispatch; raising aborts the kernel path and
+    triggers the degradation fallback."""
+    global _dispatch_hook
+    prev, _dispatch_hook = _dispatch_hook, hook
+    return prev
+
+
+def set_degradation(enabled: bool):
+    """Toggle the reference fallback; returns the previous setting.
+    With degradation off, post-validation failures raise (the strict
+    mode the parity test-suites run under when they WANT the kernel)."""
+    global _degrade_enabled
+    prev, _degrade_enabled = _degrade_enabled, bool(enabled)
+    return prev
+
+
+def reset_fallback_warnings() -> None:
+    """Forget which entry points already warned (tests)."""
+    _FALLBACK_WARNED.clear()
+
+
+def _consult_dispatch_hook(**context) -> None:
+    if _dispatch_hook is not None:
+        _dispatch_hook(context)
+
+
+def _degraded(key: tuple, err: Exception, fallback):
+    """Run ``fallback()`` after logging the first degradation of
+    ``key``; re-raise if degradation is disabled."""
+    if not _degrade_enabled:
+        raise err
+    if key not in _FALLBACK_WARNED:
+        _FALLBACK_WARNED.add(key)
+        _log.warning(
+            "%s: bounded kernel path failed (%s: %s); degrading to the "
+            "XLA reference path (warned once per entry point — see "
+            "docs/robustness.md)", "/".join(key), type(err).__name__, err)
+    return fallback()
 
 
 def check_channel_tiles(c: int, m: int, tile_c: int | None,
@@ -359,25 +432,15 @@ def _deform_conv_impl(x: Array, offsets: Array, w: Array, *,
                       shard: _ShardSpec | None,
                       x_scale: Array | None, w_scale: Array | None,
                       interpret: bool | None) -> Array:
+    # NOTE: argument validation lives in the un-jitted ``deform_conv``
+    # wrapper (hoisted in PR 6 so validation errors always raise while
+    # post-validation failures can degrade to the reference path).
     n, h, w_, c = x.shape
     ho, wo = offsets.shape[1], offsets.shape[2]
     k2 = kernel_size * kernel_size
     m = w.shape[-1]
-    check_channel_tiles(c, m, tile_c, tile_m)
-    if precision not in ("fp32", "int8"):
-        raise ValueError(
-            f"unknown precision {precision!r}; expected 'fp32' or 'int8'")
 
     if precision == "int8":
-        if offset_bound is None:
-            raise ValueError(
-                "precision='int8' requires a trained offset_bound — the "
-                "quantized datapath exists because Eq. 6 bounds the band; "
-                "the unbounded gather baseline has no int8 kernel")
-        if dataflow != "zero_copy":
-            raise ValueError(
-                f"precision='int8' supports only the zero-copy dataflow "
-                f"(got {dataflow!r})")
         if interpret is None:
             interpret = default_interpret()
         return int8_forward(
@@ -454,6 +517,27 @@ def deform_conv(x: Array, offsets: Array, w: Array, *, kernel_size: int = 3,
     against the int8 dtype-aware budgets (4x Eq. 6 band density per
     VMEM byte).
     """
+    # -- validation (always raises; never degraded) -------------------
+    c, m = x.shape[-1], w.shape[-1]
+    if precision not in ("fp32", "int8"):
+        raise ValueError(
+            f"unknown precision {precision!r}; expected 'fp32' or 'int8'")
+    if dataflow not in ("zero_copy", "banded"):
+        raise ValueError(
+            f"unknown dataflow {dataflow!r}; expected 'zero_copy' or "
+            f"'banded'")
+    check_channel_tiles(c, m, tile_c, tile_m)
+    if precision == "int8":
+        if offset_bound is None:
+            raise ValueError(
+                "precision='int8' requires a trained offset_bound — the "
+                "quantized datapath exists because Eq. 6 bounds the band; "
+                "the unbounded gather baseline has no int8 kernel")
+        if dataflow != "zero_copy":
+            raise ValueError(
+                f"precision='int8' supports only the zero-copy dataflow "
+                f"(got {dataflow!r})")
+
     shard = None
     if offset_bound is not None and precision == "fp32":
         shard = resolve_batch_shard(x.shape[0], shard_batch=shard_batch,
@@ -473,12 +557,37 @@ def deform_conv(x: Array, offsets: Array, w: Array, *, kernel_size: int = 3,
                 f"dispatches the "
                 f"{'int8 inference' if precision == 'int8' else 'unbounded gather'} "
                 f"path, so pass cores=1")
-    return _deform_conv_impl(
-        x, offsets, w, kernel_size=kernel_size, stride=stride,
-        dilation=dilation, offset_bound=offset_bound, tile_h=tile_h,
-        tile_w=tile_w, tile_c=tile_c, tile_m=tile_m, dataflow=dataflow,
-        precision=precision, cores=cores, shard=shard,
-        x_scale=x_scale, w_scale=w_scale, interpret=interpret)
+
+    def _impl():
+        return _deform_conv_impl(
+            x, offsets, w, kernel_size=kernel_size, stride=stride,
+            dilation=dilation, offset_bound=offset_bound, tile_h=tile_h,
+            tile_w=tile_w, tile_c=tile_c, tile_m=tile_m, dataflow=dataflow,
+            precision=precision, cores=cores, shard=shard,
+            x_scale=x_scale, w_scale=w_scale, interpret=interpret)
+
+    if offset_bound is None:
+        # Unbounded gather baseline IS the XLA reference path — there is
+        # no lower rung to degrade to.
+        return _impl()
+
+    try:
+        _consult_dispatch_hook(
+            op="deform_conv", precision=precision, dataflow=dataflow,
+            shape=tuple(x.shape), offset_bound=offset_bound)
+        return _impl()
+    except Exception as e:  # noqa: BLE001 — bounded-path failure
+        def _fallback():
+            if precision == "int8":
+                from repro.quant.qat import fake_quant_dcl_reference
+                return fake_quant_dcl_reference(
+                    x, offsets, w, kernel_size=kernel_size, stride=stride,
+                    dilation=dilation, offset_bound=offset_bound,
+                    x_scale=x_scale, w_scale=w_scale)
+            return _plan.reference_forward(
+                x, offsets, w, kernel_size=kernel_size, stride=stride,
+                dilation=dilation, offset_bound=offset_bound)
+        return _degraded(("deform_conv", precision), e, _fallback)
 
 
 @functools.partial(
@@ -486,6 +595,24 @@ def deform_conv(x: Array, offsets: Array, w: Array, *, kernel_size: int = 3,
     static_argnames=("kernel_size", "stride", "dilation", "offset_bound",
                      "tile_h", "tile_w", "tile_c", "tile_m", "emit",
                      "interpret"))
+def _deform_conv_chain_impl(x: Array, w: Array, w_offset: Array,
+                            b_offset: Array, b_deform: Array | None, *,
+                            kernel_size: int, stride: int, dilation: int,
+                            offset_bound: float, x_scale, w_scale,
+                            w_offset_scale, y_scale,
+                            tile_h: int | None, tile_w: int | None,
+                            tile_c: int | None, tile_m: int | None,
+                            emit: str, interpret: bool | None) -> Array:
+    if interpret is None:
+        interpret = default_interpret()
+    return chain_forward(
+        x, w, w_offset, b_offset, b_deform, kernel_size=kernel_size,
+        stride=stride, dilation=dilation, offset_bound=offset_bound,
+        x_scale=x_scale, w_scale=w_scale, w_offset_scale=w_offset_scale,
+        y_scale=y_scale, tile_h=tile_h, tile_w=tile_w, tile_c=tile_c,
+        tile_m=tile_m, emit=emit, interpret=interpret)
+
+
 def deform_conv_chain(x: Array, w: Array, w_offset: Array,
                       b_offset: Array, b_deform: Array | None = None, *,
                       kernel_size: int = 3, stride: int = 1,
@@ -514,6 +641,7 @@ def deform_conv_chain(x: Array, w: Array, w_offset: Array,
     (``repro.quant.qat.fake_quant_dcl_chain_reference``) — this entry
     is the inference datapath.
     """
+    # -- validation (always raises; never degraded) -------------------
     if offset_bound is None:
         raise ValueError(
             "deform_conv_chain requires a trained offset_bound — the "
@@ -523,16 +651,55 @@ def deform_conv_chain(x: Array, w: Array, w_offset: Array,
             "deform_conv_chain requires x_scale: chained layers exchange "
             "int8 values whose grid must be pinned by calibration "
             "(repro.quant.calibrate — the table's per-layer x_scale)")
+    if emit not in ("int8", "fp32"):
+        raise ValueError(
+            f"unknown emit {emit!r}; expected 'int8' (chained) or 'fp32' "
+            f"(chain tail)")
     if emit == "int8" and y_scale is None:
         raise ValueError(
             "emit='int8' requires y_scale (the NEXT layer's activation "
             "scale — the per-channel requant target grid); pass "
             "emit='fp32' for the chain tail instead")
-    if interpret is None:
-        interpret = default_interpret()
-    return chain_forward(
-        x, w, w_offset, b_offset, b_deform, kernel_size=kernel_size,
-        stride=stride, dilation=dilation, offset_bound=offset_bound,
-        x_scale=x_scale, w_scale=w_scale, w_offset_scale=w_offset_scale,
-        y_scale=y_scale, tile_h=tile_h, tile_w=tile_w, tile_c=tile_c,
-        tile_m=tile_m, emit=emit, interpret=interpret)
+    c = x.shape[-1]
+    if tile_c is not None and tile_c != c:
+        raise ValueError(
+            f"tile_c={tile_c} is incompatible with chaining: the fused "
+            f"offset-conv stage needs the whole channel extent staged "
+            f"per band (tile_c == C = {c}), since the offsets must be "
+            f"complete before the first bilinear sample consumes them — "
+            f"pass tile_c=None (or C) for chained layers")
+
+    try:
+        _consult_dispatch_hook(
+            op="deform_conv_chain", emit=emit, shape=tuple(x.shape),
+            offset_bound=offset_bound)
+        return _deform_conv_chain_impl(
+            x, w, w_offset, b_offset, b_deform, kernel_size=kernel_size,
+            stride=stride, dilation=dilation, offset_bound=offset_bound,
+            x_scale=x_scale, w_scale=w_scale,
+            w_offset_scale=w_offset_scale, y_scale=y_scale,
+            tile_h=tile_h, tile_w=tile_w, tile_c=tile_c, tile_m=tile_m,
+            emit=emit, interpret=interpret)
+    except Exception as e:  # noqa: BLE001 — bounded-path failure
+        def _fallback():
+            # One rung down the ladder: the STE chain oracle (same
+            # quantization boundaries on the XLA graph), re-quantized
+            # onto the emission grid so chained consumers see the same
+            # int8 plane the kernel would have produced.
+            from repro.quant.qat import fake_quant_dcl_chain_reference
+            from repro.quant.qtypes import quantize_values
+
+            sx = jnp.asarray(x_scale, jnp.float32)
+            xf = (x.astype(jnp.float32) * sx if x.dtype == jnp.int8
+                  else x)
+            y, _ = fake_quant_dcl_chain_reference(
+                xf, w, w_offset, b_offset, b_deform,
+                kernel_size=kernel_size, stride=stride, dilation=dilation,
+                offset_bound=offset_bound, x_scale=x_scale,
+                w_scale=w_scale, w_offset_scale=w_offset_scale,
+                y_scale=y_scale if emit == "int8" else None)
+            if emit == "int8":
+                return quantize_values(y, jnp.asarray(y_scale,
+                                                      jnp.float32))
+            return y
+        return _degraded(("deform_conv_chain", emit), e, _fallback)

@@ -230,6 +230,21 @@ def zerocopy_inputs(spec: DCSpec, x: Array, offsets: Array, w: Array,
 # Runners (shared by the single-device and the shard_map custom VJPs)
 # ---------------------------------------------------------------------------
 
+def reference_forward(x: Array, offsets: Array, w: Array, *,
+                      kernel_size: int, stride: int, dilation: int,
+                      offset_bound: float | None) -> Array:
+    """Pure-XLA runner for the bounded forward — the degradation target
+    of ``ops.deform_conv`` (PR 6): same Eq. 2 math and the same Eq. 5
+    clamp as the zero-copy kernel, but gathers from HBM instead of
+    staging bands.  Slower, never wrong — the bottom rung of the
+    degradation ladder (docs/robustness.md)."""
+    from .ref import deform_conv_fused_ref
+
+    return deform_conv_fused_ref(
+        x, offsets, w, kernel_size=kernel_size, stride=stride,
+        dilation=dilation, offset_bound=offset_bound).astype(x.dtype)
+
+
 def bounded_forward(spec: DCSpec, x: Array, offsets: Array,
                     w: Array) -> Array:
     ho, wo = offsets.shape[1], offsets.shape[2]

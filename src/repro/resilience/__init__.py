@@ -1,0 +1,20 @@
+"""Structured fault injection and recovery (PR 6).
+
+``faults`` is the chaos harness: a seeded :class:`FaultPlan` drives
+composable injectors through the Trainer's ``fault_hook``/``batch_hook``
+seams and the kernel dispatcher's ``set_dispatch_hook`` seam, so a
+chaos run is exactly reproducible from its seed.  The recovery
+machinery itself lives where the state lives — the Trainer (sentinels,
+retry, preemption), ``repro.checkpoint`` (CRC-verified restore with
+fallback), and ``repro.kernels.ops`` (graceful degradation to the XLA
+reference path) — this package only *breaks* things, on schedule.
+"""
+from .faults import (ChaosHooks, DataPipelineHiccup, DeviceLost,
+                     FaultEvent, FaultInjected, FaultPlan,
+                     KernelDispatchFault, corrupt_checkpoint)
+
+__all__ = [
+    "ChaosHooks", "DataPipelineHiccup", "DeviceLost", "FaultEvent",
+    "FaultInjected", "FaultPlan", "KernelDispatchFault",
+    "corrupt_checkpoint",
+]

@@ -1,0 +1,278 @@
+"""Chaos harness: seeded, composable fault injectors.
+
+The fault model covers the failure classes a long DCL training run
+actually meets (ISSUE 6; CoDeNet's input-adaptive deployment setting is
+exactly the regime where the job must keep running through them):
+
+* ``nonfinite_grads`` — a batch is poisoned with NaN, so loss and
+  gradients go non-finite; the Trainer's sentinels must skip-and-log
+  the step instead of stepping the optimizer into NaN.
+* ``step_crash``    — the step raises (:class:`DeviceLost`), modeling a
+  device loss / preempted worker; the Trainer retries from the last
+  checkpoint with restore-and-replay.
+* ``ckpt_corrupt``  — the latest *complete* checkpoint on disk is
+  corrupted (truncated leaf or bad manifest) and the device is lost in
+  the same event (the classic "node died while its newest checkpoint
+  was half-written"); restore must CRC-verify and fall back to the
+  previous complete step.
+* ``data_hiccup``   — the input pipeline raises a transient
+  :class:`DataPipelineHiccup`; the retry path absorbs it.
+* ``dispatch_fault`` — the kernel dispatcher hook raises
+  :class:`KernelDispatchFault`; ``ops.deform_conv`` must degrade to the
+  XLA reference path with one logged warning (see docs/robustness.md,
+  "degradation ladder").
+
+Every injector is one-shot (a consumed event never re-fires), so
+restore-and-replay after a crash cannot loop on its own fault, and a
+chaos run is reproducible: :meth:`FaultPlan.random` derives the whole
+schedule from one integer seed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+from typing import Any, Sequence
+
+import numpy as np
+
+__all__ = [
+    "FAULT_KINDS", "FaultInjected", "DeviceLost", "DataPipelineHiccup",
+    "KernelDispatchFault", "FaultEvent", "FaultPlan", "ChaosHooks",
+    "corrupt_checkpoint",
+]
+
+FAULT_KINDS = ("nonfinite_grads", "step_crash", "ckpt_corrupt",
+               "data_hiccup", "dispatch_fault")
+
+
+class FaultInjected(RuntimeError):
+    """Marker base: this failure came from the chaos harness."""
+
+
+class DeviceLost(FaultInjected):
+    """Injected device loss — the step raises mid-flight."""
+
+
+class DataPipelineHiccup(FaultInjected):
+    """Injected transient input-pipeline failure."""
+
+
+class KernelDispatchFault(FaultInjected):
+    """Injected kernel-dispatch failure (the dispatcher-hook seam)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One scheduled fault: fire ``kind`` when the run reaches ``step``."""
+    step: int
+    kind: str
+    mode: str = ""          # injector detail (e.g. corruption mode)
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(
+                f"unknown fault kind {self.kind!r}; expected one of "
+                f"{FAULT_KINDS}")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """A reproducible fault schedule: (seed, events).
+
+    Build explicitly from events, or with :meth:`random` which derives
+    everything from the seed — the chaos CI job records the seed in its
+    telemetry artifact so any run can be replayed bit-for-bit.
+    """
+    events: tuple[FaultEvent, ...] = ()
+    seed: int | None = None
+
+    @classmethod
+    def random(cls, seed: int, *, total_steps: int,
+               kinds: Sequence[str] = ("nonfinite_grads", "ckpt_corrupt",
+                                       "step_crash", "data_hiccup"),
+               min_step: int = 1) -> "FaultPlan":
+        """Seeded random schedule with one event per requested kind.
+
+        The kinds keep their listed ORDER over the step range (each is
+        placed at a random step inside its own window), so a schedule
+        like (corrupt, crash) always corrupts before it crashes — the
+        combination that exercises the checkpoint CRC fallback — while
+        the exact steps stay randomized per seed.
+        """
+        if total_steps - min_step < len(kinds):
+            raise ValueError(
+                f"total_steps={total_steps} leaves fewer than "
+                f"{len(kinds)} steps after min_step={min_step} — one "
+                f"window per fault kind is needed")
+        rng = np.random.default_rng(seed)
+        span = total_steps - min_step
+        events = []
+        for i, kind in enumerate(kinds):
+            lo = min_step + (i * span) // len(kinds)
+            hi = min_step + ((i + 1) * span) // len(kinds)
+            step = int(rng.integers(lo, max(hi, lo + 1)))
+            mode = ""
+            if kind == "ckpt_corrupt":
+                mode = str(rng.choice(["truncate_leaf", "bad_manifest"]))
+            events.append(FaultEvent(step=step, kind=kind, mode=mode))
+        return cls(events=tuple(events), seed=seed)
+
+    def at(self, step: int) -> list[tuple[int, FaultEvent]]:
+        """(index, event) pairs scheduled for ``step``."""
+        return [(i, e) for i, e in enumerate(self.events) if e.step == step]
+
+    def kinds(self) -> set[str]:
+        return {e.kind for e in self.events}
+
+    def summary(self) -> dict:
+        return {"seed": self.seed,
+                "events": [dataclasses.asdict(e) for e in self.events]}
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint corruption
+# ---------------------------------------------------------------------------
+
+def corrupt_checkpoint(directory, *, step: int | None = None,
+                       mode: str = "truncate_leaf") -> pathlib.Path:
+    """Corrupt one complete checkpoint in ``directory`` (latest if
+    ``step`` is None) the way a crash mid-write / bit-rot would:
+
+    * ``truncate_leaf`` — chop the first leaf file in half (CRC and the
+      npy header both break);
+    * ``bad_manifest``  — overwrite ``manifest.json`` with junk.
+
+    Returns the corrupted checkpoint path.  Restoring it must fail the
+    CRC/manifest verification and fall back to the previous complete
+    step (``repro.checkpoint.restore_checkpoint``).
+    """
+    from repro.checkpoint.checkpoint import complete_steps
+
+    directory = pathlib.Path(directory)
+    if step is None:
+        steps = complete_steps(directory)
+        if not steps:
+            raise FileNotFoundError(f"no complete checkpoint in {directory}")
+        step = steps[0]
+    path = directory / f"step_{step:08d}"
+    if mode == "bad_manifest":
+        (path / "manifest.json").write_text("{not json")
+    elif mode == "truncate_leaf":
+        leaf = path / "000.npy"
+        data = leaf.read_bytes()
+        leaf.write_bytes(data[: max(1, len(data) // 2)])
+    else:
+        raise ValueError(
+            f"unknown corruption mode {mode!r}; expected 'truncate_leaf' "
+            f"or 'bad_manifest'")
+    return path
+
+
+# ---------------------------------------------------------------------------
+# Hook bundle: FaultPlan -> Trainer / dispatcher seams
+# ---------------------------------------------------------------------------
+
+class ChaosHooks:
+    """Bind a :class:`FaultPlan` to the runtime seams.
+
+    * ``fault_hook(step)``   -> ``Trainer(fault_hook=...)`` — raises for
+      ``step_crash``/``data_hiccup``; for ``ckpt_corrupt`` it corrupts
+      the latest complete checkpoint on disk AND raises
+      :class:`DeviceLost` (corruption alone is invisible until a
+      restore needs the file).
+    * ``batch_hook(step, batch)`` -> ``Trainer(batch_hook=...)`` —
+      poisons the batch with NaN for ``nonfinite_grads``.
+    * ``dispatch_hook(context)``  -> ``kernels.ops.set_dispatch_hook``
+      — raises :class:`KernelDispatchFault` once per armed
+      ``dispatch_fault`` event (the dispatcher has no step counter, so
+      these are consumed per call).
+
+    ``fired`` records every injection (kind, step, detail) — the chaos
+    telemetry the CI job uploads.  ``bind(trainer)`` lets the
+    checkpoint injector drain the trainer's async writer before
+    corrupting, so "latest complete step" is deterministic.
+    """
+
+    def __init__(self, plan: FaultPlan, *, ckpt_dir=None):
+        self.plan = plan
+        self.ckpt_dir = ckpt_dir
+        self.trainer = None
+        self.fired: list[dict] = []
+        self._consumed: set[int] = set()
+        self._armed_dispatch = [
+            i for i, e in enumerate(plan.events)
+            if e.kind == "dispatch_fault"]
+
+    def bind(self, trainer) -> "ChaosHooks":
+        self.trainer = trainer
+        if self.ckpt_dir is None:
+            self.ckpt_dir = trainer.cfg.ckpt_dir
+        return self
+
+    def _fire(self, i: int, event: FaultEvent, **detail) -> None:
+        self._consumed.add(i)
+        self.fired.append({"step": event.step, "kind": event.kind,
+                           "mode": event.mode, **detail})
+
+    # -- Trainer seams -------------------------------------------------
+    def fault_hook(self, step: int) -> None:
+        for i, ev in self.plan.at(step):
+            if i in self._consumed:
+                continue
+            if ev.kind == "step_crash":
+                self._fire(i, ev)
+                raise DeviceLost(f"injected device loss at step {step}")
+            if ev.kind == "data_hiccup":
+                self._fire(i, ev)
+                raise DataPipelineHiccup(
+                    f"injected data-pipeline hiccup at step {step}")
+            if ev.kind == "ckpt_corrupt":
+                if self.trainer is not None:
+                    self.trainer.ckpt.wait()
+                try:
+                    path = corrupt_checkpoint(
+                        self.ckpt_dir, mode=ev.mode or "truncate_leaf")
+                except FileNotFoundError:
+                    # Nothing on disk yet: corruption is a no-op, but
+                    # the device loss still fires.
+                    path = None
+                self._fire(i, ev, path=str(path))
+                raise DeviceLost(
+                    f"injected device loss at step {step} (latest "
+                    f"checkpoint corrupted: {path})")
+
+    def batch_hook(self, step: int, batch: Any) -> Any:
+        import jax
+        import jax.numpy as jnp
+
+        for i, ev in self.plan.at(step):
+            if i in self._consumed or ev.kind != "nonfinite_grads":
+                continue
+            self._fire(i, ev)
+
+            def poison(x):
+                x = jnp.asarray(x)
+                if jnp.issubdtype(x.dtype, jnp.floating):
+                    return jnp.full_like(x, jnp.nan)
+                return x
+            batch = jax.tree_util.tree_map(poison, batch)
+        return batch
+
+    # -- dispatcher seam ----------------------------------------------
+    def dispatch_hook(self, context: dict) -> None:
+        if self._armed_dispatch:
+            i = self._armed_dispatch.pop(0)
+            self._fire(i, self.plan.events[i], context=dict(context))
+            raise KernelDispatchFault(
+                f"injected kernel-dispatch failure ({context.get('op')})")
+
+    # -- telemetry -----------------------------------------------------
+    def telemetry(self) -> dict:
+        return {"plan": self.plan.summary(), "fired": list(self.fired)}
+
+    def dump_telemetry(self, path, extra: dict | None = None) -> None:
+        rec = self.telemetry()
+        if extra:
+            rec.update(extra)
+        pathlib.Path(path).write_text(json.dumps(rec, indent=2))

@@ -1,1 +1,1 @@
-from .trainer import Trainer, TrainerConfig  # noqa: F401
+from .trainer import NonFiniteDivergence, Trainer, TrainerConfig  # noqa: F401

@@ -8,19 +8,32 @@ Production posture:
   with no resharding;
 * gradient accumulation over microbatches (scan inside jit);
 * optional int8 error-feedback gradient compression;
-* checkpoint every ``ckpt_every`` steps (async, atomic, keep-k);
-* auto-resume from the latest complete checkpoint;
+* checkpoint every ``ckpt_every`` steps (async, atomic, keep-k, CRC);
+* auto-resume from the latest complete checkpoint, resharded onto the
+  restart mesh (``CheckpointManager.restore(shardings=...)`` — elastic);
+* numerics sentinels: loss/grad-norm finiteness is checked INSIDE the
+  jitted step and a non-finite step is a no-op on the state
+  (``jnp.where``-selected — buffer donation forbids keeping the old
+  state outside), logged, and counted; ``max_skips`` consecutive
+  non-finite steps raise :class:`NonFiniteDivergence` (retrying a
+  divergence from the same checkpoint replays the same divergence);
 * failure handling: a step that raises is retried from the last
-  checkpoint (restore + data replay — the pipeline is stateless, so the
-  replay is bit-exact);
-* straggler/elasticity: restore reshards onto whatever mesh the restart
-  sees (``CheckpointManager.restore(shardings=...)``).
+  checkpoint with exponential backoff (restore + data replay — the
+  pipeline is stateless, so the replay is bit-exact);
+* preemption: SIGTERM flips a flag; the loop checks it each step and
+  performs a save-and-exit instead of dying mid-step.
 
-``fault_hook`` injects failures for the integration tests.
+``fault_hook(step)`` / ``batch_hook(step, batch)`` are the chaos seams
+(``repro.resilience.ChaosHooks``): the first may raise before a step,
+the second may transform (poison) the host batch.  Health telemetry —
+``skipped`` / ``recovered`` / ``retries`` / ``preempted`` — accumulates
+in ``Trainer.telemetry`` and is appended to ``history`` when the run
+ends; per-step ``grad_norm`` rides in the logged history entries.
 """
 from __future__ import annotations
 
 import dataclasses
+import signal
 import statistics
 import time
 from typing import Any, Callable
@@ -33,9 +46,19 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.checkpoint import CheckpointManager
 from repro.distributed.compression import ef_compress_grads, init_ef_state
 from repro.distributed.sharding import named_sharding, use_rules
-from repro.optim import Optimizer
+from repro.optim import Optimizer, opt_state_specs
+from repro.optim.optimizers import global_norm
 
 Array = jax.Array
+
+
+class NonFiniteDivergence(RuntimeError):
+    """Training diverged: ``max_skips`` consecutive non-finite steps.
+
+    Deliberately NOT retried by the node-failure path — the data
+    pipeline is stateless, so restore-and-replay would reproduce the
+    same non-finite batch forever.
+    """
 
 
 @dataclasses.dataclass
@@ -48,6 +71,8 @@ class TrainerConfig:
     grad_compression: str | None = None   # None | 'int8_ef'
     log_every: int = 10
     max_retries: int = 3
+    max_skips: int = 3             # consecutive non-finite steps -> raise
+    retry_backoff: float = 0.0     # seconds; doubles per consecutive retry
 
 
 class Trainer:
@@ -55,14 +80,19 @@ class Trainer:
                  params: Any, optimizer: Optimizer, mesh,
                  param_specs: Any, batch_fn: Callable[[int], Any],
                  config: TrainerConfig,
-                 fault_hook: Callable[[int], None] | None = None):
+                 fault_hook: Callable[[int], None] | None = None,
+                 batch_hook: Callable[[int, Any], Any] | None = None):
         self.cfg = config
         self.mesh = mesh
         self.opt = optimizer
         self.batch_fn = batch_fn
         self.fault_hook = fault_hook
+        self.batch_hook = batch_hook
         self.ckpt = CheckpointManager(config.ckpt_dir, keep=config.keep)
         self.history: list[dict] = []
+        self.telemetry = {"skipped": 0, "recovered": 0, "retries": 0,
+                          "preempted": False}
+        self._preempted = False
         # Wall time of every completed step (not just logged ones) —
         # feeds the §Training-throughput comparison of EXPERIMENTS.md
         # (XLA-reference vs Pallas-kernel-path DCL training).
@@ -106,10 +136,21 @@ class Trainer:
             else:
                 (loss, _), grads = jax.value_and_grad(
                     loss_fn, has_aux=True)(params, batch)
+            grad_norm = global_norm(grads)
+            finite = jnp.isfinite(loss) & jnp.isfinite(grad_norm)
             if use_ef:
-                grads, ef_state = ef_compress_grads(grads, ef_state)
+                grads, new_ef = ef_compress_grads(grads, ef_state)
             new_params, new_opt = opt.update(grads, opt_state, params, step)
-            return new_params, new_opt, ef_state, loss
+            # Sentinel select INSIDE jit: the inputs are donated, so
+            # "keep the old state" must be expressed as data flow —
+            # a non-finite step is a no-op on every state leaf.
+            keep = lambda new, old: jax.tree_util.tree_map(
+                lambda a, b: jnp.where(finite, a, b), new, old)
+            new_params = keep(new_params, params)
+            new_opt = keep(new_opt, opt_state)
+            if use_ef:
+                ef_state = keep(new_ef, ef_state)
+            return new_params, new_opt, ef_state, loss, grad_norm, finite
 
         self._jit_step = jax.jit(one_step, donate_argnums=(0, 1, 2))
 
@@ -118,6 +159,22 @@ class Trainer:
         return {"params": self.params, "opt": self.opt_state,
                 "ef": self.ef_state, "step": jnp.asarray(self.step)}
 
+    def _bundle_shardings(self):
+        """NamedShardings for the full checkpoint bundle on the CURRENT
+        mesh — params by their specs, optimizer state by
+        ``opt_state_specs`` (slot buffers shard like their params), the
+        error-feedback buffers likewise, the step scalar replicated.
+        This is what makes ``try_resume`` elastic: the restore lays the
+        state out for whatever mesh the restart sees."""
+        if self.mesh is None:
+            return None
+        specs = {"params": self.param_specs,
+                 "opt": opt_state_specs(self.opt, self.param_specs),
+                 "ef": (self.param_specs if self.ef_state is not None
+                        else None),
+                 "step": P()}
+        return self._named(specs)
+
     def save(self):
         self.ckpt.save(self.step, self._bundle())
 
@@ -125,12 +182,23 @@ class Trainer:
         last = self.ckpt.latest_step()
         if last is None:
             return False
-        restored, step = self.ckpt.restore(self._bundle())
+        restored, step = self.ckpt.restore(
+            self._bundle(), shardings=self._bundle_shardings())
         self.params = restored["params"]
         self.opt_state = restored["opt"]
         self.ef_state = restored["ef"]
         self.step = int(restored["step"])
         return True
+
+    @property
+    def last_loss(self) -> float:
+        """Most recent logged loss.  ``history[-1]`` is no longer a loss
+        entry in general — event records (skips, recoveries, the final
+        ``health`` summary) interleave with the logged steps."""
+        for h in reversed(self.history):
+            if "loss" in h:
+                return h["loss"]
+        return float("nan")
 
     def median_step_sec(self, *, skip_first: int = 1) -> float:
         """Median wall time per completed step, excluding the first
@@ -143,11 +211,14 @@ class Trainer:
     # -- main loop ----------------------------------------------------
     def _device_batch(self, step: int):
         batch = self.batch_fn(step)
+        if self.batch_hook is not None:
+            batch = self.batch_hook(step, batch)
         if self.cfg.microbatches > 1:
             batch = jax.tree_util.tree_map(
                 lambda x: np.reshape(
-                    x, (self.cfg.microbatches,
-                        x.shape[0] // self.cfg.microbatches) + x.shape[1:]),
+                    np.asarray(x),
+                    (self.cfg.microbatches,
+                     x.shape[0] // self.cfg.microbatches) + x.shape[1:]),
                 batch)
         return self._shard_batch(batch)
 
@@ -173,45 +244,103 @@ class Trainer:
                 x, named_sharding(self.mesh, x.shape, axes))
         return jax.tree_util.tree_map(put, batch)
 
+    def _on_sigterm(self, signum, frame):
+        self._preempted = True
+
+    def _preempt_exit(self):
+        self.save()
+        self.ckpt.wait()
+        self.telemetry["preempted"] = True
+        self.history.append(
+            {"step": self.step,
+             "event": f"preempted: checkpoint saved at step {self.step}, "
+                      f"exiting"})
+        self.history.append({"step": self.step, "event": "health",
+                             **self.telemetry})
+        return self.history
+
     def run(self) -> list[dict]:
         cfg = self.cfg
         retries = 0
-        with use_rules(mesh=self.mesh):
-            while self.step < cfg.total_steps:
-                try:
-                    if self.fault_hook is not None:
-                        self.fault_hook(self.step)
-                    batch = self._device_batch(self.step)
-                    t0 = time.time()
-                    (self.params, self.opt_state, self.ef_state,
-                     loss) = self._jit_step(
-                        self.params, self.opt_state, self.ef_state,
-                        jnp.asarray(self.step), batch)
-                    loss = float(loss)
-                    dt = time.time() - t0
-                    self.step_seconds.append(dt)
-                    if self.step % cfg.log_every == 0:
+        skips = 0
+        prev_handler = None
+        try:
+            prev_handler = signal.signal(signal.SIGTERM, self._on_sigterm)
+        except ValueError:
+            pass          # not the main thread (tests, notebook executors)
+        try:
+            with use_rules(mesh=self.mesh):
+                while self.step < cfg.total_steps:
+                    if self._preempted:
+                        return self._preempt_exit()
+                    try:
+                        if self.fault_hook is not None:
+                            self.fault_hook(self.step)
+                        batch = self._device_batch(self.step)
+                        t0 = time.time()
+                        (self.params, self.opt_state, self.ef_state, loss,
+                         grad_norm, finite) = self._jit_step(
+                            self.params, self.opt_state, self.ef_state,
+                            jnp.asarray(self.step), batch)
+                        loss = float(loss)
+                        grad_norm = float(grad_norm)
+                        dt = time.time() - t0
+                        if bool(finite):
+                            skips = 0
+                            self.step_seconds.append(dt)
+                            if self.step % cfg.log_every == 0:
+                                self.history.append(
+                                    {"step": self.step, "loss": loss,
+                                     "grad_norm": round(grad_norm, 6),
+                                     "sec": round(dt, 4)})
+                        else:
+                            skips += 1
+                            self.telemetry["skipped"] += 1
+                            self.history.append(
+                                {"step": self.step,
+                                 "event": f"skipped: non-finite step "
+                                          f"(loss={loss}, "
+                                          f"grad_norm={grad_norm})"})
+                            if skips >= cfg.max_skips:
+                                raise NonFiniteDivergence(
+                                    f"{skips} consecutive non-finite steps "
+                                    f"(max_skips={cfg.max_skips}) at step "
+                                    f"{self.step}; last loss={loss}, "
+                                    f"grad_norm={grad_norm} — the replay "
+                                    f"is deterministic, so this is a "
+                                    f"divergence, not a transient")
+                        # A skipped step still advances: the pipeline is
+                        # stateless per step, so re-running the same step
+                        # would re-poison deterministically.
+                        self.step += 1
+                        retries = 0
+                        if self.step % cfg.ckpt_every == 0:
+                            self.save()
+                    except (KeyboardInterrupt, NonFiniteDivergence):
+                        raise
+                    except Exception as e:  # noqa: BLE001 — node failures
+                        retries += 1
+                        self.telemetry["retries"] += 1
+                        if retries > cfg.max_retries:
+                            raise
+                        if cfg.retry_backoff > 0:
+                            time.sleep(
+                                cfg.retry_backoff * (2 ** (retries - 1)))
+                        # Restore-and-replay: stateless data pipeline
+                        # makes the retried steps bit-exact.
+                        if not self.try_resume():
+                            # no checkpoint yet: nothing to restart from
+                            raise
+                        self.telemetry["recovered"] += 1
                         self.history.append(
-                            {"step": self.step, "loss": loss,
-                             "sec": round(dt, 4)})
-                    self.step += 1
-                    retries = 0
-                    if self.step % cfg.ckpt_every == 0:
-                        self.save()
-                except KeyboardInterrupt:
-                    raise
-                except Exception as e:  # noqa: BLE001 — node-failure path
-                    retries += 1
-                    if retries > cfg.max_retries:
-                        raise
-                    # Restore-and-replay: stateless data pipeline makes
-                    # the retried step bit-exact.
-                    if not self.try_resume():
-                        # no checkpoint yet: restart from step 0 state is
-                        # impossible — reraise
-                        raise
-                    self.history.append(
-                        {"step": self.step, "event": f"recovered: {e}"})
-            self.save()
-            self.ckpt.wait()
+                            {"step": self.step, "event": f"recovered: {e}"})
+                if self._preempted:
+                    return self._preempt_exit()
+                self.save()
+                self.ckpt.wait()
+                self.history.append({"step": self.step, "event": "health",
+                                     **self.telemetry})
+        finally:
+            if prev_handler is not None:
+                signal.signal(signal.SIGTERM, prev_handler)
         return self.history

@@ -57,3 +57,46 @@ def test_compressed_psum_on_mesh():
     # 1 device: psum is identity; error is pure quantization
     err = jnp.max(jnp.abs(got - x))
     assert float(err) <= float(jnp.max(jnp.abs(x))) / 127.0 * 0.51 + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# PR 6: shared-grid determinism / shard symmetry
+# ---------------------------------------------------------------------------
+
+def test_compressed_psum_shard_symmetric_and_deterministic():
+    """All shards quantize onto the pmax-agreed grid BEFORE the int32
+    psum, so the collective is invariant to which shard holds the
+    largest gradient and to reduction grouping.  (vmap with an axis
+    name runs the real pmax/psum collectives across the stacked axis.)"""
+    from repro.distributed.compression import _psum_int8
+
+    big = jnp.array([10.0, -5.0, 2.5, 0.1])
+    small = jnp.array([0.01, -0.02, 0.005, 0.0])
+    shards = jnp.stack([big, small])
+
+    out = jax.vmap(lambda x: compressed_psum(x, "i"), axis_name="i")(shards)
+    # every shard sees the identical replicated sum
+    np.testing.assert_array_equal(np.asarray(out[0]), np.asarray(out[1]))
+
+    # matches the shared-grid math exactly
+    scale = float(jnp.max(jnp.abs(shards)) / 127.0 + 1e-12)
+    q = np.clip(np.round(np.asarray(shards) / scale), -127, 127)
+    expected = (q[0] + q[1]) * scale
+    np.testing.assert_allclose(np.asarray(out[0]), expected, rtol=1e-6)
+
+    # shard order must not matter (symmetry)
+    out_rev = jax.vmap(lambda x: compressed_psum(x, "i"),
+                       axis_name="i")(shards[::-1])
+    np.testing.assert_array_equal(np.asarray(out[0]), np.asarray(out_rev[0]))
+
+    # error vs the true sum is bounded by one shared-grid LSB per shard
+    true = np.asarray(big + small)
+    assert np.max(np.abs(expected - true)) <= 2 * scale * 0.51 + 1e-6
+
+    # and the payload path really is the int8 collective helper
+    direct = jax.vmap(
+        lambda x: _psum_int8(
+            jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8),
+            jnp.float32(scale), "i"),
+        axis_name="i")(shards)
+    np.testing.assert_allclose(np.asarray(direct[0]), expected, rtol=1e-6)

@@ -91,8 +91,8 @@ def test_grad_accumulation_matches_large_batch(tmp_path):
     tr1.run()
     tr2.run()
     # same final loss magnitude (not bit-exact: loss-mean vs grad-mean)
-    l1 = tr1.history[-1]["loss"]
-    l2 = tr2.history[-1]["loss"]
+    l1 = tr1.last_loss
+    l2 = tr2.last_loss
     assert abs(l1 - l2) < 0.35, (l1, l2)
 
 
