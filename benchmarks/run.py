@@ -23,6 +23,12 @@ exits non-zero.
 
 ``--smoke`` runs only the kernel section at reduced shapes (< 1 min);
 ``--out DIR`` redirects the JSON artifact.
+
+``--serve`` runs the serving-engine benchmark instead (PR 7): per-bucket
+p50/p99 latency and QPS for the int8_chain vs per-layer-fp32 engines,
+written to ``BENCH_serve.json``, with the >= 1.3x chained-int8
+throughput gate (modeled HBM ratio exact; measured QPS bounded only by
+``SERVE_GATE_NOISE_TOLERANCE`` — see ``serve_bench.py``).
 """
 from __future__ import annotations
 
@@ -133,6 +139,42 @@ def gate_chain_traffic(recs: list[dict]) -> int:
     return failures
 
 
+def gate_serve(payload: dict) -> int:
+    """Serving throughput gates (PR 7).  Returns #failures.
+
+    * modeled: per-request HBM traffic ratio (fp32 per-layer / chained
+      int8 at the engine's resolved tile plans) must be >=
+      SERVE_THROUGHPUT_GATE on every bucket — analytic, no tolerance.
+    * measured: the QPS ratio only has to clear
+      GATE / SERVE_GATE_NOISE_TOLERANCE — interpret mode does not
+      realize the HBM win (see the serve_bench.py comment), so this
+      bound exists to catch order-of-magnitude collapses of the chained
+      path, not to certify the speedup.
+    """
+    from benchmarks.serve_bench import (SERVE_GATE_NOISE_TOLERANCE,
+                                        SERVE_THROUGHPUT_GATE)
+    failures = 0
+    floor = SERVE_THROUGHPUT_GATE / SERVE_GATE_NOISE_TOLERANCE
+    for bucket, rec in payload["buckets"].items():
+        modeled = rec["throughput_ratio_modeled"]
+        ok = modeled >= SERVE_THROUGHPUT_GATE
+        print(f"bench/gate_serve_modeled_bucket{bucket},0,"
+              f"modeled_ratio={modeled:.2f}x"
+              f"{'>=' if ok else '<'}{SERVE_THROUGHPUT_GATE}x"
+              f"{'' if ok else ';REGRESSION'}")
+        failures += 0 if ok else 1
+        measured = rec["throughput_ratio_measured"]
+        ok = measured >= floor
+        print(f"bench/gate_serve_measured_bucket{bucket},0,"
+              f"measured_ratio={measured:.2f}x"
+              f"{'>=' if ok else '<'}{floor:.2f}x"
+              f"(gate={SERVE_THROUGHPUT_GATE}/"
+              f"tol={SERVE_GATE_NOISE_TOLERANCE})"
+              f"{'' if ok else ';REGRESSION'}")
+        failures += 0 if ok else 1
+    return failures
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -145,9 +187,36 @@ def main(argv=None) -> None:
                     help="add the chained two-layer int8 records "
                          "(us_chain_*/hbm_bytes_chain_*) and the modeled "
                          ">= 1.3x chained-traffic gate")
+    ap.add_argument("--serve", action="store_true",
+                    help="run the serving-engine bench instead: per-bucket "
+                         "p50/p99/QPS -> BENCH_serve.json + the >= 1.3x "
+                         "chained-int8 throughput gate")
     ap.add_argument("--out", default=os.path.dirname(os.path.abspath(__file__)),
                     help="directory for BENCH_kernels.json")
     args = ap.parse_args(argv)
+
+    if args.serve:
+        from benchmarks import serve_bench
+        print("name,us_per_call,derived")
+        failures = 0
+        try:
+            payload = serve_bench.records(smoke=args.smoke)
+            for row in serve_bench.run(smoke=args.smoke, payload=payload):
+                print(row)
+            os.makedirs(args.out, exist_ok=True)
+            path = os.path.join(args.out, "BENCH_serve.json")
+            with open(path, "w") as f:
+                json.dump(payload, f, indent=2, sort_keys=True)
+            print(f"bench/json,0,wrote {path} "
+                  f"({len(payload['buckets'])} buckets)")
+            failures += gate_serve(payload)
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print("serve,nan,ERROR")
+            traceback.print_exc()
+        if failures:
+            sys.exit(1)
+        return
 
     from benchmarks import (accelerator_speed, buffer_efficiency, energy,
                             kernel_bench, rf_regularizer)

@@ -1,0 +1,172 @@
+"""Serving-engine benchmark: per-bucket latency/QPS + the chained-int8
+throughput gate (``BENCH_serve.json``).
+
+Drives the real ``repro.serve.DCLServingEngine`` (miniature calibrated
+resnet_dcn, CPU interpret mode) through each configured shape bucket
+twice — once on the production ``int8_chain`` datapath, once on the
+per-layer fp32 kernel datapath — and records:
+
+* p50/p99 request latency and QPS per bucket and datapath (measured
+  wall clock: scaling signal only on this container);
+* the MODELED per-request HBM traffic of both datapaths over the
+  bucket's DCL layers (``tiling.dcl_chain_hbm_bytes`` /
+  ``dcl_total_hbm_bytes`` at the engine's own resolved tile configs) —
+  the analytic number the >= 1.3x throughput win is gated on, exactly
+  like the ``hbm_chain_traffic_ratio`` gate of ``kernel_bench``.
+
+The fp32 side is charged honestly per layer: the XLA offset pass (fp32
+input read + offset write), then the zero-copy fp32 kernel traffic
+(band + offsets re-read + weight blocks + fp32 emission).  The chain
+side prices one fused layer (head quantize once, int8 band + int8
+weight/offset-weight blocks, int8 emission, fp32 tail) — the model's
+DCL blocks each emit int8 to their GroupNorm consumer, so ``layers=1``
+per block is the deployed configuration.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+SERVE_THROUGHPUT_GATE = 1.3     # modeled chained-int8 win — analytic
+
+# The measured QPS ratio does NOT realize the HBM win in interpret
+# mode: there is no real band DMA to save, and the int8 path pays
+# extra interpret-mode quantize/requant work, so chained wall clock on
+# this container sits near (often below) the fp32 kernel path — the
+# measured ratio here is ~0.9x where the modeled ratio is ~2.4x.  Like
+# BWD_GATE_NOISE_TOLERANCE, the measured gate exists only to catch
+# order-of-magnitude collapses of the chained serving path (a broken
+# plan cache recompiling per request, an accidental per-step fallback
+# to the reference ladder rung), so it allows the full interpret-mode
+# inversion plus scheduler noise: measured >= GATE / TOLERANCE.
+SERVE_GATE_NOISE_TOLERANCE = 3.0
+
+
+def _percentile(sorted_vals: list[float], q: float) -> float:
+    if not sorted_vals:
+        return float("nan")
+    idx = min(len(sorted_vals) - 1,
+              max(0, int(np.ceil(q * len(sorted_vals))) - 1))
+    return sorted_vals[idx]
+
+
+def _modeled_bytes(model_cfg, bucket: int, tiles: dict) -> tuple[int, int]:
+    """(fp32_per_layer_bytes, chained_bytes) per request at ``bucket``,
+    summed over the bucket's DCL layers at the engine's resolved tile
+    configs."""
+    from repro.core.tiling import (LayerShape, TileConfig,
+                                   dcl_chain_hbm_bytes,
+                                   dcl_total_hbm_bytes, out_hw)
+    from repro.serve import bucket_layer_dims
+
+    fp32 = chain = 0
+    for name, d in bucket_layer_dims(model_cfg, bucket).items():
+        th, tw, tc, tm = tiles[name]
+        shape = LayerShape(h=d["h"], w=d["w"], c_in=d["c"], c_out=d["m"],
+                           stride=d["stride"],
+                           offset_bound=model_cfg.offset_bound)
+        t = TileConfig(t_h=th, t_w=tw, t_n=tc, t_m=tm)
+        ho, wo = out_hw(d["h"], d["w"], kernel_size=3, stride=d["stride"])
+        plane = d["h"] * d["w"] * d["c"]
+        offs = ho * wo * 18
+        # offset pass (read input, write offsets) + fp32 kernel traffic
+        fp32 += plane * 4 + offs * 4 \
+            + dcl_total_hbm_bytes(shape, t, bytes_per_elem=4)
+        chain += dcl_chain_hbm_bytes(shape, t, layers=1, chained=True)
+    return fp32, chain
+
+
+def records(*, smoke: bool = False) -> dict:
+    """Run the serve benchmark; returns the ``BENCH_serve.json`` payload."""
+    import jax
+
+    from repro.models import resnet_dcn as R
+    from repro.quant.calibrate import calibrate_resnet_dcn
+    from repro.serve import DCLServeConfig, DCLServingEngine
+
+    buckets = (32,) if smoke else (32, 48)
+    n_requests = 6 if smoke else 12
+    slots = 2 if smoke else 4
+
+    model_cfg = R.ResNetDCNConfig(
+        stage_sizes=(1, 1, 1, 1), widths=(16, 32, 64, 128), stem_width=8,
+        num_dcn=2, num_classes=4, img_size=buckets[0], offset_bound=2.0,
+        use_kernel=True)
+    params = R.init_params(jax.random.PRNGKey(0), model_cfg)
+    rng = np.random.RandomState(0)
+    table = calibrate_resnet_dcn(
+        params, model_cfg,
+        [rng.randn(2, b, b, 3).astype(np.float32) for b in buckets])
+
+    payload: dict = {
+        "smoke": smoke,
+        "slots": slots,
+        "n_requests_per_bucket": n_requests,
+        "quant_default": "int8_chain",
+        "note": "wall times are interpret-mode (CPU) — scaling only; the "
+                "gated throughput win is the modeled per-request HBM "
+                "traffic ratio (fp32 per-layer / chained int8) at the "
+                "engine's resolved tile plans; measured QPS is bounded "
+                "only by SERVE_GATE_NOISE_TOLERANCE (see serve_bench.py)",
+        "buckets": {},
+    }
+
+    ratios_modeled = []
+    qps = {"int8_chain": {}, "fp32_kernel": {}}
+    for bucket in buckets:
+        rec: dict = {}
+        imgs = [rng.randn(bucket, bucket, 3).astype(np.float32)
+                for _ in range(n_requests)]
+        for quant in ("int8_chain", "fp32_kernel"):
+            eng = DCLServingEngine(
+                params, model_cfg,
+                DCLServeConfig(buckets=(bucket,), slots=slots, quant=quant),
+                scale_table=table)
+            eng.submit(imgs[0])
+            eng.run_until_drained()          # warm the jit caches
+            for im in imgs:
+                eng.submit(im)
+            t0 = time.perf_counter()
+            eng.run_until_drained()
+            dt = time.perf_counter() - t0
+            served = [r for r in eng.completed[1:] if r.outcome == "ok"]
+            assert len(served) == n_requests, eng.counters
+            lats = sorted(r.latency_s() for r in served)
+            key = "chain" if quant == "int8_chain" else "fp32"
+            rec[f"p50_ms_{key}"] = _percentile(lats, 0.50) * 1e3
+            rec[f"p99_ms_{key}"] = _percentile(lats, 0.99) * 1e3
+            rec[f"qps_{key}"] = n_requests / dt
+            qps[quant][bucket] = n_requests / dt
+            if quant == "int8_chain":
+                fp32_b, chain_b = _modeled_bytes(model_cfg, bucket,
+                                                 eng.plans[bucket])
+                rec["hbm_bytes_fp32_per_layer"] = fp32_b
+                rec["hbm_bytes_chained"] = chain_b
+                rec["throughput_ratio_modeled"] = fp32_b / chain_b
+                ratios_modeled.append(fp32_b / chain_b)
+        rec["throughput_ratio_measured"] = \
+            rec["qps_chain"] / rec["qps_fp32"]
+        payload["buckets"][str(bucket)] = rec
+
+    payload["throughput_ratio_modeled_min"] = min(ratios_modeled)
+    payload["throughput_ratio_measured_min"] = min(
+        payload["buckets"][str(b)]["throughput_ratio_measured"]
+        for b in buckets)
+    payload["gate"] = SERVE_THROUGHPUT_GATE
+    payload["gate_noise_tolerance"] = SERVE_GATE_NOISE_TOLERANCE
+    return payload
+
+
+def run(*, smoke: bool = False, payload: dict | None = None):
+    """CSV rows for the driver (``name,us_per_call,derived``)."""
+    payload = payload or records(smoke=smoke)
+    rows = []
+    for bucket, rec in payload["buckets"].items():
+        rows.append(
+            f"serve/bucket{bucket},"
+            f"{rec['p50_ms_chain'] * 1e3:.0f},"
+            f"p50={rec['p50_ms_chain']:.1f}ms;p99={rec['p99_ms_chain']:.1f}"
+            f"ms;qps={rec['qps_chain']:.1f};modeled_ratio="
+            f"{rec['throughput_ratio_modeled']:.2f}x")
+    return rows

@@ -72,6 +72,7 @@ Parallel training (PR 4), two composable levels:
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 import logging
@@ -158,6 +159,35 @@ def set_degradation(enabled: bool):
 def reset_fallback_warnings() -> None:
     """Forget which entry points already warned (tests)."""
     _FALLBACK_WARNED.clear()
+
+
+@contextlib.contextmanager
+def degradation_scope(enabled: bool):
+    """Scoped :func:`set_degradation` with guaranteed restore.
+
+    The serving engine wraps each batch in ``degradation_scope(False)``
+    so kernel failures surface as exceptions it converts into its OWN
+    per-request ladder (retry, then drop a rung, recorded in request
+    telemetry) instead of this module's process-global warn-once
+    fallback — two engines in one process never share degradation
+    state (docs/serving.md)."""
+    prev = set_degradation(enabled)
+    try:
+        yield
+    finally:
+        set_degradation(prev)
+
+
+@contextlib.contextmanager
+def dispatch_hook_scope(hook):
+    """Scoped :func:`set_dispatch_hook` with guaranteed restore — the
+    save/restore idiom chaos tests and per-engine instrumentation use
+    so a raising body cannot leak a hook into unrelated callers."""
+    prev = set_dispatch_hook(hook)
+    try:
+        yield
+    finally:
+        set_dispatch_hook(prev)
 
 
 def _consult_dispatch_hook(**context) -> None:

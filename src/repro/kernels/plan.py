@@ -141,6 +141,39 @@ def spec_tiles(spec: DCSpec, x: Array, offsets: Array,
     return min(th, ho), min(tw, wo), tc, tm
 
 
+def warm_tile_cache(layers, *, offset_bound: float, kernel_size: int = 3,
+                    dilation: int = 1, objective: str = "forward",
+                    dtype: str | None = None,
+                    cores: int = 1) -> dict[str, tuple[int, int, int, int]]:
+    """Resolve (and memoize) the tile config for every named layer.
+
+    ``layers`` maps a layer name to its dims
+    ``{"h", "w", "c", "m", "stride"?}``.  This is the serving engine's
+    per-bucket plan cache: each shape bucket calls it once at engine
+    start, the Sec. 3.2 chooser sweep runs then (not on the first
+    request), and every later ``deform_conv`` dispatch for the bucket
+    hits the :func:`resolve_tiles` ``lru_cache``.  Returns
+    ``{name: (tile_h, tile_w, tile_c, tile_m)}``.
+    """
+    resolved = {}
+    for name, d in layers.items():
+        resolved[name] = resolve_tiles(
+            d["h"], d["w"], d["c"], d["m"], kernel_size=kernel_size,
+            stride=d.get("stride", 1), dilation=dilation,
+            offset_bound=offset_bound, tile_h=None, tile_w=None,
+            tile_c=None, tile_m=None, objective=objective, dtype=dtype,
+            cores=cores)
+    return resolved
+
+
+def tile_cache_info() -> dict[str, int]:
+    """Hit/miss counters of the memoized tile chooser — surfaced in the
+    serving engine's telemetry so a bucket-miss storm (every request a
+    fresh compile) is visible as a miss-rate spike."""
+    ci = resolve_tiles.cache_info()
+    return {"hits": ci.hits, "misses": ci.misses, "size": ci.currsize}
+
+
 # ---------------------------------------------------------------------------
 # Input preparation
 # ---------------------------------------------------------------------------

@@ -1,7 +1,17 @@
 """Serving launcher: continuous batching for --arch <id>.
 
+LM archs run the token slot engine:
+
     PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
         --requests 12 [--slots 4] [--cache-len 128] [--ckpt DIR]
+
+DCL detection archs run the shape-bucketed engine (PR 7) — calibrated
+int8_chain by default, with deadlines / admission control / the
+per-request degradation ladder live:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch resnet50_dcn \
+        --requests 12 [--buckets 64,128] [--quant int8_chain] \
+        [--deadline 30] [--shed-policy reject_new] [--telemetry OUT.json]
 
 Reduced config by default (CPU container); optionally restores params
 from a checkpoint produced by ``repro.launch.train``.
@@ -9,6 +19,7 @@ from a checkpoint produced by ``repro.launch.train``.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -17,7 +28,63 @@ import numpy as np
 from repro.models import registry as reg
 from repro.models.registry import reduced_config
 from repro.models.resnet_dcn import ResNetDCNConfig
-from repro.serve import Request, ServeConfig, ServingEngine
+from repro.serve import (DCLServeConfig, DCLServingEngine, LADDER,
+                         Request, ServeConfig, ServingEngine)
+
+
+def serve_detection(cfg: ResNetDCNConfig, args) -> None:
+    from repro.models import resnet_dcn as R
+    from repro.quant.calibrate import calibrate_resnet_dcn
+
+    if cfg.offset_bound is None:
+        cfg = dataclasses.replace(cfg, offset_bound=2.0)
+    cfg = dataclasses.replace(cfg, use_kernel=True)
+    buckets = tuple(int(b) for b in args.buckets.split(","))
+    params = R.init_params(jax.random.PRNGKey(0), cfg)
+    if args.ckpt:
+        from repro.checkpoint import restore_checkpoint
+        restored, step = restore_checkpoint(args.ckpt, {"params": params})
+        params = restored["params"]
+        print(f"restored params from step {step}")
+
+    rng = np.random.RandomState(0)
+    table = None
+    if args.quant in ("int8_chain", "int8"):
+        t0 = time.time()
+        table = calibrate_resnet_dcn(
+            params, cfg,
+            [rng.randn(2, b, b, 3).astype(np.float32) for b in buckets])
+        print(f"calibrated scale table in {time.time() - t0:.1f}s "
+              f"({sorted(k for k in table if k != '_meta')})")
+
+    engine = DCLServingEngine(
+        params, cfg,
+        DCLServeConfig(buckets=buckets, slots=args.slots,
+                       quant=args.quant,
+                       queue_capacity=args.queue_capacity,
+                       shed_policy=args.shed_policy,
+                       default_deadline=args.deadline),
+        scale_table=table)
+    for uid in range(args.requests):
+        b = buckets[uid % len(buckets)]
+        engine.submit(rng.randn(b, b, 3).astype(np.float32))
+
+    t0 = time.time()
+    engine.run_until_drained()
+    dt = time.time() - t0
+    ok = [r for r in engine.completed if r.outcome == "ok"]
+    lats = sorted(r.latency_s() for r in ok)
+    print(f"served {len(ok)}/{len(engine.completed)} requests in "
+          f"{engine.steps} batched steps ({dt:.1f}s, "
+          f"{len(ok) / max(dt, 1e-9):.2f} req/s on CPU interpret)")
+    if lats:
+        print(f"  p50 latency {lats[len(lats) // 2] * 1e3:.0f} ms, "
+              f"max {lats[-1] * 1e3:.0f} ms")
+    print(f"  counters: {engine.counters}")
+    if args.telemetry:
+        from repro.resilience import dump_telemetry
+        dump_telemetry(args.telemetry, engine.telemetry())
+        print(f"  telemetry -> {args.telemetry}")
 
 
 def main() -> None:
@@ -28,13 +95,24 @@ def main() -> None:
     ap.add_argument("--cache-len", type=int, default=128)
     ap.add_argument("--max-new-tokens", type=int, default=16)
     ap.add_argument("--ckpt", default=None)
+    # DCL detection engine knobs
+    ap.add_argument("--buckets", default="64",
+                    help="comma-separated square shape buckets")
+    ap.add_argument("--quant", default="int8_chain", choices=LADDER)
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="per-request deadline in seconds")
+    ap.add_argument("--queue-capacity", type=int, default=64)
+    ap.add_argument("--shed-policy", default="reject_new",
+                    choices=("reject_new", "shed_oldest"))
+    ap.add_argument("--telemetry", default=None,
+                    help="write engine telemetry JSON here")
     args = ap.parse_args()
 
     arch = reg.get(args.arch)
     cfg = reduced_config(arch)
     if isinstance(cfg, ResNetDCNConfig):
-        raise SystemExit("CNN archs are batch-inference only; "
-                         "use repro.launch.dryrun --shape infer_det")
+        serve_detection(cfg, args)
+        return
     if cfg.codebooks > 1:
         raise SystemExit("the slot engine tracks one token per slot; "
                          "multi-codebook decoding (musicgen) needs a "

@@ -9,12 +9,13 @@ retry, preemption), ``repro.checkpoint`` (CRC-verified restore with
 fallback), and ``repro.kernels.ops`` (graceful degradation to the XLA
 reference path) — this package only *breaks* things, on schedule.
 """
-from .faults import (ChaosHooks, DataPipelineHiccup, DeviceLost,
-                     FaultEvent, FaultInjected, FaultPlan,
-                     KernelDispatchFault, corrupt_checkpoint)
+from .faults import (FAULT_KINDS, ChaosHooks, DataPipelineHiccup,
+                     DeviceLost, FaultEvent, FaultInjected, FaultPlan,
+                     KernelDispatchFault, corrupt_checkpoint,
+                     dump_telemetry)
 
 __all__ = [
-    "ChaosHooks", "DataPipelineHiccup", "DeviceLost", "FaultEvent",
-    "FaultInjected", "FaultPlan", "KernelDispatchFault",
-    "corrupt_checkpoint",
+    "FAULT_KINDS", "ChaosHooks", "DataPipelineHiccup", "DeviceLost",
+    "FaultEvent", "FaultInjected", "FaultPlan", "KernelDispatchFault",
+    "corrupt_checkpoint", "dump_telemetry",
 ]

@@ -22,6 +22,21 @@ exactly the regime where the job must keep running through them):
   XLA reference path with one logged warning (see docs/robustness.md,
   "degradation ladder").
 
+Serve-time fault kinds (PR 7) target the DCL serving engine
+(``repro.serve.dcl_engine``) through its ``step_hook``/``admit_hook``
+seams the same way the trainer kinds target the Trainer:
+
+* ``slow_step``         — one engine step stalls (``mode`` = seconds,
+  default 0.05); requests with tight deadlines must expire with a typed
+  ``deadline_exceeded`` outcome instead of hanging a slot.
+* ``malformed_request`` — a submitted request's image is replaced with
+  a rank-1 plane; admission must refuse it with a typed ``malformed``
+  outcome.
+* ``bucket_miss_storm`` — a burst of requests (``mode`` = count,
+  default 3) is diverted to a resolution matching no configured shape
+  bucket; a strict engine must shed them all with typed
+  ``unbucketable`` outcomes, not crash or wedge the queue.
+
 Every injector is one-shot (a consumed event never re-fires), so
 restore-and-replay after a crash cannot loop on its own fault, and a
 chaos run is reproducible: :meth:`FaultPlan.random` derives the whole
@@ -32,6 +47,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import pathlib
+import time
 from typing import Any, Sequence
 
 import numpy as np
@@ -39,11 +55,13 @@ import numpy as np
 __all__ = [
     "FAULT_KINDS", "FaultInjected", "DeviceLost", "DataPipelineHiccup",
     "KernelDispatchFault", "FaultEvent", "FaultPlan", "ChaosHooks",
-    "corrupt_checkpoint",
+    "corrupt_checkpoint", "dump_telemetry",
 ]
 
 FAULT_KINDS = ("nonfinite_grads", "step_crash", "ckpt_corrupt",
-               "data_hiccup", "dispatch_fault")
+               "data_hiccup", "dispatch_fault",
+               # serve-time kinds (DCL serving engine seams)
+               "slow_step", "malformed_request", "bucket_miss_storm")
 
 
 class FaultInjected(RuntimeError):
@@ -131,6 +149,40 @@ class FaultPlan:
 
 
 # ---------------------------------------------------------------------------
+# Telemetry
+# ---------------------------------------------------------------------------
+
+def _json_default(o):
+    """Coerce the numpy scalars/arrays telemetry records accumulate."""
+    if isinstance(o, np.integer):
+        return int(o)
+    if isinstance(o, np.floating):
+        return float(o)
+    if isinstance(o, np.ndarray):
+        return o.tolist()
+    raise TypeError(f"not JSON-serializable: {type(o).__name__}")
+
+
+def dump_telemetry(path, record: dict, extra: dict | None = None
+                   ) -> pathlib.Path:
+    """Write a telemetry record (plus optional ``extra`` keys) as JSON.
+
+    The shared sink for every robustness artifact — chaos-run
+    injections (:meth:`ChaosHooks.dump_telemetry`), serving-engine
+    per-request records (``DCLServingEngine.telemetry``), trainer
+    health counters.  Numpy scalars and arrays are coerced to plain
+    JSON so a round-trip through :func:`json.loads` reproduces the
+    record exactly.  Returns the written path.
+    """
+    rec = dict(record)
+    if extra:
+        rec.update(extra)
+    p = pathlib.Path(path)
+    p.write_text(json.dumps(rec, indent=2, default=_json_default))
+    return p
+
+
+# ---------------------------------------------------------------------------
 # Checkpoint corruption
 # ---------------------------------------------------------------------------
 
@@ -187,22 +239,36 @@ class ChaosHooks:
       — raises :class:`KernelDispatchFault` once per armed
       ``dispatch_fault`` event (the dispatcher has no step counter, so
       these are consumed per call).
+    * ``serve_step_hook(step, ctx)`` -> ``DCLServingEngine(step_hook=...)``
+      — stalls the engine step for ``slow_step`` events.
+    * ``admit_hook(request)`` -> ``DCLServingEngine(admit_hook=...)`` —
+      corrupts submitted requests (``malformed_request``,
+      ``bucket_miss_storm``); admission has no step counter, so these
+      are armed in plan order and consumed per submitted request.
 
     ``fired`` records every injection (kind, step, detail) — the chaos
     telemetry the CI job uploads.  ``bind(trainer)`` lets the
     checkpoint injector drain the trainer's async writer before
-    corrupting, so "latest complete step" is deterministic.
+    corrupting, so "latest complete step" is deterministic.  ``sleep``
+    is the stall primitive of ``slow_step`` — tests running the engine
+    on a fake clock point it at the clock's ``advance`` so the stall
+    is deterministic regardless of wall time.
     """
 
-    def __init__(self, plan: FaultPlan, *, ckpt_dir=None):
+    def __init__(self, plan: FaultPlan, *, ckpt_dir=None, sleep=time.sleep):
         self.plan = plan
         self.ckpt_dir = ckpt_dir
         self.trainer = None
+        self.sleep = sleep
         self.fired: list[dict] = []
         self._consumed: set[int] = set()
         self._armed_dispatch = [
             i for i, e in enumerate(plan.events)
             if e.kind == "dispatch_fault"]
+        self._armed_admission = [
+            i for i, e in enumerate(plan.events)
+            if e.kind in ("malformed_request", "bucket_miss_storm")]
+        self._storm_left = 0
 
     def bind(self, trainer) -> "ChaosHooks":
         self.trainer = trainer
@@ -267,12 +333,56 @@ class ChaosHooks:
             raise KernelDispatchFault(
                 f"injected kernel-dispatch failure ({context.get('op')})")
 
+    # -- serving seams -------------------------------------------------
+    def serve_step_hook(self, step: int, context: dict | None = None
+                        ) -> None:
+        """``DCLServingEngine(step_hook=...)``: stall ``slow_step``
+        events scheduled for this engine step (``mode`` = seconds)."""
+        for i, ev in self.plan.at(step):
+            if i in self._consumed or ev.kind != "slow_step":
+                continue
+            dur = float(ev.mode) if ev.mode else 0.05
+            self._fire(i, ev, sleep_s=dur, **(context or {}))
+            self.sleep(dur)
+
+    def admit_hook(self, request):
+        """``DCLServingEngine(admit_hook=...)``: corrupt submitted
+        requests.  ``malformed_request`` replaces the image with a
+        rank-1 plane; ``bucket_miss_storm`` diverts this and the next
+        ``mode - 1`` (default 3 total) requests to a resolution no
+        bucket matches.  Returns the (possibly mutated) request."""
+        if self._storm_left > 0:
+            self._storm_left -= 1
+            request.image = self._off_bucket(request.image)
+            return request
+        if not self._armed_admission:
+            return request
+        i = self._armed_admission[0]
+        ev = self.plan.events[i]
+        if ev.kind == "bucket_miss_storm":
+            self._armed_admission.pop(0)
+            burst = int(ev.mode) if ev.mode else 3
+            self._fire(i, ev, burst=burst)
+            self._storm_left = burst - 1
+            request.image = self._off_bucket(request.image)
+        elif ev.kind == "malformed_request":
+            self._armed_admission.pop(0)
+            self._fire(i, ev)
+            request.image = np.full((5,), np.nan, np.float32)
+        return request
+
+    @staticmethod
+    def _off_bucket(image) -> np.ndarray:
+        """A zero image at a resolution that misses every power-aligned
+        bucket (odd extents, larger than the original)."""
+        arr = np.asarray(image)
+        h = (arr.shape[0] if arr.ndim >= 2 else 8) + 1
+        w = (arr.shape[1] if arr.ndim >= 2 else 8) + 3
+        return np.zeros((h | 1, w | 1, 3), np.float32)
+
     # -- telemetry -----------------------------------------------------
     def telemetry(self) -> dict:
         return {"plan": self.plan.summary(), "fired": list(self.fired)}
 
     def dump_telemetry(self, path, extra: dict | None = None) -> None:
-        rec = self.telemetry()
-        if extra:
-            rec.update(extra)
-        pathlib.Path(path).write_text(json.dumps(rec, indent=2))
+        dump_telemetry(path, self.telemetry(), extra)

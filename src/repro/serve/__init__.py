@@ -1,1 +1,6 @@
 from .engine import ServeConfig, ServingEngine, Request  # noqa: F401
+from .admission import (AdmissionConfig, AdmissionQueue,  # noqa: F401
+                        DeadlineExceeded, DetRequest, MalformedRequest,
+                        OUTCOMES, resolve_bucket)
+from .dcl_engine import (LADDER, DCLServeConfig,  # noqa: F401
+                         DCLServingEngine, bucket_layer_dims)

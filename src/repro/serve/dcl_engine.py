@@ -1,0 +1,349 @@
+"""Slot-based detection serving engine for the bounded DCL models.
+
+The LM engine (``serve.engine``) streams tokens through a static decode
+batch; detection requests are single-shot, so the slot discipline here
+is admit -> one batched forward -> retire, with the static-shape story
+carried by *shape buckets*: a small fixed set of square resolutions,
+each warmed at engine start with a memoized tile plan
+(``kernels.plan.warm_tile_cache`` over the per-layer ``resolve_tiles``
+lru-cache).  Every step serves one bucket — up to ``slots`` queued
+requests padded into one static batch — so the jit caches stay closed
+over ``len(buckets)`` shapes per datapath rung.
+
+The default datapath is the paper's production configuration:
+``quant="int8_chain"`` (fused in-kernel offset conv, int8 -> int8 layer
+handoff) with calibration scale tables loaded at engine start.
+
+Robustness layer (docs/serving.md):
+
+* per-request deadlines — checked at admission, swept between steps,
+  and re-checked after the serving step (a ``slow_step`` stall lands
+  here); expiry is the typed ``deadline_exceeded`` outcome.
+* bounded admission queue — ``serve.admission``; overload is shed
+  (``shed_oldest``) or bounced (``reject_new``), never an exception.
+* transient step failures — the failed batch (and ONLY that batch: the
+  affected slots) is replayed with exponential backoff, up to
+  ``max_retries`` per rung.
+* per-request degradation ladder — persistent failures drop the batch
+  one rung (int8_chain -> int8 -> fp32 kernel -> XLA reference) and
+  replay.  The engine runs each batch under
+  ``ops.degradation_scope(False)`` so kernel failures surface HERE and
+  are recorded in each affected request's telemetry (``ladder``,
+  ``degraded``) — not in ``ops``'s process-global warn-once fallback,
+  so two engines in one process keep independent ladders and every
+  degraded request reports its own rung.
+
+The model forward runs eagerly (each ``ops.deform_conv*`` call is
+itself jitted per static shape): the dispatch-hook seam and the
+per-request ladder need per-step visibility, which an outer jit would
+collapse to trace time.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import Any, Callable, Mapping
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, plan
+from repro.models import resnet_dcn as R
+
+from .admission import (AdmissionConfig, AdmissionQueue, DetRequest,
+                        MalformedRequest, resolve_bucket)
+
+__all__ = ["LADDER", "DCLServeConfig", "DCLServingEngine",
+           "bucket_layer_dims"]
+
+# Degradation ladder, top (production) rung first.  Mirrors the ops.py
+# fallback ladder; the bottom rung never touches the kernel path.
+LADDER = ("int8_chain", "int8", "fp32_kernel", "fp32_ref")
+
+
+@dataclasses.dataclass(frozen=True)
+class DCLServeConfig:
+    buckets: tuple[int, ...] = (64, 128)
+    slots: int = 4                   # static batch rows per step
+    quant: str = "int8_chain"        # entry rung of LADDER
+    strict_buckets: bool = True      # False: pad up to the next bucket
+    queue_capacity: int = 64
+    shed_policy: str = "reject_new"  # reject_new | shed_oldest
+    max_retries: int = 2             # same-rung replays before degrading
+    retry_backoff: float = 0.0       # seconds; doubles per consecutive retry
+    default_deadline: float | None = None   # seconds from submit; None = off
+
+    def __post_init__(self):
+        if self.quant not in LADDER:
+            raise ValueError(
+                f"unknown serve datapath {self.quant!r}; expected one "
+                f"of {LADDER} (the degradation ladder runs from the "
+                f"chosen rung down)")
+        if not self.buckets:
+            raise ValueError("at least one shape bucket is required — "
+                             "static compilation needs a closed shape set")
+        if self.slots < 1:
+            raise ValueError(f"slots must be >= 1 (got {self.slots})")
+
+
+def bucket_layer_dims(cfg: R.ResNetDCNConfig, res: int) -> dict[str, dict]:
+    """Dims of every DCL invocation at input resolution ``res`` — the
+    shapes the bucket's tile plans are resolved against."""
+    dims: dict[str, dict] = {}
+    e = res // 4                       # stride-2 stem + stride-2 maxpool
+    bi = 0
+    for s, (n_blocks, width) in enumerate(zip(cfg.stage_sizes, cfg.widths)):
+        for b in range(n_blocks):
+            stride = 2 if (b == 0 and s > 0) else 1
+            if cfg.is_dcn(bi):
+                mid = width // 4
+                dims[f"s{s}b{b}"] = dict(h=e, w=e, c=mid, m=mid,
+                                         stride=stride)
+            e //= stride
+            bi += 1
+    return dims
+
+
+class DCLServingEngine:
+    """See module docstring.  ``clock``/``sleep`` are injectable for
+    deterministic deadline and backoff tests; ``step_hook(step, ctx)``
+    and ``admit_hook(request)`` are the chaos seams
+    (``resilience.ChaosHooks.serve_step_hook`` / ``admit_hook``)."""
+
+    def __init__(self, params, model_cfg: R.ResNetDCNConfig,
+                 serve_cfg: DCLServeConfig, *,
+                 scale_table: Mapping[str, Any] | str | None = None,
+                 clock: Callable[[], float] = time.monotonic,
+                 sleep: Callable[[float], None] = time.sleep,
+                 step_hook: Callable[[int, dict], None] | None = None,
+                 admit_hook: Callable[[DetRequest], DetRequest] | None = None):
+        self.params = params
+        self.scfg = serve_cfg
+        self.clock = clock
+        self._sleep = sleep
+        self.step_hook = step_hook
+        self.admit_hook = admit_hook
+
+        if isinstance(scale_table, str):
+            from repro.quant.calibrate import load_scale_table
+            scale_table = load_scale_table(scale_table)
+        self.scale_table = scale_table
+        if serve_cfg.quant in ("int8_chain", "int8"):
+            if model_cfg.offset_bound is None:
+                raise ValueError(
+                    f"serve datapath {serve_cfg.quant!r} needs a trained "
+                    f"offset_bound on the model config — the bounded "
+                    f"band DMA is the whole int8 story (Eq. 6)")
+            if scale_table is None:
+                raise ValueError(
+                    f"serve datapath {serve_cfg.quant!r} needs a "
+                    f"calibration scale table at engine start "
+                    f"(repro.quant.calibrate_resnet_dcn + "
+                    f"save_scale_table); chained layers exchange int8 "
+                    f"on pinned activation grids")
+
+        # One model config per ladder rung; the rung is chosen per batch
+        # attempt, so all four stay ready.
+        self._cfgs = {
+            "int8_chain": dataclasses.replace(
+                model_cfg, quant="int8_chain", use_kernel=True),
+            "int8": dataclasses.replace(
+                model_cfg, quant="int8", use_kernel=True),
+            "fp32_kernel": dataclasses.replace(
+                model_cfg, quant="none", use_kernel=True),
+            "fp32_ref": dataclasses.replace(
+                model_cfg, quant="none", use_kernel=False),
+        }
+
+        # Per-bucket plan cache: resolve every DCL tile config now, so
+        # the chooser sweep happens at engine start, not first request.
+        int8ish = serve_cfg.quant in ("int8_chain", "int8")
+        self.plans: dict[int, dict[str, tuple]] = {}
+        if model_cfg.offset_bound is not None:
+            for b in serve_cfg.buckets:
+                self.plans[b] = plan.warm_tile_cache(
+                    bucket_layer_dims(model_cfg, b),
+                    offset_bound=model_cfg.offset_bound,
+                    objective="forward",
+                    dtype="int8" if int8ish else None)
+
+        self.queue = AdmissionQueue(AdmissionConfig(
+            capacity=serve_cfg.queue_capacity,
+            policy=serve_cfg.shed_policy))
+        self.completed: list[DetRequest] = []
+        self.counters: dict[str, int] = {}
+        self.steps = 0
+        self._uid = itertools.count()
+
+    # -- admission -----------------------------------------------------
+    def submit(self, image, *, deadline: float | None = None,
+               uid: int | None = None) -> DetRequest:
+        """Admit a detection request.  ``deadline`` is seconds from now
+        on the engine clock.  The returned request is either queued or
+        already retired with a typed outcome (rejected / shed /
+        malformed / unbucketable / deadline_exceeded) — admission never
+        raises on bad traffic."""
+        now = self.clock()
+        if deadline is None and self.scfg.default_deadline is not None:
+            deadline = self.scfg.default_deadline
+        req = DetRequest(
+            uid=next(self._uid) if uid is None else uid, image=image,
+            deadline=None if deadline is None else now + deadline,
+            submitted_at=now)
+        if self.admit_hook is not None:
+            req = self.admit_hook(req) or req
+
+        try:
+            arr = np.asarray(req.image)
+            if arr.ndim != 3 or arr.shape[-1] != 3 \
+                    or not np.issubdtype(arr.dtype, np.number):
+                raise MalformedRequest(
+                    f"detection request needs a numeric (H, W, 3) "
+                    f"image; got shape {arr.shape} dtype {arr.dtype}")
+        except Exception as e:
+            return self._retire(req, "malformed",
+                                f"{type(e).__name__}: {e}")
+        try:
+            req.bucket = resolve_bucket(arr.shape[0], arr.shape[1],
+                                        self.scfg.buckets,
+                                        strict=self.scfg.strict_buckets)
+        except ValueError as e:
+            return self._retire(req, "unbucketable", str(e))
+        if req.deadline is not None and now > req.deadline:
+            return self._retire(req, "deadline_exceeded",
+                                "expired at admission")
+        displaced = self.queue.offer(req)
+        if displaced is not None:
+            self._retire(displaced)
+        return req
+
+    def _retire(self, req: DetRequest, outcome: str | None = None,
+                error: str = "") -> DetRequest:
+        if outcome is not None:
+            req.outcome = outcome
+            if error:
+                req.error = error
+        req.done = True
+        req.completed_at = self.clock()
+        self.completed.append(req)
+        self.counters[req.outcome] = self.counters.get(req.outcome, 0) + 1
+        return req
+
+    # -- serving -------------------------------------------------------
+    def step(self) -> int:
+        """Expire, admit one bucket's batch, serve it.  Returns the
+        number of requests retired this step."""
+        before = len(self.completed)
+        for req in self.queue.expire(self.clock()):
+            self._retire(req)
+        bucket = self.queue.head_bucket()
+        if bucket is None:
+            return len(self.completed) - before
+        batch = self.queue.take(bucket, self.scfg.slots)
+        if self.step_hook is not None:
+            self.step_hook(self.steps,
+                           {"bucket": bucket, "size": len(batch)})
+        self._run_batch(bucket, batch)
+        self.steps += 1
+        return len(self.completed) - before
+
+    def _batch_array(self, bucket: int, reqs: list[DetRequest]) -> Any:
+        images = np.zeros((self.scfg.slots, bucket, bucket, 3), np.float32)
+        for i, r in enumerate(reqs):
+            arr = np.asarray(r.image, np.float32)
+            images[i, :arr.shape[0], :arr.shape[1], :] = arr
+        return jnp.asarray(images)
+
+    def _forward(self, rung: str, x):
+        cfg = self._cfgs[rung]
+        with ops.degradation_scope(False):
+            out, _ = R.forward(self.params, cfg, x,
+                               quant_scales=self.scale_table)
+        return out
+
+    def _run_batch(self, bucket: int, reqs: list[DetRequest]) -> None:
+        x = self._batch_array(bucket, reqs)
+        rung_idx = LADDER.index(self.scfg.quant)
+        attempt = 0
+        while True:
+            try:
+                out = self._forward(LADDER[rung_idx], x)
+                break
+            except Exception as e:          # noqa: BLE001 — typed below
+                self.counters["retries"] = \
+                    self.counters.get("retries", 0) + 1
+                for r in reqs:
+                    r.retries += 1
+                attempt += 1
+                if attempt <= self.scfg.max_retries:
+                    # transient: replay the affected slots, same rung
+                    if self.scfg.retry_backoff:
+                        self._sleep(self.scfg.retry_backoff
+                                    * 2 ** (attempt - 1))
+                    continue
+                if rung_idx + 1 < len(LADDER):
+                    # persistent: drop one rung, fresh retry budget
+                    rung_idx += 1
+                    attempt = 0
+                    for r in reqs:
+                        r.degraded = True
+                    self.counters["degraded_batches"] = \
+                        self.counters.get("degraded_batches", 0) + 1
+                    continue
+                for r in reqs:              # bottom rung failed: typed
+                    self._retire(r, "failed",
+                                 f"{type(e).__name__}: {e}")
+                return
+        now = self.clock()
+        cls = np.asarray(out["cls"])
+        box = np.asarray(out["box"])
+        for i, r in enumerate(reqs):
+            r.ladder = LADDER[rung_idx]
+            if r.deadline is not None and now > r.deadline:
+                self._retire(r, "deadline_exceeded",
+                             f"completed {now - r.deadline:.3f}s past "
+                             f"deadline (result dropped)")
+                continue
+            r.result = {"cls": cls[i], "box": box[i]}
+            self._retire(r, "ok")
+
+    def run_until_drained(self, max_steps: int = 10_000
+                          ) -> list[DetRequest]:
+        steps = 0
+        while len(self.queue) and steps < max_steps:
+            self.step()
+            steps += 1
+        return self.completed
+
+    # -- telemetry -----------------------------------------------------
+    def telemetry(self) -> dict:
+        """Per-request records + engine counters — the schema
+        ``resilience.dump_telemetry`` writes (docs/serving.md)."""
+        per_bucket: dict[str, int] = {}
+        for r in self.completed:
+            if r.outcome == "ok":
+                key = str(r.bucket)
+                per_bucket[key] = per_bucket.get(key, 0) + 1
+        return {
+            "engine": {
+                "buckets": list(self.scfg.buckets),
+                "slots": self.scfg.slots,
+                "quant": self.scfg.quant,
+                "strict_buckets": self.scfg.strict_buckets,
+                "queue_capacity": self.scfg.queue_capacity,
+                "shed_policy": self.scfg.shed_policy,
+            },
+            "steps": self.steps,
+            "counters": dict(self.counters),
+            "served_per_bucket": per_bucket,
+            "plan_cache": plan.tile_cache_info(),
+            "plans": {str(b): {k: list(v) for k, v in p.items()}
+                      for b, p in self.plans.items()},
+            "requests": [{
+                "uid": r.uid, "outcome": r.outcome, "bucket": r.bucket,
+                "ladder": r.ladder, "degraded": r.degraded,
+                "retries": r.retries, "latency_s": r.latency_s(),
+                "error": r.error,
+            } for r in self.completed],
+        }

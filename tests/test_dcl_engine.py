@@ -1,0 +1,270 @@
+"""DCL detection serving engine: buckets, deadlines, admission control,
+retry/backoff, and the per-request degradation ladder."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+from repro.models import resnet_dcn as R
+from repro.quant.calibrate import calibrate_resnet_dcn
+from repro.resilience import KernelDispatchFault
+from repro.serve import (DCLServeConfig, DCLServingEngine, OUTCOMES,
+                         resolve_bucket)
+
+BUCKET = 32
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = R.ResNetDCNConfig(
+        stage_sizes=(1, 1, 1, 1), widths=(16, 32, 64, 128), stem_width=8,
+        num_dcn=2, num_classes=4, img_size=BUCKET, offset_bound=2.0,
+        use_kernel=True)
+    params = R.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.RandomState(0)
+    table = calibrate_resnet_dcn(
+        params, cfg, [rng.randn(2, BUCKET, BUCKET, 3).astype(np.float32)])
+    return cfg, params, table
+
+
+@pytest.fixture
+def clean_dispatch():
+    ops.set_dispatch_hook(None)
+    ops.set_degradation(True)
+    ops.reset_fallback_warnings()
+    yield
+    ops.set_dispatch_hook(None)
+    ops.set_degradation(True)
+    ops.reset_fallback_warnings()
+
+
+def _engine(model, **kw):
+    cfg, params, table = model
+    kw.setdefault("buckets", (BUCKET,))
+    kw.setdefault("slots", 2)
+    extra = {k: kw.pop(k) for k in ("clock", "sleep", "step_hook",
+                                    "admit_hook") if k in kw}
+    return DCLServingEngine(params, cfg, DCLServeConfig(**kw),
+                            scale_table=table, **extra)
+
+
+def _img(seed, side=BUCKET):
+    return np.random.RandomState(seed).randn(side, side, 3) \
+        .astype(np.float32)
+
+
+# -- bucket resolution ----------------------------------------------------
+
+def test_resolve_bucket_strict_miss_names_resolution_and_nearest():
+    with pytest.raises(ValueError) as ei:
+        resolve_bucket(96, 96, (64, 128))
+    msg = str(ei.value)
+    assert "96x96" in msg
+    assert "64x64" in msg and "128x128" in msg
+    assert "strict_buckets=False" in msg
+
+
+def test_resolve_bucket_pad_up_and_overflow():
+    assert resolve_bucket(96, 80, (64, 128), strict=False) == 128
+    assert resolve_bucket(64, 64, (64, 128), strict=False) == 64
+    with pytest.raises(ValueError) as ei:
+        resolve_bucket(200, 200, (64, 128), strict=False)
+    assert "exceeds the largest" in str(ei.value)
+
+
+def test_unbucketable_request_is_typed_not_raised(model):
+    eng = _engine(model)
+    r = eng.submit(_img(0, side=20))
+    assert r.outcome == "unbucketable"
+    assert "nearest" in r.error
+    assert eng.counters["unbucketable"] == 1
+    # the engine keeps serving
+    eng.submit(_img(1))
+    done = eng.run_until_drained()
+    assert [q.outcome for q in done] == ["unbucketable", "ok"]
+
+
+def test_strict_buckets_false_pads_up(model):
+    eng = _engine(model, strict_buckets=False)
+    small = _img(2)[:24, :28]
+    r = eng.submit(small)
+    eng.run_until_drained()
+    assert r.outcome == "ok" and r.bucket == BUCKET
+    # padding is explicit zero-fill: bit-exact vs a hand-padded submit
+    padded = np.zeros((BUCKET, BUCKET, 3), np.float32)
+    padded[:24, :28] = small
+    eng2 = _engine(model)
+    r2 = eng2.submit(padded)
+    eng2.run_until_drained()
+    assert np.array_equal(r.result["cls"], r2.result["cls"])
+
+
+# -- datapath correctness -------------------------------------------------
+
+def test_fp32_ref_rung_matches_direct_forward(model):
+    cfg, params, _ = model
+    eng = DCLServingEngine(params, cfg,
+                           DCLServeConfig(buckets=(BUCKET,), slots=2,
+                                          quant="fp32_ref"))
+    r = eng.submit(_img(3))
+    eng.run_until_drained()
+    assert r.outcome == "ok" and r.ladder == "fp32_ref"
+    ref_cfg = dataclasses.replace(cfg, quant="none", use_kernel=False)
+    batch = np.zeros((2, BUCKET, BUCKET, 3), np.float32)
+    batch[0] = _img(3)
+    out, _ = R.forward(params, ref_cfg, jnp.asarray(batch))
+    assert np.array_equal(r.result["cls"], np.asarray(out["cls"])[0])
+
+
+def test_int8_chain_default_serves_and_reports_rung(model):
+    eng = _engine(model)
+    assert eng.scfg.quant == "int8_chain"
+    for i in range(5):
+        eng.submit(_img(10 + i))
+    done = eng.run_until_drained()
+    assert all(r.outcome == "ok" for r in done)
+    assert all(r.ladder == "int8_chain" and not r.degraded for r in done)
+    assert eng.counters == {"ok": 5}
+    tel = eng.telemetry()
+    assert tel["served_per_bucket"] == {str(BUCKET): 5}
+    assert set(tel["plans"][str(BUCKET)]) == {"s2b0", "s3b0"}
+    assert {"hits", "misses", "size"} <= set(tel["plan_cache"])
+    assert all(r["outcome"] in OUTCOMES for r in tel["requests"])
+
+
+# -- deadlines ------------------------------------------------------------
+
+def test_deadline_checked_at_admission_and_in_queue(model):
+    clock = FakeClock()
+    eng = _engine(model, clock=clock)
+    # expired the moment it arrives
+    r0 = eng.submit(_img(20), deadline=-1.0)
+    assert r0.outcome == "deadline_exceeded"
+    # expires while queued behind nothing — swept by the next step
+    r1 = eng.submit(_img(21), deadline=5.0)
+    r2 = eng.submit(_img(22))
+    clock.advance(10.0)
+    eng.run_until_drained()
+    assert r1.outcome == "deadline_exceeded"
+    assert "expired in queue" in r1.error
+    assert r2.outcome == "ok"
+
+
+def test_slow_step_drops_result_past_deadline(model):
+    clock = FakeClock()
+    eng = _engine(model, clock=clock,
+                  step_hook=lambda step, ctx: clock.advance(1.0))
+    r = eng.submit(_img(23), deadline=0.5)
+    eng.run_until_drained()
+    assert r.outcome == "deadline_exceeded"
+    assert "result dropped" in r.error
+    assert r.result is None
+
+
+# -- admission queue ------------------------------------------------------
+
+def test_reject_new_backpressure(model):
+    eng = _engine(model, queue_capacity=2)
+    r0, r1, r2 = (eng.submit(_img(30 + i)) for i in range(3))
+    assert r2.outcome == "rejected" and "capacity 2" in r2.error
+    eng.run_until_drained()
+    assert r0.outcome == "ok" and r1.outcome == "ok"
+
+
+def test_shed_oldest_sacrifices_queue_head(model):
+    eng = _engine(model, queue_capacity=2, shed_policy="shed_oldest")
+    r0, r1, r2 = (eng.submit(_img(40 + i)) for i in range(3))
+    assert r0.outcome == "shed" and "shed by request" in r0.error
+    eng.run_until_drained()
+    assert r1.outcome == "ok" and r2.outcome == "ok"
+    assert eng.counters == {"shed": 1, "ok": 2}
+
+
+# -- retries, backoff, degradation ladder ---------------------------------
+
+def test_transient_fault_is_retried_without_degrading(model, clean_dispatch):
+    calls = {"n": 0}
+
+    def fail_once(ctx):
+        if ctx.get("op") == "deform_conv_chain" and calls["n"] == 0:
+            calls["n"] += 1
+            raise KernelDispatchFault("transient")
+
+    eng = _engine(model, max_retries=2)
+    with ops.dispatch_hook_scope(fail_once):
+        r = eng.submit(_img(50))
+        eng.run_until_drained()
+    assert r.outcome == "ok"
+    assert r.retries == 1 and not r.degraded
+    assert r.ladder == "int8_chain"
+
+
+def test_retry_backoff_is_exponential(model, clean_dispatch):
+    sleeps = []
+
+    def chain_fail(ctx):
+        if ctx.get("op") == "deform_conv_chain":
+            raise KernelDispatchFault("persistent")
+
+    eng = _engine(model, max_retries=2, retry_backoff=0.05,
+                  sleep=sleeps.append)
+    with ops.dispatch_hook_scope(chain_fail):
+        r = eng.submit(_img(51))
+        eng.run_until_drained()
+    # two same-rung replays back off 0.05, 0.10; then the rung drops
+    assert sleeps == [0.05, 0.1]
+    assert r.outcome == "ok" and r.degraded and r.ladder == "int8"
+
+
+def test_ladder_is_per_request_across_two_engines(model, clean_dispatch):
+    """Two engines in one process keep independent ladders and never
+    touch ops' global warn-once fallback state."""
+    def chain_fail(ctx):
+        if ctx.get("op") == "deform_conv_chain":
+            raise KernelDispatchFault("persistent chain fault")
+
+    eng_a = _engine(model, max_retries=0)
+    eng_b = _engine(model, max_retries=0)
+    with ops.dispatch_hook_scope(chain_fail):
+        ra = eng_a.submit(_img(60))
+        rb = eng_b.submit(_img(61))
+        eng_a.run_until_drained()
+        eng_b.run_until_drained()
+    for r in (ra, rb):
+        assert r.outcome == "ok"
+        assert r.degraded and r.ladder == "int8" and r.retries == 1
+    assert eng_a.counters["degraded_batches"] == 1
+    assert eng_b.counters["degraded_batches"] == 1
+    # the global warn-once fallback never fired — degradation was
+    # recorded per request, not per process
+    assert ops._FALLBACK_WARNED == set()
+    # with the fault gone, fresh requests are back on the top rung
+    ra2 = eng_a.submit(_img(62))
+    eng_a.run_until_drained()
+    assert ra2.ladder == "int8_chain" and not ra2.degraded
+
+
+def test_malformed_request_is_typed_not_raised(model):
+    eng = _engine(model)
+    r = eng.submit(np.full((5,), np.nan, np.float32))
+    assert r.outcome == "malformed"
+    assert "(H, W, 3)" in r.error
+    r2 = eng.submit("not an image at all")
+    assert r2.outcome == "malformed"
+    eng.submit(_img(70))
+    done = eng.run_until_drained()
+    assert done[-1].outcome == "ok"

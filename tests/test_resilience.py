@@ -410,3 +410,62 @@ def test_chaos_hooks_one_shot_and_telemetry(tmp_path):
     import json
     rec = json.loads(out.read_text())
     assert rec["note"] == "t" and len(rec["fired"]) == 2
+
+
+def test_dump_telemetry_coerces_numpy_round_trip(tmp_path):
+    """The module-level sink: numpy scalars/arrays come back as plain
+    JSON values after a json.loads round-trip."""
+    import json
+
+    from repro.resilience import dump_telemetry
+
+    record = {"steps": np.int64(7), "loss": np.float32(0.5),
+              "ratios": np.arange(3, dtype=np.float64) / 2,
+              "nested": {"count": np.int32(2)}}
+    path = dump_telemetry(tmp_path / "t.json", record,
+                          extra={"seed": np.uint32(9)})
+    rec = json.loads(path.read_text())
+    assert rec == {"steps": 7, "loss": 0.5, "ratios": [0.0, 0.5, 1.0],
+                   "nested": {"count": 2}, "seed": 9}
+    with pytest.raises(TypeError, match="not JSON-serializable"):
+        dump_telemetry(tmp_path / "bad.json", {"x": object()})
+
+
+def test_serve_fault_kinds_validate_and_serve_seams(tmp_path):
+    """PR 7 serve kinds are legal FaultEvent kinds, and the serve seams
+    behave: slow_step stalls one-shot through the injectable sleep;
+    admission events are consumed in plan order with the storm burst."""
+    from repro.resilience import FAULT_KINDS
+
+    for kind in ("slow_step", "malformed_request", "bucket_miss_storm"):
+        assert kind in FAULT_KINDS
+        FaultEvent(step=0, kind=kind)    # does not raise
+
+    plan = FaultPlan(events=(
+        FaultEvent(step=2, kind="slow_step", mode="0.25"),
+        FaultEvent(step=0, kind="malformed_request"),
+        FaultEvent(step=0, kind="bucket_miss_storm", mode="2")))
+    slept = []
+    hooks = ChaosHooks(plan, sleep=slept.append)
+    hooks.serve_step_hook(1)
+    assert slept == []                   # not its step yet
+    hooks.serve_step_hook(2, {"bucket": 32})
+    hooks.serve_step_hook(2)             # consumed: one-shot
+    assert slept == [0.25]
+
+    class Req:
+        def __init__(self, image):
+            self.image = image
+            self.uid = 0
+    img = np.zeros((32, 32, 3), np.float32)
+    r1 = hooks.admit_hook(Req(img))      # plan order: malformed first
+    assert r1.image.ndim == 1 and np.isnan(r1.image).all()
+    r2 = hooks.admit_hook(Req(img))      # storm head...
+    r3 = hooks.admit_hook(Req(img))      # ...and its burst tail
+    for r in (r2, r3):
+        h, w = r.image.shape[:2]
+        assert (h, w) != (32, 32) and h % 2 == 1 and w % 2 == 1
+    r4 = hooks.admit_hook(Req(img))      # storm exhausted
+    assert r4.image is img
+    assert [f["kind"] for f in hooks.fired] == [
+        "slow_step", "malformed_request", "bucket_miss_storm"]
