@@ -40,7 +40,8 @@ import traceback
 
 
 def write_kernel_json(path: str, recs: list[dict], *, smoke: bool,
-                      precision: str = "both", chain: bool = False) -> None:
+                      precision: str = "both", chain: bool = False,
+                      divergence: dict | None = None) -> None:
     payload = {
         "smoke": smoke,
         "precision": precision,
@@ -50,9 +51,12 @@ def write_kernel_json(path: str, recs: list[dict], *, smoke: bool,
                 "the analytic dataflow model (tile_h=8 convention); "
                 "us_q_*/hbm_bytes_q_* are the int8 zero-copy datapath; "
                 "us_chain_*/hbm_bytes_chain_* are the chained two-layer "
-                "int8 datapath vs per-layer int8",
+                "int8 datapath vs per-layer int8; divergence pairs the "
+                "modeled ratios with the measured ones (repro.obs)",
         "kernels": recs,
     }
+    if divergence is not None:
+        payload["divergence"] = divergence
     with open(path, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
     print(f"bench/json,0,wrote {path} ({len(recs)} kernels)")
@@ -227,6 +231,7 @@ def main(argv=None) -> None:
         kernel_recs.extend(kernel_bench.records(smoke=args.smoke,
                                                 precision=args.precision,
                                                 chain=args.chain))
+        kernel_recs.append(kernel_bench.obs_overhead_record())
         if not args.smoke:
             kernel_recs.extend(kernel_bench.train_step_records())
         return kernel_bench.run(smoke=args.smoke, precision=args.precision,
@@ -259,10 +264,18 @@ def main(argv=None) -> None:
             kernel_recs = kernel_bench.records(smoke=args.smoke,
                                                precision=args.precision,
                                                chain=args.chain)
+        divergence = kernel_bench.divergence_records(kernel_recs)
+        for p in divergence["pairs"]:
+            print(f"bench/divergence_{p['name']},0,"
+                  f"modeled={p['modeled_ratio']:.2f}x;"
+                  f"measured={p['measured_ratio']:.2f}x;"
+                  f"divergence={p['divergence']:.2f}x"
+                  f"{';ANOMALOUS' if p['anomalous'] else ''}")
         os.makedirs(args.out, exist_ok=True)
         write_kernel_json(os.path.join(args.out, "BENCH_kernels.json"),
                           kernel_recs, smoke=args.smoke,
-                          precision=args.precision, chain=args.chain)
+                          precision=args.precision, chain=args.chain,
+                          divergence=divergence)
         failures += gate_zero_copy_regression(kernel_recs)
         failures += gate_chain_traffic(kernel_recs)
     except Exception:  # noqa: BLE001

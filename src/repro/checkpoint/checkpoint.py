@@ -265,28 +265,37 @@ class CheckpointManager:
             raise err
 
     def save(self, step: int, tree: Any) -> None:
-        self.wait()                      # one in-flight write at a time
-        # Materialize on host BEFORE returning so the training loop can
-        # donate/overwrite device buffers safely.
-        host_tree = jax.tree_util.tree_map(
-            lambda x: np.asarray(jax.device_get(x)), tree)
-        if not self.async_write:
-            save_checkpoint(self.directory, step, host_tree, keep=self.keep)
-            return
-
-        def _work():
-            try:
+        from repro.obs.trace import get_tracer
+        # The span covers only the synchronous portion (host
+        # materialization + the handoff) — the async writer thread must
+        # not touch the tracer, whose clock/stack are not thread-safe.
+        with get_tracer().span("ckpt/save", step=step,
+                               sync=not self.async_write):
+            self.wait()                  # one in-flight write at a time
+            # Materialize on host BEFORE returning so the training loop
+            # can donate/overwrite device buffers safely.
+            host_tree = jax.tree_util.tree_map(
+                lambda x: np.asarray(jax.device_get(x)), tree)
+            if not self.async_write:
                 save_checkpoint(self.directory, step, host_tree,
                                 keep=self.keep)
-            except BaseException as e:   # noqa: BLE001
-                self._error = e
+                return
 
-        self._thread = threading.Thread(target=_work, daemon=True)
-        self._thread.start()
+            def _work():
+                try:
+                    save_checkpoint(self.directory, step, host_tree,
+                                    keep=self.keep)
+                except BaseException as e:   # noqa: BLE001
+                    self._error = e
+
+            self._thread = threading.Thread(target=_work, daemon=True)
+            self._thread.start()
 
     def restore(self, tree_like: Any, *, shardings=None, step=None):
-        return restore_checkpoint(self.directory, tree_like,
-                                  step=step, shardings=shardings)
+        from repro.obs.trace import get_tracer
+        with get_tracer().span("ckpt/restore", step=step):
+            return restore_checkpoint(self.directory, tree_like,
+                                      step=step, shardings=shardings)
 
     def latest_step(self):
         return latest_step(self.directory)

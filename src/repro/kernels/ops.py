@@ -141,10 +141,24 @@ def set_dispatch_hook(hook):
     """Install (or clear, with None) the dispatcher hook; returns the
     previous hook.  Called as ``hook(context_dict)`` before every
     bounded kernel dispatch; raising aborts the kernel path and
-    triggers the degradation fallback."""
+    triggers the degradation fallback.
+
+    ISSUE 8: a hook may RETURN a ``finish(out=None, error=None)``
+    callable, which the wrapper invokes after the kernel call resolves
+    (success or failure) — the measurement seam
+    ``repro.obs.DispatchRecorder`` closes its per-dispatch timing
+    through.  A None return (the chaos harness) keeps the old
+    fire-and-forget contract."""
     global _dispatch_hook
     prev, _dispatch_hook = _dispatch_hook, hook
     return prev
+
+
+def get_dispatch_hook():
+    """The currently installed dispatcher hook (None if clear) — lets
+    per-engine instrumentation CHAIN an outer hook (chaos injection)
+    instead of shadowing it."""
+    return _dispatch_hook
 
 
 def set_degradation(enabled: bool):
@@ -190,9 +204,26 @@ def dispatch_hook_scope(hook):
         set_dispatch_hook(prev)
 
 
-def _consult_dispatch_hook(**context) -> None:
+def _consult_dispatch_hook(**context):
+    """Run the installed hook; returns its result (a ``finish``
+    callable, or None).  A raising hook aborts the kernel path."""
     if _dispatch_hook is not None:
-        _dispatch_hook(context)
+        return _dispatch_hook(context)
+    return None
+
+
+def _finish_dispatch(finish, out=None, error=None) -> None:
+    """Close a hook's measurement.  Observability must never break the
+    dispatch: a non-callable ``finish`` is ignored and a raising one is
+    swallowed (debug-logged) — the kernel result/degradation decision
+    was already made."""
+    if not callable(finish):
+        return
+    try:
+        finish(out=out, error=error)
+    except Exception as e:  # noqa: BLE001 — never propagate from obs
+        _log.debug("dispatch finish hook raised: %s: %s",
+                   type(e).__name__, e)
 
 
 def _degraded(key: tuple, err: Exception, fallback):
@@ -601,12 +632,18 @@ def deform_conv(x: Array, offsets: Array, w: Array, *, kernel_size: int = 3,
         # no lower rung to degrade to.
         return _impl()
 
+    finish = None
     try:
-        _consult_dispatch_hook(
+        finish = _consult_dispatch_hook(
             op="deform_conv", precision=precision, dataflow=dataflow,
-            shape=tuple(x.shape), offset_bound=offset_bound)
-        return _impl()
+            shape=tuple(x.shape), offset_bound=offset_bound,
+            kernel_size=kernel_size, stride=stride, dilation=dilation,
+            m=m, cores=cores)
+        out = _impl()
+        _finish_dispatch(finish, out=out)
+        return out
     except Exception as e:  # noqa: BLE001 — bounded-path failure
+        _finish_dispatch(finish, error=e)
         def _fallback():
             if precision == "int8":
                 from repro.quant.qat import fake_quant_dcl_reference
@@ -699,18 +736,23 @@ def deform_conv_chain(x: Array, w: Array, w_offset: Array,
             f"complete before the first bilinear sample consumes them — "
             f"pass tile_c=None (or C) for chained layers")
 
+    finish = None
     try:
-        _consult_dispatch_hook(
+        finish = _consult_dispatch_hook(
             op="deform_conv_chain", emit=emit, shape=tuple(x.shape),
-            offset_bound=offset_bound)
-        return _deform_conv_chain_impl(
+            offset_bound=offset_bound, kernel_size=kernel_size,
+            stride=stride, dilation=dilation, m=w.shape[-1], cores=1)
+        out = _deform_conv_chain_impl(
             x, w, w_offset, b_offset, b_deform, kernel_size=kernel_size,
             stride=stride, dilation=dilation, offset_bound=offset_bound,
             x_scale=x_scale, w_scale=w_scale,
             w_offset_scale=w_offset_scale, y_scale=y_scale,
             tile_h=tile_h, tile_w=tile_w, tile_c=tile_c, tile_m=tile_m,
             emit=emit, interpret=interpret)
+        _finish_dispatch(finish, out=out)
+        return out
     except Exception as e:  # noqa: BLE001 — bounded-path failure
+        _finish_dispatch(finish, error=e)
         def _fallback():
             # One rung down the ladder: the STE chain oracle (same
             # quantization boundaries on the XLA graph), re-quantized

@@ -50,11 +50,11 @@ def serve_detection(cfg: ResNetDCNConfig, args) -> None:
     rng = np.random.RandomState(0)
     table = None
     if args.quant in ("int8_chain", "int8"):
-        t0 = time.time()
+        t0 = time.monotonic()
         table = calibrate_resnet_dcn(
             params, cfg,
             [rng.randn(2, b, b, 3).astype(np.float32) for b in buckets])
-        print(f"calibrated scale table in {time.time() - t0:.1f}s "
+        print(f"calibrated scale table in {time.monotonic() - t0:.1f}s "
               f"({sorted(k for k in table if k != '_meta')})")
 
     engine = DCLServingEngine(
@@ -69,9 +69,9 @@ def serve_detection(cfg: ResNetDCNConfig, args) -> None:
         b = buckets[uid % len(buckets)]
         engine.submit(rng.randn(b, b, 3).astype(np.float32))
 
-    t0 = time.time()
+    t0 = time.monotonic()
     engine.run_until_drained()
-    dt = time.time() - t0
+    dt = time.monotonic() - t0
     ok = [r for r in engine.completed if r.outcome == "ok"]
     lats = sorted(r.latency_s() for r in ok)
     print(f"served {len(ok)}/{len(engine.completed)} requests in "
@@ -137,12 +137,12 @@ def main() -> None:
         engine.submit(Request(uid=uid, prompt=prompt,
                               max_new_tokens=args.max_new_tokens))
 
-    t0 = time.time()
+    t0 = time.monotonic()
     steps = 0
     while engine.queue or any(r is not None for r in engine.active):
         engine.step()
         steps += 1
-    dt = time.time() - t0
+    dt = time.monotonic() - t0
     toks = sum(len(r.output) for r in engine.completed)
     print(f"served {len(engine.completed)} requests / {toks} tokens in "
           f"{steps} batched steps ({dt:.1f}s, {toks / dt:.1f} tok/s "

@@ -1,0 +1,36 @@
+"""Unified observability subsystem (ISSUE 8).
+
+Three pieces, one schema:
+
+* :mod:`repro.obs.trace` — hierarchical span tracer (injectable
+  monotonic clock, nested spans, per-span attributes; zero-cost no-op
+  when disabled; JSONL + Chrome trace-event exports);
+* :mod:`repro.obs.metrics` — labeled counters / gauges / fixed-bucket
+  latency histograms (p50/p99 without sample retention; JSON snapshot
+  + Prometheus text exposition; the shared :func:`dump_telemetry`
+  JSON sink);
+* :mod:`repro.obs.divergence` — modeled-vs-measured reporting: every
+  instrumented bounded-kernel dispatch is paired with its modeled HBM
+  bytes from the Eq. 6/7 traffic model, aggregated per
+  (shape, dtype, cores, quant) key.
+
+The Trainer, the DCL serving engine, the checkpoint manager, and the
+chaos harness all report through here (docs/observability.md);
+``launch.obs_report`` renders the CI artifacts.
+"""
+from .divergence import (DispatchKey, DispatchRecorder, DivergenceTracker,
+                         modeled_dispatch_bytes)
+from .metrics import (DEFAULT_LATENCY_BUCKETS, Counter, Gauge, Histogram,
+                      MetricsRegistry, dump_telemetry, get_registry,
+                      parse_prometheus_text, registry_scope, set_registry)
+from .trace import (NOOP_SPAN, Span, Tracer, get_tracer, set_tracer,
+                    tracer_scope)
+
+__all__ = [
+    "DEFAULT_LATENCY_BUCKETS", "Counter", "DispatchKey",
+    "DispatchRecorder", "DivergenceTracker", "Gauge", "Histogram",
+    "MetricsRegistry", "NOOP_SPAN", "Span", "Tracer", "dump_telemetry",
+    "get_registry", "get_tracer", "modeled_dispatch_bytes",
+    "parse_prometheus_text", "registry_scope", "set_registry",
+    "set_tracer", "tracer_scope",
+]

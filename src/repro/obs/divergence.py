@@ -1,0 +1,267 @@
+"""Modeled-vs-measured divergence reporting (ISSUE 8).
+
+The repo's primary perf signal is the analytic HBM-traffic model of
+``core/tiling`` — but the paper's own argument is that deformable
+convolution's access pattern resists static analysis, and
+``BENCH_kernels.json`` already shows the model diverging from wall
+time (the 128-channel Megacore backward: modeled 1.92x per-core
+traffic drop, measured *slower*).  This module pairs every
+instrumented bounded-kernel dispatch with its modeled bytes and
+aggregates the comparison per ``(op, shape, dtype, cores, quant)``
+key — the measurement substrate the ROADMAP's measured-time autotuner
+will consume.
+
+* :func:`modeled_dispatch_bytes` prices one dispatch from its hook
+  context via the memoized tile chooser + the Eq. 6/7 traffic model.
+* :class:`DivergenceTracker` aggregates measured seconds against the
+  model and emits the report (per-key rows + explicit named
+  modeled-vs-measured ratio pairs, e.g. the 128c Megacore case).
+* :class:`DispatchRecorder` is an ``ops.set_dispatch_hook`` hook that
+  times each dispatch (span + histogram + counter) and feeds the
+  tracker; it chains to a previously installed hook (the chaos
+  harness) so instrumentation composes with fault injection.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from . import metrics as _metrics
+from . import trace as _trace
+
+__all__ = ["DispatchKey", "DispatchRecorder", "DivergenceTracker",
+           "modeled_dispatch_bytes"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DispatchKey:
+    """Aggregation key of one bounded-kernel dispatch population."""
+    op: str
+    shape: tuple            # (N, H, W, C) of the dispatched input
+    dtype: str              # band element dtype: fp32 | int8
+    cores: int
+    quant: str              # none | int8 | int8_chain
+
+    def label(self) -> str:
+        n, h, w, c = self.shape
+        return (f"{self.op}[{n}x{h}x{w}x{c}]"
+                f"/{self.quant}/cores={self.cores}")
+
+
+def key_from_context(context: dict) -> DispatchKey | None:
+    """Build the aggregation key from an ``ops`` dispatch-hook context
+    dict; None when the context predates the ISSUE-8 fields."""
+    op = context.get("op")
+    shape = context.get("shape")
+    if op is None or shape is None or len(shape) != 4:
+        return None
+    if op == "deform_conv_chain":
+        dtype, quant = "int8", "int8_chain"
+    else:
+        precision = context.get("precision", "fp32")
+        dtype = "int8" if precision == "int8" else "fp32"
+        quant = "int8" if precision == "int8" else "none"
+    return DispatchKey(op=op, shape=tuple(int(s) for s in shape),
+                       dtype=dtype, cores=int(context.get("cores", 1)),
+                       quant=quant)
+
+
+def modeled_dispatch_bytes(context: dict) -> int | None:
+    """Modeled whole-layer HBM bytes of the dispatch described by an
+    ``ops`` hook context, at the tiles the dispatcher itself would
+    resolve (the memoized Sec. 3.2 chooser).  None when the context
+    lacks the geometry fields or the model cannot price the call —
+    observability never raises into the dispatch path.
+    """
+    try:
+        from repro.core.tiling import (LayerShape, TileConfig,
+                                       dcl_chain_hbm_bytes,
+                                       dcl_total_hbm_bytes)
+        from repro.kernels.plan import resolve_tiles
+
+        op = context["op"]
+        n, h, w, c = context["shape"]
+        m = context["m"]
+        ks = context.get("kernel_size", 3)
+        stride = context.get("stride", 1)
+        dilation = context.get("dilation", 1)
+        bound = context["offset_bound"]
+        shape = LayerShape(h=h, w=w, c_in=c, c_out=m, kernel_size=ks,
+                           stride=stride, offset_bound=bound)
+        if op == "deform_conv_chain":
+            th, tw, tc, tm = resolve_tiles(
+                h, w, c, m, kernel_size=ks, stride=stride,
+                dilation=dilation, offset_bound=bound, tile_h=None,
+                tile_w=None, tile_c=c, tile_m=None,
+                objective="forward", dtype="int8")
+            return dcl_chain_hbm_bytes(
+                shape, TileConfig(t_h=th, t_w=tw, t_n=tc, t_m=tm),
+                layers=1, batch=n, dilation=dilation, chained=True)
+        precision = context.get("precision", "fp32")
+        if precision == "int8":
+            th, tw, tc, tm = resolve_tiles(
+                h, w, c, m, kernel_size=ks, stride=stride,
+                dilation=dilation, offset_bound=bound, tile_h=None,
+                tile_w=None, tile_c=None, tile_m=None,
+                objective="forward", dtype="int8")
+            return dcl_total_hbm_bytes(
+                shape, TileConfig(t_h=th, t_w=tw, t_n=tc, t_m=tm),
+                batch=n, dilation=dilation, bytes_per_elem=1,
+                offset_bytes_per_elem=4, out_bytes_per_elem=4)
+        th, tw, tc, tm = resolve_tiles(
+            h, w, c, m, kernel_size=ks, stride=stride,
+            dilation=dilation, offset_bound=bound, tile_h=None,
+            tile_w=None, tile_c=None, tile_m=None,
+            objective="training", cores=context.get("cores", 1))
+        return dcl_total_hbm_bytes(
+            shape, TileConfig(t_h=th, t_w=tw, t_n=tc, t_m=tm),
+            batch=n, dilation=dilation, bytes_per_elem=4)
+    except Exception:  # noqa: BLE001 — pricing failure is not a fault
+        return None
+
+
+class DivergenceTracker:
+    """Aggregate (modeled bytes, measured seconds) per dispatch key and
+    emit the divergence report.
+
+    Two record families:
+
+    * per-key aggregates from :meth:`observe` — n, best/mean measured
+      seconds, modeled bytes, the implied bandwidth each dispatch
+      would need for the model to explain the wall time;
+    * named ratio pairs from :meth:`record_pair` — a modeled
+      improvement ratio vs the measured one for a specific comparison
+      (the bench uses this for zero-copy-vs-banded and the known-bad
+      128c Megacore backward case), flagged ``anomalous`` when the
+      model predicts a win the measurement inverts.
+    """
+
+    def __init__(self):
+        self._agg: dict[DispatchKey, dict] = {}
+        self.pairs: list[dict] = []
+
+    def observe(self, key: DispatchKey, modeled_bytes: int | None,
+                measured_s: float) -> None:
+        a = self._agg.get(key)
+        if a is None:
+            a = self._agg[key] = {
+                "n": 0, "sum_s": 0.0, "min_s": float("inf"),
+                "modeled_bytes": modeled_bytes}
+        a["n"] += 1
+        a["sum_s"] += measured_s
+        a["min_s"] = min(a["min_s"], measured_s)
+        if a["modeled_bytes"] is None:
+            a["modeled_bytes"] = modeled_bytes
+
+    def record_pair(self, name: str, *, modeled_ratio: float,
+                    measured_ratio: float, note: str = "") -> dict:
+        rec = {
+            "name": name,
+            "modeled_ratio": modeled_ratio,
+            "measured_ratio": measured_ratio,
+            "divergence": (modeled_ratio / measured_ratio
+                           if measured_ratio else float("inf")),
+            # the model claims an improvement the measurement inverts —
+            # the 128c Megacore backward signature
+            "anomalous": bool(modeled_ratio > 1.0 > measured_ratio),
+        }
+        if note:
+            rec["note"] = note
+        self.pairs.append(rec)
+        return rec
+
+    def report(self) -> dict:
+        rows = []
+        for key, a in self._agg.items():
+            mb = a["modeled_bytes"]
+            best = a["min_s"]
+            rows.append({
+                "key": key.label(), "op": key.op,
+                "shape": list(key.shape), "dtype": key.dtype,
+                "cores": key.cores, "quant": key.quant,
+                "n": a["n"], "modeled_bytes": mb,
+                "best_s": best, "mean_s": a["sum_s"] / max(a["n"], 1),
+                "implied_gbps": (mb / best / 1e9
+                                 if mb and best > 0 else None),
+            })
+        rows.sort(key=lambda r: r["key"])
+        return {"dispatches": rows, "pairs": list(self.pairs)}
+
+
+class DispatchRecorder:
+    """``ops`` dispatch hook: time every bounded dispatch into the
+    metrics registry (``kernel_dispatch_seconds`` histogram +
+    ``kernel_dispatch_total`` counter), open a ``kernel/dispatch``
+    span, and feed the divergence tracker.
+
+    The hook protocol (ISSUE 8): a dispatch hook may return a
+    ``finish(out=None, error=None)`` callable, which ``ops`` invokes
+    after the kernel call (success or failure) — that is where the
+    measurement closes.  ``next_hook`` chains a previously installed
+    hook (the chaos harness's ``dispatch_hook``) and runs FIRST, so an
+    injected fault still aborts the kernel path before any timing
+    starts.
+
+    ``block=True`` calls ``jax.block_until_ready`` on the output so the
+    measured time covers the dispatched computation, not just trace
+    time.  ``tracer=None`` resolves the process-global tracer per call
+    (so ``tracer_scope`` in tests is honored); the default tracer is
+    disabled, making the span a shared no-op.
+    """
+
+    def __init__(self, *, registry: _metrics.MetricsRegistry | None = None,
+                 tracer: _trace.Tracer | None = None,
+                 tracker: DivergenceTracker | None = None,
+                 next_hook=None, clock=time.monotonic, block: bool = True):
+        self.registry = registry if registry is not None \
+            else _metrics.get_registry()
+        self._tracer = tracer
+        self.tracker = tracker
+        self.next_hook = next_hook
+        self.clock = clock
+        self.block = block
+        self._hist = self.registry.histogram(
+            "kernel_dispatch_seconds",
+            "wall time of one bounded-kernel dispatch (blocked on the "
+            "output)")
+        self._total = self.registry.counter(
+            "kernel_dispatch_total", "bounded-kernel dispatches by outcome")
+        self._modeled_cache: dict[DispatchKey, int | None] = {}
+
+    def __call__(self, context: dict):
+        if self.next_hook is not None:
+            self.next_hook(context)     # chaos first: a raise aborts here
+        key = key_from_context(context)
+        quant = key.quant if key is not None else str(
+            context.get("precision", context.get("emit", "?")))
+        op = str(context.get("op", "?"))
+        tracer = self._tracer if self._tracer is not None \
+            else _trace.get_tracer()
+        span = tracer.span("kernel/dispatch", op=op, quant=quant,
+                           shape=context.get("shape"),
+                           cores=context.get("cores", 1)).start()
+        t0 = self.clock()
+
+        def finish(out=None, error=None) -> None:
+            if out is not None and self.block:
+                try:
+                    import jax
+                    jax.block_until_ready(out)
+                except Exception:  # noqa: BLE001
+                    pass
+            dt = self.clock() - t0
+            outcome = "ok" if error is None else "error"
+            span.set_attr(outcome=outcome)
+            if error is not None:
+                span.set_attr(error=f"{type(error).__name__}: {error}")
+            span.end()
+            self._hist.observe(dt, op=op, quant=quant)
+            self._total.inc(op=op, quant=quant, outcome=outcome)
+            if self.tracker is not None and key is not None \
+                    and error is None:
+                if key not in self._modeled_cache:
+                    self._modeled_cache[key] = modeled_dispatch_bytes(
+                        context)
+                self.tracker.observe(key, self._modeled_cache[key], dt)
+
+        return finish

@@ -1,0 +1,214 @@
+"""Hierarchical span tracer (ISSUE 8) — the timing substrate every
+subsystem reports through.
+
+A :class:`Tracer` hands out :class:`Span` context managers; spans nest
+via an explicit stack (the enclosing open span becomes the parent), so
+a trace of ``train/step`` > ``train/compute`` > ``kernel/dispatch``
+reconstructs the call tree without any thread-local magic.  The clock
+is injectable (``clock=``, monotonic by default) so tests drive spans
+on a fake clock and assert exact durations.
+
+Disabled tracers are zero-cost: ``span()`` returns one shared no-op
+singleton (no allocation, no clock read, nothing retained), which is
+what lets the dispatcher and serving engine stay instrumented
+unconditionally — the default process-global tracer is disabled.
+
+Exports: JSONL (one record per span/event, the CI artifact format) and
+Chrome trace-event JSON (``ph: "X"`` duration + ``ph: "i"`` instant
+events, microsecond timestamps — loadable in Perfetto / chrome://tracing).
+"""
+from __future__ import annotations
+
+import contextlib
+import itertools
+import json
+import pathlib
+import time
+
+__all__ = ["NOOP_SPAN", "Span", "Tracer", "get_tracer", "set_tracer",
+           "tracer_scope"]
+
+
+class Span:
+    """One timed region.  Use as a context manager (``with tracer.span``)
+    or drive manually: ``sp = tracer.span(...).start(); ...; sp.end()``.
+    """
+
+    __slots__ = ("_tracer", "name", "span_id", "parent_id", "t0", "t1",
+                 "attrs")
+
+    def __init__(self, tracer: "Tracer", name: str, attrs: dict):
+        self._tracer = tracer
+        self.name = name
+        self.attrs = attrs
+        self.span_id = next(tracer._ids)
+        self.parent_id: int | None = None
+        self.t0: float | None = None
+        self.t1: float | None = None
+
+    def set_attr(self, **attrs) -> "Span":
+        self.attrs.update(attrs)
+        return self
+
+    def start(self) -> "Span":
+        tr = self._tracer
+        self.parent_id = tr._stack[-1].span_id if tr._stack else None
+        tr._stack.append(self)
+        self.t0 = tr.clock()
+        return self
+
+    def end(self) -> None:
+        if self.t1 is not None or self.t0 is None:
+            return                       # never started / already ended
+        tr = self._tracer
+        self.t1 = tr.clock()
+        if tr._stack and tr._stack[-1] is self:
+            tr._stack.pop()
+        elif self in tr._stack:          # out-of-order end: drop anyway
+            tr._stack.remove(self)
+        tr.spans.append(self)
+
+    @property
+    def duration(self) -> float:
+        if self.t0 is None or self.t1 is None:
+            return float("nan")
+        return self.t1 - self.t0
+
+    def __enter__(self) -> "Span":
+        return self.start()
+
+    def __exit__(self, *exc) -> bool:
+        self.end()
+        return False
+
+    def record(self) -> dict:
+        return {"type": "span", "name": self.name, "span_id": self.span_id,
+                "parent_id": self.parent_id, "t0": self.t0, "t1": self.t1,
+                "dur_s": self.duration, "attrs": self.attrs}
+
+
+class _NoopSpan:
+    """Shared do-nothing span — the disabled-tracer fast path.  One
+    instance serves every call site; nothing is allocated or timed."""
+
+    __slots__ = ()
+    name = "noop"
+    duration = float("nan")
+
+    def set_attr(self, **attrs) -> "_NoopSpan":
+        return self
+
+    def start(self) -> "_NoopSpan":
+        return self
+
+    def end(self) -> None:
+        pass
+
+    def __enter__(self) -> "_NoopSpan":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        return False
+
+
+NOOP_SPAN = _NoopSpan()
+
+
+class Tracer:
+    """See module docstring.  ``spans`` holds finished spans in end
+    order; ``events`` holds instant events in emission order."""
+
+    def __init__(self, *, clock=time.monotonic, enabled: bool = True):
+        self.clock = clock
+        self.enabled = enabled
+        self.spans: list[Span] = []
+        self.events: list[dict] = []
+        self._stack: list[Span] = []
+        self._ids = itertools.count(1)
+
+    # -- recording -----------------------------------------------------
+    def span(self, name: str, **attrs):
+        """A new child span of the innermost open span (entered lazily:
+        the parent is resolved at ``start()``/``__enter__`` time)."""
+        if not self.enabled:
+            return NOOP_SPAN
+        return Span(self, name, attrs)
+
+    def event(self, name: str, **attrs) -> None:
+        """An instant event at the current clock, parented like a span."""
+        if not self.enabled:
+            return
+        self.events.append({
+            "type": "event", "name": name, "ts": self.clock(),
+            "parent_id": self._stack[-1].span_id if self._stack else None,
+            "attrs": attrs})
+
+    def clear(self) -> None:
+        self.spans.clear()
+        self.events.clear()
+        self._stack.clear()
+
+    # -- export --------------------------------------------------------
+    def records(self) -> list[dict]:
+        """All finished spans + events as plain dicts (JSONL payload)."""
+        return [s.record() for s in self.spans] + list(self.events)
+
+    def export_jsonl(self, path) -> pathlib.Path:
+        p = pathlib.Path(path)
+        p.write_text("".join(json.dumps(r, default=str) + "\n"
+                             for r in self.records()))
+        return p
+
+    def to_chrome(self) -> dict:
+        """Chrome trace-event JSON (Perfetto-loadable): ``ph: "X"``
+        complete events for spans, ``ph: "i"`` instants for events,
+        timestamps/durations in microseconds."""
+        out = []
+        for s in self.spans:
+            out.append({"name": s.name, "ph": "X", "pid": 0, "tid": 0,
+                        "ts": (s.t0 or 0.0) * 1e6,
+                        "dur": max(s.duration, 0.0) * 1e6,
+                        "args": {str(k): str(v)
+                                 for k, v in s.attrs.items()}})
+        for e in self.events:
+            out.append({"name": e["name"], "ph": "i", "s": "t",
+                        "pid": 0, "tid": 0, "ts": e["ts"] * 1e6,
+                        "args": {str(k): str(v)
+                                 for k, v in e["attrs"].items()}})
+        return {"traceEvents": out, "displayTimeUnit": "ms"}
+
+    def export_chrome(self, path) -> pathlib.Path:
+        p = pathlib.Path(path)
+        p.write_text(json.dumps(self.to_chrome()))
+        return p
+
+
+# ---------------------------------------------------------------------------
+# Process-global default tracer — DISABLED until something opts in
+# (tests via tracer_scope, launchers via --trace).  Instrumented code
+# paths call get_tracer() at use time so a scoped tracer is honored
+# even by objects constructed earlier.
+# ---------------------------------------------------------------------------
+
+_tracer = Tracer(enabled=False)
+
+
+def get_tracer() -> Tracer:
+    return _tracer
+
+
+def set_tracer(tracer: Tracer) -> Tracer:
+    """Install the process-global tracer; returns the previous one."""
+    global _tracer
+    prev, _tracer = _tracer, tracer
+    return prev
+
+
+@contextlib.contextmanager
+def tracer_scope(tracer: Tracer):
+    """Scoped :func:`set_tracer` with guaranteed restore."""
+    prev = set_tracer(tracer)
+    try:
+        yield tracer
+    finally:
+        set_tracer(prev)

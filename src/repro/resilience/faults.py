@@ -45,7 +45,6 @@ schedule from one integer seed.
 from __future__ import annotations
 
 import dataclasses
-import json
 import pathlib
 import time
 from typing import Any, Sequence
@@ -149,37 +148,12 @@ class FaultPlan:
 
 
 # ---------------------------------------------------------------------------
-# Telemetry
+# Telemetry — the JSON sink moved to ``repro.obs.metrics`` (ISSUE 8:
+# one exporter for every subsystem); re-exported here because the
+# chaos tests and older callers import it from ``repro.resilience``.
 # ---------------------------------------------------------------------------
 
-def _json_default(o):
-    """Coerce the numpy scalars/arrays telemetry records accumulate."""
-    if isinstance(o, np.integer):
-        return int(o)
-    if isinstance(o, np.floating):
-        return float(o)
-    if isinstance(o, np.ndarray):
-        return o.tolist()
-    raise TypeError(f"not JSON-serializable: {type(o).__name__}")
-
-
-def dump_telemetry(path, record: dict, extra: dict | None = None
-                   ) -> pathlib.Path:
-    """Write a telemetry record (plus optional ``extra`` keys) as JSON.
-
-    The shared sink for every robustness artifact — chaos-run
-    injections (:meth:`ChaosHooks.dump_telemetry`), serving-engine
-    per-request records (``DCLServingEngine.telemetry``), trainer
-    health counters.  Numpy scalars and arrays are coerced to plain
-    JSON so a round-trip through :func:`json.loads` reproduces the
-    record exactly.  Returns the written path.
-    """
-    rec = dict(record)
-    if extra:
-        rec.update(extra)
-    p = pathlib.Path(path)
-    p.write_text(json.dumps(rec, indent=2, default=_json_default))
-    return p
+from repro.obs.metrics import _json_default, dump_telemetry  # noqa: E402,F401
 
 
 # ---------------------------------------------------------------------------
@@ -280,6 +254,13 @@ class ChaosHooks:
         self._consumed.add(i)
         self.fired.append({"step": event.step, "kind": event.kind,
                            "mode": event.mode, **detail})
+        # ISSUE 8: every injection is also an instant event on the
+        # process-global tracer (resolved at fire time so tests'
+        # tracer_scope sees it) — chaos runs leave their faults in the
+        # same trace the spans land in.
+        from repro.obs.trace import get_tracer
+        get_tracer().event(f"fault/{event.kind}", step=event.step,
+                           mode=event.mode)
 
     # -- Trainer seams -------------------------------------------------
     def fault_hook(self, step: int) -> None:

@@ -50,6 +50,9 @@ import numpy as np
 
 from repro.kernels import ops, plan
 from repro.models import resnet_dcn as R
+from repro.obs import (DispatchRecorder, DivergenceTracker, MetricsRegistry,
+                       Tracer)
+from repro.obs import trace as _trace
 
 from .admission import (AdmissionConfig, AdmissionQueue, DetRequest,
                         MalformedRequest, resolve_bucket)
@@ -117,13 +120,43 @@ class DCLServingEngine:
                  clock: Callable[[], float] = time.monotonic,
                  sleep: Callable[[float], None] = time.sleep,
                  step_hook: Callable[[int, dict], None] | None = None,
-                 admit_hook: Callable[[DetRequest], DetRequest] | None = None):
+                 admit_hook: Callable[[DetRequest], DetRequest] | None = None,
+                 registry: MetricsRegistry | None = None,
+                 tracer: Tracer | None = None):
         self.params = params
         self.scfg = serve_cfg
         self.clock = clock
         self._sleep = sleep
         self.step_hook = step_hook
         self.admit_hook = admit_hook
+
+        # Observability (ISSUE 8).  Each engine defaults to its OWN
+        # registry — two engines in one process never share counters,
+        # matching the per-engine degradation-ladder isolation.  The
+        # tracer defaults to the process-global one resolved at use
+        # time (disabled unless a test/launcher opts in).
+        self.metrics = registry if registry is not None else MetricsRegistry()
+        self._tracer = tracer
+        self.divergence = DivergenceTracker()
+        m = self.metrics
+        self._c_requests = m.counter(
+            "serve_requests_total", "retired requests by outcome and bucket")
+        self._c_retries = m.counter(
+            "serve_retries_total", "same-rung batch replays")
+        self._c_degraded = m.counter(
+            "serve_degraded_batches_total", "batches dropped one ladder rung")
+        self._c_ladder = m.counter(
+            "serve_ladder_total", "requests served per datapath rung")
+        self._c_steps = m.counter(
+            "serve_steps_total", "engine serving steps")
+        self._g_queue = m.gauge(
+            "serve_queue_depth", "queued requests after the last step")
+        self._h_queue_wait = m.histogram(
+            "serve_queue_wait_seconds",
+            "submit-to-batch-start wait per bucket")
+        self._h_latency = m.histogram(
+            "serve_latency_seconds",
+            "submit-to-retire latency per bucket and outcome")
 
         if isinstance(scale_table, str):
             from repro.quant.calibrate import load_scale_table
@@ -172,9 +205,32 @@ class DCLServingEngine:
             capacity=serve_cfg.queue_capacity,
             policy=serve_cfg.shed_policy))
         self.completed: list[DetRequest] = []
-        self.counters: dict[str, int] = {}
         self.steps = 0
         self._uid = itertools.count()
+
+    @property
+    def _tr(self) -> Tracer:
+        return self._tracer if self._tracer is not None \
+            else _trace.get_tracer()
+
+    @property
+    def counters(self) -> dict[str, int]:
+        """Legacy counters view, now rendered FROM the metrics registry
+        (ISSUE 8): ``{outcome: count}`` summed over buckets, plus
+        ``retries`` / ``degraded_batches`` when nonzero — the exact
+        shape the pre-obs ad-hoc dict had, so dict-equality callers
+        keep working."""
+        out: dict[str, int] = {}
+        for key, v in self._c_requests.items():
+            outcome = dict(key)["outcome"]
+            out[outcome] = out.get(outcome, 0) + int(v)
+        retries = int(self._c_retries.value())
+        if retries:
+            out["retries"] = retries
+        degraded = int(self._c_degraded.value())
+        if degraded:
+            out["degraded_batches"] = degraded
+        return out
 
     # -- admission -----------------------------------------------------
     def submit(self, image, *, deadline: float | None = None,
@@ -191,6 +247,7 @@ class DCLServingEngine:
             uid=next(self._uid) if uid is None else uid, image=image,
             deadline=None if deadline is None else now + deadline,
             submitted_at=now)
+        self._tr.event("serve/admit", uid=req.uid)
         if self.admit_hook is not None:
             req = self.admit_hook(req) or req
 
@@ -227,7 +284,12 @@ class DCLServingEngine:
         req.done = True
         req.completed_at = self.clock()
         self.completed.append(req)
-        self.counters[req.outcome] = self.counters.get(req.outcome, 0) + 1
+        bucket = str(req.bucket)
+        self._c_requests.inc(outcome=req.outcome, bucket=bucket)
+        lat = req.latency_s()
+        if lat is not None:
+            self._h_latency.observe(lat, bucket=bucket, outcome=req.outcome)
+        self._tr.event("serve/retire", uid=req.uid, outcome=req.outcome)
         return req
 
     # -- serving -------------------------------------------------------
@@ -239,13 +301,22 @@ class DCLServingEngine:
             self._retire(req)
         bucket = self.queue.head_bucket()
         if bucket is None:
+            self._g_queue.set(len(self.queue))
             return len(self.completed) - before
         batch = self.queue.take(bucket, self.scfg.slots)
-        if self.step_hook is not None:
-            self.step_hook(self.steps,
-                           {"bucket": bucket, "size": len(batch)})
-        self._run_batch(bucket, batch)
+        with self._tr.span("serve/step", step=self.steps, bucket=bucket,
+                           size=len(batch)):
+            now = self.clock()
+            for r in batch:
+                self._h_queue_wait.observe(now - r.submitted_at,
+                                           bucket=str(bucket))
+            if self.step_hook is not None:
+                self.step_hook(self.steps,
+                               {"bucket": bucket, "size": len(batch)})
+            self._run_batch(bucket, batch)
         self.steps += 1
+        self._c_steps.inc()
+        self._g_queue.set(len(self.queue))
         return len(self.completed) - before
 
     def _batch_array(self, bucket: int, reqs: list[DetRequest]) -> Any:
@@ -257,7 +328,15 @@ class DCLServingEngine:
 
     def _forward(self, rung: str, x):
         cfg = self._cfgs[rung]
-        with ops.degradation_scope(False):
+        # Instrument every bounded dispatch in this forward: the
+        # recorder chains to whatever hook is already installed (the
+        # chaos harness), so injected faults still fire FIRST and abort
+        # before any timing starts.
+        rec = DispatchRecorder(
+            registry=self.metrics, tracer=self._tracer,
+            tracker=self.divergence, next_hook=ops.get_dispatch_hook(),
+            clock=self.clock)
+        with ops.dispatch_hook_scope(rec), ops.degradation_scope(False):
             out, _ = R.forward(self.params, cfg, x,
                                quant_scales=self.scale_table)
         return out
@@ -271,8 +350,9 @@ class DCLServingEngine:
                 out = self._forward(LADDER[rung_idx], x)
                 break
             except Exception as e:          # noqa: BLE001 — typed below
-                self.counters["retries"] = \
-                    self.counters.get("retries", 0) + 1
+                self._c_retries.inc()
+                self._tr.event("serve/retry", bucket=bucket,
+                               rung=LADDER[rung_idx], attempt=attempt + 1)
                 for r in reqs:
                     r.retries += 1
                 attempt += 1
@@ -288,8 +368,9 @@ class DCLServingEngine:
                     attempt = 0
                     for r in reqs:
                         r.degraded = True
-                    self.counters["degraded_batches"] = \
-                        self.counters.get("degraded_batches", 0) + 1
+                    self._c_degraded.inc()
+                    self._tr.event("serve/degrade", bucket=bucket,
+                                   rung=LADDER[rung_idx])
                     continue
                 for r in reqs:              # bottom rung failed: typed
                     self._retire(r, "failed",
@@ -300,6 +381,7 @@ class DCLServingEngine:
         box = np.asarray(out["box"])
         for i, r in enumerate(reqs):
             r.ladder = LADDER[rung_idx]
+            self._c_ladder.inc(rung=r.ladder)
             if r.deadline is not None and now > r.deadline:
                 self._retire(r, "deadline_exceeded",
                              f"completed {now - r.deadline:.3f}s past "
@@ -346,4 +428,6 @@ class DCLServingEngine:
                 "retries": r.retries, "latency_s": r.latency_s(),
                 "error": r.error,
             } for r in self.completed],
+            "metrics": self.metrics.snapshot(),
+            "divergence": self.divergence.report(),
         }

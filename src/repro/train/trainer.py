@@ -46,6 +46,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.checkpoint import CheckpointManager
 from repro.distributed.compression import ef_compress_grads, init_ef_state
 from repro.distributed.sharding import named_sharding, use_rules
+from repro.obs import MetricsRegistry, Tracer
+from repro.obs import trace as _trace
 from repro.optim import Optimizer, opt_state_specs
 from repro.optim.optimizers import global_norm
 
@@ -81,17 +83,37 @@ class Trainer:
                  param_specs: Any, batch_fn: Callable[[int], Any],
                  config: TrainerConfig,
                  fault_hook: Callable[[int], None] | None = None,
-                 batch_hook: Callable[[int, Any], Any] | None = None):
+                 batch_hook: Callable[[int, Any], Any] | None = None,
+                 clock: Callable[[], float] = time.monotonic,
+                 sleep: Callable[[float], None] | None = None,
+                 registry: MetricsRegistry | None = None,
+                 tracer: Tracer | None = None):
         self.cfg = config
         self.mesh = mesh
         self.opt = optimizer
         self.batch_fn = batch_fn
         self.fault_hook = fault_hook
         self.batch_hook = batch_hook
+        self.clock = clock
+        self._sleep = sleep
         self.ckpt = CheckpointManager(config.ckpt_dir, keep=config.keep)
         self.history: list[dict] = []
-        self.telemetry = {"skipped": 0, "recovered": 0, "retries": 0,
-                          "preempted": False}
+        # Observability (ISSUE 8): health telemetry lives in a metrics
+        # registry; ``Trainer.telemetry`` is a read-only view with the
+        # pre-obs dict shape.  Per-trainer registry by default.
+        self.metrics = registry if registry is not None else MetricsRegistry()
+        self._tracer = tracer
+        m = self.metrics
+        self._c_skipped = m.counter(
+            "train_steps_skipped_total", "non-finite steps skipped")
+        self._c_recovered = m.counter(
+            "train_recovered_total", "restore-and-replay recoveries")
+        self._c_retries = m.counter(
+            "train_retries_total", "step failures retried")
+        self._g_preempted = m.gauge(
+            "train_preempted", "1 after a SIGTERM save-and-exit")
+        self._h_step = m.histogram(
+            "train_step_seconds", "wall time per completed training step")
         self._preempted = False
         # Wall time of every completed step (not just logged ones) —
         # feeds the §Training-throughput comparison of EXPERIMENTS.md
@@ -107,6 +129,20 @@ class Trainer:
                              if config.grad_compression == "int8_ef" else None)
         self.step = 0
         self._build_step(loss_fn)
+
+    @property
+    def _tr(self) -> Tracer:
+        return self._tracer if self._tracer is not None \
+            else _trace.get_tracer()
+
+    @property
+    def telemetry(self) -> dict:
+        """Health telemetry view, rendered FROM the metrics registry —
+        the exact dict the pre-obs trainer accumulated by hand."""
+        return {"skipped": int(self._c_skipped.value()),
+                "recovered": int(self._c_recovered.value()),
+                "retries": int(self._c_retries.value()),
+                "preempted": bool(self._g_preempted.value())}
 
     def _named(self, spec_tree):
         return jax.tree_util.tree_map(
@@ -176,7 +212,8 @@ class Trainer:
         return self._named(specs)
 
     def save(self):
-        self.ckpt.save(self.step, self._bundle())
+        with self._tr.span("train/checkpoint", step=self.step):
+            self.ckpt.save(self.step, self._bundle())
 
     def try_resume(self) -> bool:
         last = self.ckpt.latest_step()
@@ -250,7 +287,8 @@ class Trainer:
     def _preempt_exit(self):
         self.save()
         self.ckpt.wait()
-        self.telemetry["preempted"] = True
+        self._g_preempted.set(1)
+        self._tr.event("train/preempt", step=self.step)
         self.history.append(
             {"step": self.step,
              "event": f"preempted: checkpoint saved at step {self.step}, "
@@ -276,18 +314,29 @@ class Trainer:
                     try:
                         if self.fault_hook is not None:
                             self.fault_hook(self.step)
-                        batch = self._device_batch(self.step)
-                        t0 = time.time()
-                        (self.params, self.opt_state, self.ef_state, loss,
-                         grad_norm, finite) = self._jit_step(
-                            self.params, self.opt_state, self.ef_state,
-                            jnp.asarray(self.step), batch)
-                        loss = float(loss)
-                        grad_norm = float(grad_norm)
-                        dt = time.time() - t0
+                        with self._tr.span("train/step",
+                                           step=self.step) as step_span:
+                            with self._tr.span("train/data",
+                                               step=self.step):
+                                batch = self._device_batch(self.step)
+                            t0 = self.clock()
+                            with self._tr.span("train/compute",
+                                               step=self.step):
+                                (self.params, self.opt_state, self.ef_state,
+                                 loss, grad_norm, finite) = self._jit_step(
+                                    self.params, self.opt_state,
+                                    self.ef_state, jnp.asarray(self.step),
+                                    batch)
+                                # float() blocks on the device values, so
+                                # dt covers the computation, not dispatch.
+                                loss = float(loss)
+                                grad_norm = float(grad_norm)
+                            dt = self.clock() - t0
+                            step_span.set_attr(finite=bool(finite))
                         if bool(finite):
                             skips = 0
                             self.step_seconds.append(dt)
+                            self._h_step.observe(dt)
                             if self.step % cfg.log_every == 0:
                                 self.history.append(
                                     {"step": self.step, "loss": loss,
@@ -295,7 +344,9 @@ class Trainer:
                                      "sec": round(dt, 4)})
                         else:
                             skips += 1
-                            self.telemetry["skipped"] += 1
+                            self._c_skipped.inc()
+                            self._tr.event("train/skip", step=self.step,
+                                           loss=loss, grad_norm=grad_norm)
                             self.history.append(
                                 {"step": self.step,
                                  "event": f"skipped: non-finite step "
@@ -320,18 +371,25 @@ class Trainer:
                         raise
                     except Exception as e:  # noqa: BLE001 — node failures
                         retries += 1
-                        self.telemetry["retries"] += 1
+                        self._c_retries.inc()
+                        self._tr.event("train/retry", step=self.step,
+                                       attempt=retries,
+                                       error=f"{type(e).__name__}: {e}")
                         if retries > cfg.max_retries:
                             raise
                         if cfg.retry_backoff > 0:
-                            time.sleep(
+                            # resolve time.sleep at call time when not
+                            # injected, so monkeypatching the module's
+                            # time.sleep still intercepts the backoff
+                            (self._sleep or time.sleep)(
                                 cfg.retry_backoff * (2 ** (retries - 1)))
                         # Restore-and-replay: stateless data pipeline
                         # makes the retried steps bit-exact.
                         if not self.try_resume():
                             # no checkpoint yet: nothing to restart from
                             raise
-                        self.telemetry["recovered"] += 1
+                        self._c_recovered.inc()
+                        self._tr.event("train/restore", step=self.step)
                         self.history.append(
                             {"step": self.step, "event": f"recovered: {e}"})
                 if self._preempted:

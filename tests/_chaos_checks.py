@@ -110,11 +110,21 @@ def run_checks() -> dict:
         kinds=("nonfinite_grads", "ckpt_corrupt", "step_crash",
                "data_hiccup"),
         min_step=2)
+    # The chaos run is traced (ISSUE 8): fault firings land as fault/*
+    # instant events among the train/step spans, and the trainer's
+    # health counters live in its metrics registry — both are asserted
+    # on by test_chaos.py and uploaded as CI artifacts below.
+    from repro.obs import Tracer, tracer_scope
+
     hooks = ChaosHooks(plan)
+    tracer = Tracer(enabled=True)
     with tempfile.TemporaryDirectory() as tmp:
         tr = make_trainer(tmp, hooks)
-        hist = tr.run()
+        with tracer_scope(tracer):
+            hist = tr.run()
     out["losses_chaos"] = _losses(hist)
+    out["trace_event_names"] = sorted({e["name"] for e in tracer.events})
+    out["trace_span_names"] = sorted({s.name for s in tracer.spans})
     out["steps_completed"] = tr.step
     out["plan"] = plan.summary()
     out["fired"] = hooks.fired
@@ -127,12 +137,18 @@ def run_checks() -> dict:
 
     path = os.environ.get("REPRO_CHAOS_TELEMETRY")
     if path:
-        hooks.dump_telemetry(path, extra={
+        from repro.obs import dump_telemetry as _dump
+        # registry= attaches the trainer's metric snapshot; the span
+        # trace rides in a companion JSONL (both CI artifacts, rendered
+        # by repro.launch.obs_report).
+        _dump(path, hooks.telemetry(), extra={
             "seed": CHAOS_SEED,
             "trainer_telemetry": out["telemetry"],
             "losses_free": out["losses_free"],
             "losses_chaos": out["losses_chaos"],
-            "steps_completed": tr.step})
+            "steps_completed": tr.step}, registry=tr.metrics)
+        root, _ = os.path.splitext(path)
+        tracer.export_jsonl(root + "-trace.jsonl")
     return out
 
 

@@ -1,0 +1,16 @@
+"""Shared deterministic clock for engine/trainer/tracer tests.
+
+One definition (ISSUE 8) so every suite drives the same injectable
+monotonic-clock seam — DCLServingEngine(clock=...), Trainer(clock=...),
+Tracer(clock=...)."""
+
+
+class FakeClock:
+    def __init__(self, t: float = 0.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt

@@ -102,6 +102,26 @@ def test_telemetry_artifact_written():
     assert os.path.exists(_TELEMETRY)
     rec = json.loads(Path(_TELEMETRY).read_text())
     for key in ("seed", "plan", "fired", "trainer_telemetry",
-                "losses_chaos", "steps_completed"):
+                "losses_chaos", "steps_completed", "metrics"):
         assert key in rec, key
     assert rec["seed"] == 20260808
+    # the attached registry snapshot agrees with the health telemetry
+    counters = rec["metrics"]["counters"]
+    skipped = sum(v["value"] for v in
+                  counters["train_steps_skipped_total"]["values"])
+    assert skipped == rec["trainer_telemetry"]["skipped"]
+
+
+def test_fault_events_traced():
+    """Every fired fault class appears as a fault/* instant event in the
+    chaos run's trace, nested among train/step spans — while the
+    bit-exactness assertions above still hold (tracing is inert)."""
+    r = _results()
+    expected = {f"fault/{k}" for k in r["fired_kinds"]}
+    assert expected <= set(r["trace_event_names"]), (
+        expected, r["trace_event_names"])
+    assert {"train/step", "train/data", "train/compute",
+            "ckpt/save"} <= set(r["trace_span_names"])
+    # the companion trace JSONL rode along with the telemetry artifact
+    root, _ = os.path.splitext(_TELEMETRY)
+    assert os.path.exists(root + "-trace.jsonl")

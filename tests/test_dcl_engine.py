@@ -14,18 +14,9 @@ from repro.resilience import KernelDispatchFault
 from repro.serve import (DCLServeConfig, DCLServingEngine, OUTCOMES,
                          resolve_bucket)
 
+from _fakeclock import FakeClock
+
 BUCKET = 32
-
-
-class FakeClock:
-    def __init__(self):
-        self.t = 0.0
-
-    def __call__(self):
-        return self.t
-
-    def advance(self, dt):
-        self.t += dt
 
 
 @pytest.fixture(scope="module")

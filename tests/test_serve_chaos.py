@@ -19,26 +19,18 @@ import pytest
 
 from repro.kernels import ops
 from repro.models import resnet_dcn as R
+from repro.obs import Tracer, tracer_scope
 from repro.quant.calibrate import calibrate_resnet_dcn
 from repro.resilience import ChaosHooks, FaultEvent, FaultPlan
 from repro.serve import DCLServeConfig, DCLServingEngine, OUTCOMES
+
+from _fakeclock import FakeClock
 
 CHAOS_SEED = 20260808
 BUCKET = 32
 N_REQUESTS = 10
 SLOW_STALL_S = 1.0      # fake-clock stall injected by slow_step
 TIGHT_DEADLINE_S = 0.5  # two requests carry this; the stall expires them
-
-
-class FakeClock:
-    def __init__(self):
-        self.t = 0.0
-
-    def __call__(self):
-        return self.t
-
-    def advance(self, dt):
-        self.t += dt
 
 
 @pytest.fixture(scope="module")
@@ -99,8 +91,25 @@ def test_serve_chaos_every_request_typed_and_undisturbed_bit_exact(model):
     assert all(r.outcome == "ok" for r in free.completed)
     free_by_uid = {r.uid: r for r in free.completed}
 
+    # The chaos run is traced (ISSUE 8): the engine and ChaosHooks both
+    # resolve the process-global tracer at use time, so the scope below
+    # captures serve spans AND fault/* instant events — while every
+    # bit-exactness assertion beneath must still hold (tracing cannot
+    # perturb outcomes).
+    tracer = Tracer(enabled=True)
     hooks = ChaosHooks(_plan())
-    eng = _run(model, hooks)
+    with tracer_scope(tracer):
+        eng = _run(model, hooks)
+
+    # every injected fault appears in the trace as a fault/* event,
+    # nested among the serve spans
+    event_names = {e["name"] for e in tracer.events}
+    assert {"fault/slow_step", "fault/malformed_request",
+            "fault/bucket_miss_storm",
+            "fault/dispatch_fault"} <= event_names
+    span_names = {s.name for s in tracer.spans}
+    assert "serve/step" in span_names
+    assert "kernel/dispatch" in span_names
 
     # every admitted request retired with a typed outcome; nothing hung
     assert len(eng.completed) == N_REQUESTS
@@ -159,3 +168,6 @@ def test_serve_chaos_every_request_typed_and_undisturbed_bit_exact(model):
             "seed": CHAOS_SEED,
             "chaos": hooks.telemetry(),
             "undisturbed_uids": sorted(r.uid for r in undisturbed)})
+        # companion trace artifact (CI uploads both; obs_report renders)
+        root, _ = os.path.splitext(path)
+        tracer.export_jsonl(root + "-trace.jsonl")
