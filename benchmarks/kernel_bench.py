@@ -232,6 +232,96 @@ def _mc128_smoke_record(key) -> dict:
     }
 
 
+def tune_records(*, smoke: bool = False,
+                 cache_path: str | None = None) -> list[dict]:
+    """ISSUE 9 (``run.py --tune``): run the measured-time autotuner on
+    the bench configs, persist the winner cache, and verify end-to-end
+    that a cold dispatch (tiles=None) resolved under the installed
+    cache actually reads the tuned entries.
+
+    Two configs: the flagged ``dcl_bwd_megacore_128c`` backward (the
+    acceptance target — the analytic chooser dispatches cores=2 there,
+    the tuner measures the cores sweep + dw-flush cadence and wins),
+    and the smoke forward shape the serving engine's plans resolve.
+    ``tuned_vs_analytic_ratio`` >= 1 up to re-measure noise by
+    construction (the analytic pick is always a candidate); ``run.py``
+    gates it with ``TUNE_GATE_NOISE_TOLERANCE``.
+    """
+    from repro.kernels import plan
+    from repro.tune import TileCache, tile_cache_scope, tune_deform_conv
+
+    reps = 2 if smoke else 3
+    max_candidates = 4 if smoke else 8
+    cache = TileCache()
+    out: list[dict] = []
+
+    # -- the acceptance config: the flagged Megacore 128c backward ----
+    mc = tune_deform_conv(
+        h=16, w=16, c=128, m=128, batch=2, offset_bound=2.0,
+        objective="training", cores=2, sweep_cores=(1, 2), reps=reps,
+        max_candidates=max_candidates, cache=cache)
+    # -- the smoke forward shape (what the serving plans resolve) -----
+    fwd = tune_deform_conv(
+        h=16, w=16, c=32, m=32, batch=1, offset_bound=2.0,
+        objective="forward", cores=1, reps=reps,
+        max_candidates=max_candidates, cache=cache)
+
+    if cache_path:
+        cache.save(cache_path)
+
+    # -- applied end-to-end: dispatch with tiles=None under the cache
+    # and confirm resolve_tiles served the tuned entries (tuned_hits).
+    key = jax.random.PRNGKey(23)
+    h, w, c, m = 16, 16, 128, 128
+    x2 = jax.random.normal(jax.random.fold_in(key, 7), (2, h, w, c),
+                           jnp.float32)
+    offs2 = jax.random.normal(jax.random.fold_in(key, 8),
+                              (2, h, w, 18), jnp.float32) * 2
+    wgt = jax.random.normal(jax.random.fold_in(key, 9),
+                            (9, c, m), jnp.float32) * 0.1
+    rec_cores = mc["best"]["cores"]
+    with tile_cache_scope(cache):
+        plan.reset_tuned_stats()
+        applied_us = _time(
+            _grad_fn(lambda a, b, ww: ops.deform_conv(
+                a, b, ww, offset_bound=2.0, cores=rec_cores)),
+            x2, offs2, wgt, reps=reps)
+        stats = plan.tile_cache_info()
+    applied_hits = stats.get("tuned_hits", 0)
+
+    out.append({
+        "name": "tuned_dcl_bwd_megacore_128c",
+        "tuned_us_bwd": mc["best"]["us"],
+        "analytic_us_bwd": mc["analytic"]["us"],
+        "tuned_vs_analytic_ratio": mc["tuned_vs_analytic_ratio"],
+        "tuned_tiles": mc["best"]["tiles"],
+        "tuned_cores": mc["best"]["cores"],
+        "tuned_dw_flush_every_step": mc["best"]["dw_flush_every_step"],
+        "analytic_tiles": mc["analytic"]["tiles"],
+        "analytic_cores": mc["analytic"]["cores"],
+        "per_cores": mc["per_cores"],
+        "applied_us_bwd": applied_us,
+        "applied_tuned_hits": applied_hits,
+        "platform": mc["platform"],
+        "n_candidates": mc["n_candidates"],
+        "reps": reps,
+        "tuner_cache_path": cache_path,
+    })
+    out.append({
+        "name": "tuned_deform_conv_fused_32c",
+        "tuned_us_fwd": fwd["best"]["us"],
+        "analytic_us_fwd": fwd["analytic"]["us"],
+        "tuned_vs_analytic_ratio": fwd["tuned_vs_analytic_ratio"],
+        "tuned_tiles": fwd["best"]["tiles"],
+        "analytic_tiles": fwd["analytic"]["tiles"],
+        "platform": fwd["platform"],
+        "n_candidates": fwd["n_candidates"],
+        "reps": reps,
+        "tuner_cache_path": cache_path,
+    })
+    return out
+
+
 def obs_overhead_record(*, reps: int = 7) -> dict:
     """Cost of the ISSUE-8 dispatch instrumentation on one bounded
     deform_conv call: untraced (no hook) vs a ``DispatchRecorder`` with
@@ -307,6 +397,39 @@ def divergence_records(recs: list[dict]) -> dict:
                      "cores=2 split; measured = cores=1/cores=2 wall "
                      "time — interpret mode serializes the cores, so "
                      "the 128c case measures slower (ROADMAP anomaly)")
+    # ISSUE 9: when the autotuner ran (--tune), re-record the anomalous
+    # Megacore pair post-tuning — same ratio semantics (cores=1 wall /
+    # cores=2 wall), but at each side's TUNED plan.  The tuner resolves
+    # the anomaly by *recommending* cores=1 on this platform (interpret
+    # mode serializes the core subgrids, so the modeled per-core win
+    # cannot materialize as wall time); the pair keeps its modeled
+    # ratio and documents the resolution instead of a stale flag.
+    tuned = next((r for r in recs
+                  if r.get("name") == "tuned_dcl_bwd_megacore_128c"), None)
+    if tuned is not None and "per_cores" in tuned:
+        pc = tuned["per_cores"]
+        if "1" in pc and "2" in pc:
+            ratio_post = pc["1"]["us"] / pc["2"]["us"]
+            for p in tracker.pairs:
+                if p["name"] != "dcl_bwd_megacore_128c/bwd_megacore_split":
+                    continue
+                tracker.annotate_pair(
+                    p["name"],
+                    measured_ratio_post_tuning=ratio_post,
+                    anomalous_post_tuning=bool(
+                        p["modeled_ratio"] > 1.0 > ratio_post),
+                    tuned_recommended_cores=tuned["tuned_cores"],
+                    tuned_vs_analytic_ratio=
+                        tuned["tuned_vs_analytic_ratio"],
+                    tuned_note="autotuner resolution: measured best "
+                               "pick is cores="
+                               f"{tuned['tuned_cores']} (ratio "
+                               f"{tuned['tuned_vs_analytic_ratio']:.2f}x "
+                               "vs the analytic cores=2 dispatch) — on "
+                               "this platform the split's modeled "
+                               "per-core win cannot show up in wall "
+                               "time, so the tuner sidesteps it rather "
+                               "than flipping the measured ratio")
     return tracker.report()
 
 
@@ -437,6 +560,26 @@ def run(*, smoke: bool = False, precision: str = "both",
                 f"disabled_tracer={r['us_dispatch_disabled_tracer']:.0f}us;"
                 f"traced_ratio={r['overhead_ratio_traced']:.2f}x;"
                 f"disabled_ratio={r['overhead_ratio_disabled']:.2f}x")
+            continue
+        if r.get("name") == "tuned_dcl_bwd_megacore_128c":
+            rows.append(
+                f"kernel/{r['name']},{r['tuned_us_bwd']:.0f},"
+                f"analytic={r['analytic_us_bwd']:.0f}us;"
+                f"ratio={r['tuned_vs_analytic_ratio']:.2f}x;"
+                f"tuned_cores={r['tuned_cores']};"
+                f"tuned_tiles={tuple(r['tuned_tiles'])};"
+                f"dw_flush_every_step={r['tuned_dw_flush_every_step']};"
+                f"applied={r['applied_us_bwd']:.0f}us;"
+                f"applied_tuned_hits={r['applied_tuned_hits']};"
+                f"platform={r['platform']}")
+            continue
+        if r.get("name") == "tuned_deform_conv_fused_32c":
+            rows.append(
+                f"kernel/{r['name']},{r['tuned_us_fwd']:.0f},"
+                f"analytic={r['analytic_us_fwd']:.0f}us;"
+                f"ratio={r['tuned_vs_analytic_ratio']:.2f}x;"
+                f"tuned_tiles={tuple(r['tuned_tiles'])};"
+                f"platform={r['platform']}")
             continue
         if r.get("name") == "dcl_bwd_megacore_128c":
             rows.append(

@@ -10,9 +10,11 @@ Prints ``name,us_per_call,derived`` CSV rows:
   * roofline            — summary of the dry-run §Roofline table if the
                           dry-run artifacts exist (run dryrun.py first)
 
-Also writes ``BENCH_kernels.json`` next to this file: machine-readable
-per-kernel wall time (forward and backward) + modeled HBM bytes under
-both DCL dataflows, so the perf trajectory is tracked across PRs.
+Also writes ``BENCH_kernels.json`` under ``bench-out/`` at the repo
+root (the single canonical artifact location — CI uploads it from
+there): machine-readable per-kernel wall time (forward and backward) +
+modeled HBM bytes under both DCL dataflows, so the perf trajectory is
+tracked across PRs.
 
 The driver gates the zero-copy regressions, forward and backward: for
 every ``deform_conv_fused_*`` record, zero-copy wall time must be <=
@@ -22,7 +24,15 @@ reference, and the Megacore-split backward <= the sequential kernel
 exits non-zero.
 
 ``--smoke`` runs only the kernel section at reduced shapes (< 1 min);
-``--out DIR`` redirects the JSON artifact.
+``--out DIR`` redirects the JSON artifacts.
+
+``--tune`` (ISSUE 9) runs the measured-time autotuner on the bench
+configs: ``tuned_us_*`` / ``tuned_vs_analytic_ratio`` records land in
+``BENCH_kernels.json``, the winner cache is persisted to
+``<out>/TUNED_tiles.json`` (what ``repro.tune.install_tile_cache``
+consumes), the anomalous Megacore divergence pair is re-recorded
+post-tuning, and the tuned-vs-analytic gate runs (see
+``TUNE_GATE_NOISE_TOLERANCE``).
 
 ``--serve`` runs the serving-engine benchmark instead (PR 7): per-bucket
 p50/p99 latency and QPS for the int8_chain vs per-layer-fp32 engines,
@@ -75,6 +85,35 @@ GATE_NOISE_TOLERANCE = 1.2
 # interpret grid loop) or a broken core split, both order-of-magnitude
 # blowups that clear any sane band.
 BWD_GATE_NOISE_TOLERANCE = 1.6
+
+# The tuner's pick is an argmin over candidates that always include the
+# analytic pick, so tuned_vs_analytic_ratio >= 1 by construction — up
+# to the re-measure noise between the analytic candidate's timing and a
+# later run of the same config.  The gate therefore exists to catch the
+# tuner APPLYING the wrong plan (a broken cache key / stale entry
+# served to the dispatcher), not to certify a speedup margin; 1.3x
+# bounds interpret-mode jitter the same way BWD_GATE_NOISE_TOLERANCE
+# does for the pullback gates.
+TUNE_GATE_NOISE_TOLERANCE = 1.3
+
+
+def gate_tuned(recs: list[dict]) -> int:
+    """Tuned >= analytic gate on every ``tuned_*`` record (ISSUE 9).
+    Returns #failures."""
+    failures = 0
+    floor = 1.0 / TUNE_GATE_NOISE_TOLERANCE
+    for r in recs:
+        if "tuned_vs_analytic_ratio" not in r:
+            continue
+        ratio = r["tuned_vs_analytic_ratio"]
+        ok = ratio >= floor
+        print(f"bench/gate_tuned_{r['name']},0,"
+              f"tuned_vs_analytic={ratio:.2f}x"
+              f"{'>=' if ok else '<'}{floor:.2f}x"
+              f"(tol={TUNE_GATE_NOISE_TOLERANCE})"
+              f"{'' if ok else ';REGRESSION'}")
+        failures += 0 if ok else 1
+    return failures
 
 
 def gate_zero_copy_regression(recs: list[dict]) -> int:
@@ -195,8 +234,17 @@ def main(argv=None) -> None:
                     help="run the serving-engine bench instead: per-bucket "
                          "p50/p99/QPS -> BENCH_serve.json + the >= 1.3x "
                          "chained-int8 throughput gate")
-    ap.add_argument("--out", default=os.path.dirname(os.path.abspath(__file__)),
-                    help="directory for BENCH_kernels.json")
+    ap.add_argument("--tune", action="store_true",
+                    help="run the measured-time autotuner (repro.tune): "
+                         "tuned_us_*/tuned_vs_analytic_ratio records, the "
+                         "TUNED_tiles.json winner cache, and the tuned >= "
+                         "analytic gate")
+    ap.add_argument("--out",
+                    default=os.path.join(
+                        os.path.dirname(os.path.dirname(
+                            os.path.abspath(__file__))), "bench-out"),
+                    help="directory for the JSON artifacts (default: the "
+                         "canonical bench-out/ at the repo root)")
     args = ap.parse_args(argv)
 
     if args.serve:
@@ -232,6 +280,11 @@ def main(argv=None) -> None:
                                                 precision=args.precision,
                                                 chain=args.chain))
         kernel_recs.append(kernel_bench.obs_overhead_record())
+        if args.tune:
+            os.makedirs(args.out, exist_ok=True)
+            kernel_recs.extend(kernel_bench.tune_records(
+                smoke=args.smoke,
+                cache_path=os.path.join(args.out, "TUNED_tiles.json")))
         if not args.smoke:
             kernel_recs.extend(kernel_bench.train_step_records())
         return kernel_bench.run(smoke=args.smoke, precision=args.precision,
@@ -266,11 +319,19 @@ def main(argv=None) -> None:
                                                chain=args.chain)
         divergence = kernel_bench.divergence_records(kernel_recs)
         for p in divergence["pairs"]:
+            post = ""
+            if "measured_ratio_post_tuning" in p:
+                resolved = (";ANOMALY-RESOLVED-BY-TUNER"
+                            if p["anomalous"] else "")
+                post = (f";post_tuning="
+                        f"{p['measured_ratio_post_tuning']:.2f}x;"
+                        f"tuned_cores={p['tuned_recommended_cores']}"
+                        f"{resolved}")
             print(f"bench/divergence_{p['name']},0,"
                   f"modeled={p['modeled_ratio']:.2f}x;"
                   f"measured={p['measured_ratio']:.2f}x;"
                   f"divergence={p['divergence']:.2f}x"
-                  f"{';ANOMALOUS' if p['anomalous'] else ''}")
+                  f"{';ANOMALOUS' if p['anomalous'] else ''}{post}")
         os.makedirs(args.out, exist_ok=True)
         write_kernel_json(os.path.join(args.out, "BENCH_kernels.json"),
                           kernel_recs, smoke=args.smoke,
@@ -278,6 +339,7 @@ def main(argv=None) -> None:
                           divergence=divergence)
         failures += gate_zero_copy_regression(kernel_recs)
         failures += gate_chain_traffic(kernel_recs)
+        failures += gate_tuned(kernel_recs)
     except Exception:  # noqa: BLE001
         failures += 1
         print("bench/json,nan,ERROR")

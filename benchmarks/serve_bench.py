@@ -156,6 +156,17 @@ def records(*, smoke: bool = False) -> dict:
                 rec["hbm_bytes_chained"] = chain_b
                 rec["throughput_ratio_modeled"] = fp32_b / chain_b
                 ratios_modeled.append(fp32_b / chain_b)
+                # Plan provenance (ISSUE 9): whether each DCL layer's
+                # tiles came from the installed autotuner cache or the
+                # analytic Sec. 3.2 chooser — cold caches are visible,
+                # not silent.
+                sources = eng.plan_sources.get(bucket, {})
+                rec["plan_sources"] = dict(sources)
+                rec["plans_tuned"] = sum(
+                    1 for s in sources.values() if s == "tuned")
+                rec["plans_total"] = len(sources)
+                rec["plan_from_tuned_cache"] = bool(
+                    rec["plans_tuned"])
         rec["throughput_ratio_measured"] = \
             rec["qps_chain"] / rec["qps_fp32"]
         payload["buckets"][str(bucket)] = rec
@@ -179,5 +190,7 @@ def run(*, smoke: bool = False, payload: dict | None = None):
             f"{rec['p50_ms_chain'] * 1e3:.0f},"
             f"p50={rec['p50_ms_chain']:.1f}ms;p99={rec['p99_ms_chain']:.1f}"
             f"ms;qps={rec['qps_chain']:.1f};modeled_ratio="
-            f"{rec['throughput_ratio_modeled']:.2f}x")
+            f"{rec['throughput_ratio_modeled']:.2f}x;"
+            f"plans_tuned={rec.get('plans_tuned', 0)}/"
+            f"{rec.get('plans_total', 0)}")
     return rows

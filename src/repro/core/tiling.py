@@ -713,6 +713,67 @@ def choose_kernel_tiles(shape: LayerShape, *, batch: int = 1,
                        tile_m=t.t_m)
 
 
+def neighbor_kernel_tiles(shape: LayerShape, seed: KernelTiles, *,
+                          dilation: int = 1,
+                          objective: str = "training",
+                          dtype: str | None = None,
+                          vmem_budget: int = V5E_VMEM_BYTES,
+                          radius: int = 1) -> list[KernelTiles]:
+    """VMEM-feasible tile candidates around ``seed`` — the search space
+    of the measured-time autotuner (``repro.tune``).
+
+    Each dimension moves up to ``radius`` positions along the analytic
+    chooser's own candidate ladder (spatial tiles clamped to the output
+    extent, channel tiles drawn from the same divisor set), and the
+    cross product is filtered by exactly the working-set feasibility
+    ``choose_kernel_tiles`` enforces (forward VMEM, plus the backward
+    working set under the training objective).  The seed is always the
+    first candidate, so the analytic pick is measured alongside its
+    neighbors and the tuner's win is never an artifact of dropping it.
+    """
+    if objective not in ("forward", "training"):
+        raise ValueError(f"unknown objective {objective!r}")
+    vmem_b = dtype_bytes(dtype) if dtype is not None else 2
+    aux_b = 4 if dtype == "int8" else None
+    ho, wo = out_hw(shape.h, shape.w, kernel_size=shape.kernel_size,
+                    stride=shape.stride, dilation=dilation)
+    ths = sorted({min(t, max(1, ho)) for t in (1, 2, 4, 8, 16, 32)})
+    tws = sorted({min(t, max(1, wo)) for t in (8, 16, 32, 64, 128)})
+    tns = sorted({_divisor_at_most(shape.c_in, cap)
+                  for cap in (32, 64, 128, 256, 512, shape.c_in)})
+    tms = sorted({_divisor_at_most(shape.c_out, cap)
+                  for cap in (32, 64, 128, 256, shape.c_out)})
+
+    def near(ladder: list[int], v: int) -> list[int]:
+        i = min(range(len(ladder)), key=lambda j: abs(ladder[j] - v))
+        return ladder[max(0, i - radius):i + radius + 1]
+
+    seed_kt = KernelTiles(seed.tile_h, seed.tile_w, seed.tile_c,
+                          seed.tile_m)
+    out, seen = [seed_kt], {(seed.tile_h, seed.tile_w, seed.tile_c,
+                             seed.tile_m)}
+    for t_h in near(ths, seed.tile_h):
+        for t_w in near(tws, seed.tile_w):
+            for t_n in near(tns, seed.tile_c):
+                for t_m in near(tms, seed.tile_m):
+                    key = (t_h, t_w, t_n, t_m)
+                    if key in seen:
+                        continue
+                    seen.add(key)
+                    t = TileConfig(t_h, t_w, t_n, t_m)
+                    vmem = zerocopy_vmem_bytes(shape, t, dilation=dilation,
+                                               bytes_per_elem=vmem_b,
+                                               aux_bytes_per_elem=aux_b)
+                    if objective == "training":
+                        vmem = max(vmem, zerocopy_bwd_vmem_bytes(
+                            shape, t, dilation=dilation,
+                            bytes_per_elem=vmem_b))
+                    if vmem > vmem_budget:
+                        continue
+                    out.append(KernelTiles(t_h, t_w, t_n, t_m))
+    return out
+
+
 def max_offset_bound_fitting(kernel_size: int, stride: int, t_w: int,
                              t_n: int, vmem_budget: int = V5E_VMEM_BYTES,
                              *, bytes_per_elem: int = 2) -> float:

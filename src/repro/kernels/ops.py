@@ -105,7 +105,11 @@ _spec_tiles = _plan.spec_tiles
 
 
 def default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
+    """Whether the Pallas kernels run in interpret mode by default —
+    now a view of the process-global lowering platform
+    (``launch.platform``): Mosaic (False) only under platform 'tpu'."""
+    from repro.launch.platform import current_platform
+    return current_platform() != "tpu"
 
 
 # ---------------------------------------------------------------------------
@@ -483,7 +487,8 @@ _deform_conv_sharded.defvjp(_deform_conv_sharded_fwd,
     jax.jit,
     static_argnames=("kernel_size", "stride", "dilation", "offset_bound",
                      "tile_h", "tile_w", "tile_c", "tile_m", "dataflow",
-                     "precision", "cores", "shard", "interpret"))
+                     "precision", "cores", "shard", "interpret",
+                     "dw_flush_every_step"))
 def _deform_conv_impl(x: Array, offsets: Array, w: Array, *,
                       kernel_size: int, stride: int, dilation: int,
                       offset_bound: float | None,
@@ -492,7 +497,8 @@ def _deform_conv_impl(x: Array, offsets: Array, w: Array, *,
                       dataflow: str, precision: str, cores: int,
                       shard: _ShardSpec | None,
                       x_scale: Array | None, w_scale: Array | None,
-                      interpret: bool | None) -> Array:
+                      interpret: bool | None,
+                      dw_flush_every_step: bool | None = None) -> Array:
     # NOTE: argument validation lives in the un-jitted ``deform_conv``
     # wrapper (hoisted in PR 6 so validation errors always raise while
     # post-validation failures can degrade to the reference path).
@@ -524,10 +530,36 @@ def _deform_conv_impl(x: Array, offsets: Array, w: Array, *,
     spec = _DCSpec(kernel_size=kernel_size, stride=stride, dilation=dilation,
                    offset_bound=offset_bound, tile_h=tile_h, tile_w=tile_w,
                    tile_c=tile_c, tile_m=tile_m, dataflow=dataflow,
-                   interpret=interpret, cores=cores)
+                   interpret=interpret, cores=cores,
+                   dw_flush_every_step=dw_flush_every_step)
     if shard is not None:
         return _deform_conv_sharded(spec, shard, x, offsets, w)
     return _deform_conv_bounded(spec, x, offsets, w)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("kernel_size", "stride", "dilation", "offset_bound",
+                     "precision"))
+def _reference_impl(x: Array, offsets: Array, w: Array, *,
+                    kernel_size: int, stride: int, dilation: int,
+                    offset_bound: float, precision: str,
+                    x_scale: Array | None,
+                    w_scale: Array | None) -> Array:
+    """The platform='xla_ref' lowering (``launch.platform``): the
+    degradation ladder's reference forms of the bounded arithmetic,
+    compiled as ordinary XLA — the parity baseline the tuner and the
+    test-suite compare the emitted kernels against.  Differentiable
+    (plain XLA graph), so the training objective works here too."""
+    if precision == "int8":
+        from repro.quant.qat import fake_quant_dcl_reference
+        return fake_quant_dcl_reference(
+            x, offsets, w, kernel_size=kernel_size, stride=stride,
+            dilation=dilation, offset_bound=offset_bound,
+            x_scale=x_scale, w_scale=w_scale)
+    return _plan.reference_forward(
+        x, offsets, w, kernel_size=kernel_size, stride=stride,
+        dilation=dilation, offset_bound=offset_bound)
 
 
 def deform_conv(x: Array, offsets: Array, w: Array, *, kernel_size: int = 3,
@@ -541,7 +573,8 @@ def deform_conv(x: Array, offsets: Array, w: Array, *, kernel_size: int = 3,
                 shard_batch: bool | None = None,
                 x_scale: Array | None = None,
                 w_scale: Array | None = None,
-                interpret: bool | None = None) -> Array:
+                interpret: bool | None = None,
+                dw_flush_every_step: bool | None = None) -> Array:
     """Fused DCL stage 1+2: y = g(x, o) * w_deform  (Eq. 2).
 
     x: (N, H, W, C); offsets: (N, Ho, Wo, 2*K*K); w: (K*K, C, M).
@@ -618,14 +651,34 @@ def deform_conv(x: Array, offsets: Array, w: Array, *, kernel_size: int = 3,
                 f"dispatches the "
                 f"{'int8 inference' if precision == 'int8' else 'unbounded gather'} "
                 f"path, so pass cores=1")
+        if dw_flush_every_step is not None:
+            raise ValueError(
+                f"dw_flush_every_step={dw_flush_every_step} applies to "
+                f"the bounded fp32 kernel path (offset_bound set, "
+                f"precision='fp32') — it is the d_weights flush cadence "
+                f"of the fused backward kernel; pass None here")
+
+    from repro.launch.platform import current_platform
+    plat = current_platform()
 
     def _impl():
+        if plat == "xla_ref":
+            # platform='xla_ref' (launch.platform): the reference rung
+            # promoted to a first-class lowering — the same arithmetic
+            # as the bounded kernels, emitted as a plain XLA graph (no
+            # Pallas at all).  Still dispatched through the hook seam
+            # so the obs recorder / tuner time it like any backend.
+            return _reference_impl(
+                x, offsets, w, kernel_size=kernel_size, stride=stride,
+                dilation=dilation, offset_bound=offset_bound,
+                precision=precision, x_scale=x_scale, w_scale=w_scale)
         return _deform_conv_impl(
             x, offsets, w, kernel_size=kernel_size, stride=stride,
             dilation=dilation, offset_bound=offset_bound, tile_h=tile_h,
             tile_w=tile_w, tile_c=tile_c, tile_m=tile_m, dataflow=dataflow,
             precision=precision, cores=cores, shard=shard,
-            x_scale=x_scale, w_scale=w_scale, interpret=interpret)
+            x_scale=x_scale, w_scale=w_scale, interpret=interpret,
+            dw_flush_every_step=dw_flush_every_step)
 
     if offset_bound is None:
         # Unbounded gather baseline IS the XLA reference path — there is
@@ -638,7 +691,7 @@ def deform_conv(x: Array, offsets: Array, w: Array, *, kernel_size: int = 3,
             op="deform_conv", precision=precision, dataflow=dataflow,
             shape=tuple(x.shape), offset_bound=offset_bound,
             kernel_size=kernel_size, stride=stride, dilation=dilation,
-            m=m, cores=cores)
+            m=m, cores=cores, platform=plat)
         out = _impl()
         _finish_dispatch(finish, out=out)
         return out
@@ -736,42 +789,51 @@ def deform_conv_chain(x: Array, w: Array, w_offset: Array,
             f"complete before the first bilinear sample consumes them — "
             f"pass tile_c=None (or C) for chained layers")
 
+    def _chain_reference():
+        # The reference form of the chained layer: the STE chain oracle
+        # (same quantization boundaries on the XLA graph), re-quantized
+        # onto the emission grid so chained consumers see the same int8
+        # plane the kernel would have produced.  Serves BOTH the
+        # degradation fallback and the platform='xla_ref' lowering.
+        from repro.quant.qat import fake_quant_dcl_chain_reference
+        from repro.quant.qtypes import quantize_values
+
+        sx = jnp.asarray(x_scale, jnp.float32)
+        xf = (x.astype(jnp.float32) * sx if x.dtype == jnp.int8
+              else x)
+        y, _ = fake_quant_dcl_chain_reference(
+            xf, w, w_offset, b_offset, b_deform,
+            kernel_size=kernel_size, stride=stride, dilation=dilation,
+            offset_bound=offset_bound, x_scale=x_scale,
+            w_scale=w_scale, w_offset_scale=w_offset_scale,
+            y_scale=y_scale if emit == "int8" else None)
+        if emit == "int8":
+            return quantize_values(y, jnp.asarray(y_scale, jnp.float32))
+        return y
+
+    from repro.launch.platform import current_platform
+    plat = current_platform()
+
     finish = None
     try:
         finish = _consult_dispatch_hook(
             op="deform_conv_chain", emit=emit, shape=tuple(x.shape),
             offset_bound=offset_bound, kernel_size=kernel_size,
-            stride=stride, dilation=dilation, m=w.shape[-1], cores=1)
-        out = _deform_conv_chain_impl(
-            x, w, w_offset, b_offset, b_deform, kernel_size=kernel_size,
-            stride=stride, dilation=dilation, offset_bound=offset_bound,
-            x_scale=x_scale, w_scale=w_scale,
-            w_offset_scale=w_offset_scale, y_scale=y_scale,
-            tile_h=tile_h, tile_w=tile_w, tile_c=tile_c, tile_m=tile_m,
-            emit=emit, interpret=interpret)
+            stride=stride, dilation=dilation, m=w.shape[-1], cores=1,
+            platform=plat)
+        if plat == "xla_ref":
+            out = _chain_reference()
+        else:
+            out = _deform_conv_chain_impl(
+                x, w, w_offset, b_offset, b_deform,
+                kernel_size=kernel_size, stride=stride, dilation=dilation,
+                offset_bound=offset_bound, x_scale=x_scale,
+                w_scale=w_scale, w_offset_scale=w_offset_scale,
+                y_scale=y_scale, tile_h=tile_h, tile_w=tile_w,
+                tile_c=tile_c, tile_m=tile_m, emit=emit,
+                interpret=interpret)
         _finish_dispatch(finish, out=out)
         return out
     except Exception as e:  # noqa: BLE001 — bounded-path failure
         _finish_dispatch(finish, error=e)
-        def _fallback():
-            # One rung down the ladder: the STE chain oracle (same
-            # quantization boundaries on the XLA graph), re-quantized
-            # onto the emission grid so chained consumers see the same
-            # int8 plane the kernel would have produced.
-            from repro.quant.qat import fake_quant_dcl_chain_reference
-            from repro.quant.qtypes import quantize_values
-
-            sx = jnp.asarray(x_scale, jnp.float32)
-            xf = (x.astype(jnp.float32) * sx if x.dtype == jnp.int8
-                  else x)
-            y, _ = fake_quant_dcl_chain_reference(
-                xf, w, w_offset, b_offset, b_deform,
-                kernel_size=kernel_size, stride=stride, dilation=dilation,
-                offset_bound=offset_bound, x_scale=x_scale,
-                w_scale=w_scale, w_offset_scale=w_offset_scale,
-                y_scale=y_scale if emit == "int8" else None)
-            if emit == "int8":
-                return quantize_values(y, jnp.asarray(y_scale,
-                                                      jnp.float32))
-            return y
-        return _degraded(("deform_conv_chain", emit), e, _fallback)
+        return _degraded(("deform_conv_chain", emit), e, _chain_reference)

@@ -55,6 +55,11 @@ class DCSpec:
     dataflow: str
     interpret: bool
     cores: int = 1          # Megacore batch split of the backward grid
+    # d_weights flush cadence of the backward kernel: None defers to
+    # the kernel default (every-step under interpret, last-spatial-step
+    # compiled) or, when a tuned cache is installed, to the measured
+    # winner of the autotuner (ISSUE 9).
+    dw_flush_every_step: bool | None = None
 
 
 # ---------------------------------------------------------------------------
@@ -82,7 +87,63 @@ def untile_weights(wt: Array, kernel_size: int) -> Array:
 
 # ---------------------------------------------------------------------------
 # Tile resolution (memoized — the chooser sweep runs once per layer shape)
+#
+# ISSUE 9: resolution consults the installed tuned-tile cache
+# (``repro.tune``) FIRST — measured autotuner winners, keyed per
+# (shape, objective, dtype, cores, platform) — and falls back to the
+# analytic Sec. 3.2 chooser when the cache is cold, corrupt, or carries
+# an entry incompatible with the layer.  Callers are unchanged: the
+# dispatcher, Trainer, and serving engine read tuned tiles through the
+# same ``resolve_tiles``/``warm_tile_cache`` they always called.
 # ---------------------------------------------------------------------------
+
+_TUNED_STATS = {"tuned_hits": 0, "analytic_resolves": 0,
+                "tuned_incompatible": 0}
+
+
+def reset_tuned_stats() -> None:
+    """Zero the tuned-vs-analytic resolution counters (tests)."""
+    for k in _TUNED_STATS:
+        _TUNED_STATS[k] = 0
+
+
+def _tuned_lookup(h: int, w: int, c: int, m: int, *, kernel_size: int,
+                  stride: int, dilation: int, offset_bound: float,
+                  objective: str, dtype: str | None,
+                  cores: int) -> dict | None:
+    """The installed tuned cache's entry for one resolution key, or
+    None (no cache installed / key cold).  The lookup key includes the
+    active lowering platform (``launch.platform``) so an interpret-mode
+    wall-time winner is never served under Mosaic or the XLA reference
+    lowering."""
+    try:
+        from repro.tune.cache import active_tile_cache
+        cache = active_tile_cache()
+        if cache is None:
+            return None
+        from repro.launch.platform import current_platform
+        return cache.lookup(h=h, w=w, c=c, m=m, kernel_size=kernel_size,
+                            stride=stride, dilation=dilation,
+                            offset_bound=offset_bound,
+                            objective=objective, dtype=dtype, cores=cores,
+                            platform=current_platform())
+    except Exception:  # noqa: BLE001 — a broken cache must not break dispatch
+        return None
+
+
+def _entry_tiles(entry: dict, c: int, m: int) -> tuple | None:
+    """Validate one tuned entry against the layer it would configure:
+    four positive ints whose channel tiles divide (C, M).  None on
+    anything malformed or incompatible — the analytic fallback, counted
+    in ``tile_cache_info``."""
+    try:
+        th, tw, tc, tm = (int(v) for v in entry["tiles"])
+    except Exception:  # noqa: BLE001
+        return None
+    if min(th, tw, tc, tm) < 1 or c % tc != 0 or m % tm != 0:
+        return None
+    return th, tw, tc, tm
+
 
 @functools.lru_cache(maxsize=256)
 def resolve_tiles(h: int, w: int, c: int, m: int, *, kernel_size: int,
@@ -104,14 +165,47 @@ def resolve_tiles(h: int, w: int, c: int, m: int, *, kernel_size: int,
     training objective at the per-core backward traffic of the
     Megacore split.
 
+    The installed tuned-tile cache (``repro.tune`` — measured
+    autotuner winners, platform-keyed) is consulted before the analytic
+    chooser; explicit tile arguments win over both, and a cold,
+    corrupt, or layer-incompatible cache falls back to the chooser
+    (recorded in :func:`tile_cache_info`).
+
     Memoized at both levels: this ``lru_cache`` keys the resolved call
     (so repeated un-jitted ``deform_conv`` calls skip even the chooser
     dispatch), and ``choose_kernel_tiles`` itself memoizes the full
     candidate sweep per layer shape (see ``tests/test_tiling.py``
-    cache-hit coverage).
+    cache-hit coverage).  Installing a tuned cache or switching the
+    platform clears this memo (``repro.tune.cache.install_tile_cache``
+    / ``launch.platform.set_platform``).
     """
     from .ops import check_channel_tiles
     if None in (tile_h, tile_w, tile_c, tile_m):
+        entry = _tuned_lookup(h, w, c, m, kernel_size=kernel_size,
+                              stride=stride, dilation=dilation,
+                              offset_bound=offset_bound,
+                              objective=objective, dtype=dtype,
+                              cores=cores)
+        if entry is not None:
+            tuned = _entry_tiles(entry, c, m)
+            if tuned is not None:
+                _TUNED_STATS["tuned_hits"] += 1
+                tile_h = tile_h or tuned[0]
+                tile_w = tile_w or tuned[1]
+                tile_c = tile_c or tuned[2]
+                tile_m = tile_m or tuned[3]
+            else:
+                _TUNED_STATS["tuned_incompatible"] += 1
+                from repro.tune.cache import warn_once
+                warn_once(
+                    ("entry", h, w, c, m, objective, dtype, cores),
+                    "tuned-tile cache entry for %dx%dx%d->%d is "
+                    "malformed or incompatible with the layer "
+                    "(tiles=%r); falling back to the analytic chooser "
+                    "(warned once per key)", h, w, c, m,
+                    entry.get("tiles"))
+    if None in (tile_h, tile_w, tile_c, tile_m):
+        _TUNED_STATS["analytic_resolves"] += 1
         shape = LayerShape(h=h, w=w, c_in=c, c_out=m,
                            kernel_size=kernel_size, stride=stride,
                            offset_bound=offset_bound)
@@ -166,12 +260,44 @@ def warm_tile_cache(layers, *, offset_bound: float, kernel_size: int = 3,
     return resolved
 
 
-def tile_cache_info() -> dict[str, int]:
+def tile_source(h: int, w: int, c: int, m: int, *, kernel_size: int = 3,
+                stride: int = 1, dilation: int = 1, offset_bound: float,
+                objective: str = "forward", dtype: str | None = None,
+                cores: int = 1) -> str:
+    """Provenance of one layer's resolved tiles: ``"tuned"`` when the
+    installed tuned cache would supply them (a valid platform-keyed
+    entry exists), ``"analytic"`` otherwise — the serving engine
+    records this per bucket plan so telemetry shows which plans came
+    from the autotuner vs the Sec. 3.2 chooser."""
+    entry = _tuned_lookup(h, w, c, m, kernel_size=kernel_size,
+                          stride=stride, dilation=dilation,
+                          offset_bound=offset_bound, objective=objective,
+                          dtype=dtype, cores=cores)
+    if entry is not None and _entry_tiles(entry, c, m) is not None:
+        return "tuned"
+    return "analytic"
+
+
+def tile_cache_info() -> dict:
     """Hit/miss counters of the memoized tile chooser — surfaced in the
     serving engine's telemetry so a bucket-miss storm (every request a
-    fresh compile) is visible as a miss-rate spike."""
+    fresh compile) is visible as a miss-rate spike.
+
+    ISSUE 9 adds the tuned-cache resolution counters (``tuned_hits`` /
+    ``analytic_resolves`` / ``tuned_incompatible`` — counted per
+    memoization MISS, i.e. per fresh resolution) and the installed
+    cache's status (``tuned_cache``: installed/entries/path/
+    load_errors), so an analytic fallback — cold, corrupt, or
+    incompatible — is visible, never silent."""
     ci = resolve_tiles.cache_info()
-    return {"hits": ci.hits, "misses": ci.misses, "size": ci.currsize}
+    info = {"hits": ci.hits, "misses": ci.misses, "size": ci.currsize}
+    info.update(_TUNED_STATS)
+    try:
+        from repro.tune.cache import cache_info as _tuned_cache_info
+        info["tuned_cache"] = _tuned_cache_info()
+    except Exception:  # noqa: BLE001
+        pass
+    return info
 
 
 # ---------------------------------------------------------------------------
@@ -324,13 +450,28 @@ def bounded_backward(spec: DCSpec, x: Array, offsets: Array, w: Array,
     ho, wo = offsets.shape[1], offsets.shape[2]
     th, tw, tc, _ = spec_tiles(spec, x, offsets, w)
     off_dtype = offsets.dtype
+    dwf = spec.dw_flush_every_step
+    if dwf is None:
+        # Cadence resolution mirrors the tile resolution: the tuned
+        # cache's measured winner (both flush cadences are bit-exact —
+        # tests/test_deform_conv_grad.py parity), else the kernel
+        # default.  Explicit spec values win, as for tiles.
+        entry = _tuned_lookup(
+            h, w_, c, w.shape[-1], kernel_size=spec.kernel_size,
+            stride=spec.stride, dilation=spec.dilation,
+            offset_bound=spec.offset_bound, objective="training",
+            dtype=None, cores=spec.cores)
+        if entry is not None:
+            v = entry.get("dw_flush_every_step")
+            dwf = v if isinstance(v, bool) else None
     xp, offsets, w_tiled, gy = zerocopy_inputs(spec, x, offsets, w,
                                                th, tw, tc, extra=gy)
     dxp, doff, dwt = deform_conv_bwd_zerocopy(
         xp, offsets, gy, w_tiled, kernel_size=spec.kernel_size,
         stride=spec.stride, dilation=spec.dilation,
         offset_bound=spec.offset_bound, tile_h=th, tile_w=tw, tile_c=tc,
-        cores=spec.cores, interpret=spec.interpret)
+        cores=spec.cores, interpret=spec.interpret,
+        dw_flush_every_step=dwf)
     # Un-pad: pad_zerocopy put pad+hb zero rows/cols top-left.
     p0 = spec.dilation * (spec.kernel_size // 2) \
         + int(math.ceil(spec.offset_bound))

@@ -170,6 +170,23 @@ class DivergenceTracker:
         self.pairs.append(rec)
         return rec
 
+    def annotate_pair(self, name: str, **fields) -> dict | None:
+        """Attach post-hoc fields to the recorded pair ``name`` (the
+        last one, if re-recorded) and return it; None when no such
+        pair exists.
+
+        ISSUE 9: the autotuner re-measures anomalous pairs after tuning
+        and writes ``measured_ratio_post_tuning`` /
+        ``anomalous_post_tuning`` / ``tuned_note`` here, so the
+        divergence report shows before/after measured ratios instead of
+        a stale anomaly flag.
+        """
+        for rec in reversed(self.pairs):
+            if rec.get("name") == name:
+                rec.update(fields)
+                return rec
+        return None
+
     def report(self) -> dict:
         rows = []
         for key, a in self._agg.items():

@@ -192,14 +192,28 @@ class DCLServingEngine:
         # Per-bucket plan cache: resolve every DCL tile config now, so
         # the chooser sweep happens at engine start, not first request.
         int8ish = serve_cfg.quant in ("int8_chain", "int8")
+        plan_dtype = "int8" if int8ish else None
         self.plans: dict[int, dict[str, tuple]] = {}
+        # Per-layer plan provenance (ISSUE 9): "tuned" when the layer's
+        # tiles came from the installed autotuner cache (repro.tune),
+        # "analytic" for the Sec. 3.2 chooser — surfaced in telemetry()
+        # and serve_bench so a cold/ignored cache is visible.
+        self.plan_sources: dict[int, dict[str, str]] = {}
         if model_cfg.offset_bound is not None:
             for b in serve_cfg.buckets:
+                dims = bucket_layer_dims(model_cfg, b)
                 self.plans[b] = plan.warm_tile_cache(
-                    bucket_layer_dims(model_cfg, b),
+                    dims,
                     offset_bound=model_cfg.offset_bound,
                     objective="forward",
-                    dtype="int8" if int8ish else None)
+                    dtype=plan_dtype)
+                self.plan_sources[b] = {
+                    name: plan.tile_source(
+                        d["h"], d["w"], d["c"], d["m"],
+                        stride=d.get("stride", 1),
+                        offset_bound=model_cfg.offset_bound,
+                        objective="forward", dtype=plan_dtype)
+                    for name, d in dims.items()}
 
         self.queue = AdmissionQueue(AdmissionConfig(
             capacity=serve_cfg.queue_capacity,
@@ -422,6 +436,8 @@ class DCLServingEngine:
             "plan_cache": plan.tile_cache_info(),
             "plans": {str(b): {k: list(v) for k, v in p.items()}
                       for b, p in self.plans.items()},
+            "plan_sources": {str(b): dict(s)
+                             for b, s in self.plan_sources.items()},
             "requests": [{
                 "uid": r.uid, "outcome": r.outcome, "bucket": r.bucket,
                 "ladder": r.ladder, "degraded": r.degraded,

@@ -1,0 +1,17 @@
+"""Empirical plan autotuning (ISSUE 9): measured-time tile/cadence
+search (``autotune``) + the versioned platform-keyed winner cache
+(``cache``) that ``kernels.plan.resolve_tiles`` consults before the
+analytic Sec. 3.2 chooser.  See docs/autotuning.md.
+"""
+from .autotune import measure_best_of, tune_deform_conv
+from .cache import (CACHE_VERSION, DEFAULT_CACHE_PATH, TileCache,
+                    TileCacheError, active_tile_cache, cache_info,
+                    entry_key, install_tile_cache, load_tile_cache,
+                    reset_cache_warnings, tile_cache_scope, warn_once)
+
+__all__ = [
+    "CACHE_VERSION", "DEFAULT_CACHE_PATH", "TileCache", "TileCacheError",
+    "active_tile_cache", "cache_info", "entry_key", "install_tile_cache",
+    "load_tile_cache", "measure_best_of", "reset_cache_warnings",
+    "tile_cache_scope", "tune_deform_conv", "warn_once",
+]

@@ -1,0 +1,333 @@
+"""Measured-time autotuner (ISSUE 9): cache round-trip, resilience
+fallback (corrupt/version-mismatch files warn once and go analytic),
+platform-key isolation, resolve_tiles/bounded-backward consumption,
+the platform switch, and the serving engine reading tuned plans."""
+import json
+import logging
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.tiling import (KernelTiles, LayerShape, choose_kernel_tiles,
+                               neighbor_kernel_tiles, zerocopy_vmem_bytes)
+from repro.kernels import ops, plan
+from repro.launch.platform import (current_platform, platform_scope,
+                                   set_platform)
+from repro.tune import (CACHE_VERSION, TileCache, TileCacheError,
+                        active_tile_cache, entry_key, install_tile_cache,
+                        load_tile_cache, reset_cache_warnings,
+                        tile_cache_scope, tune_deform_conv)
+
+
+@pytest.fixture(autouse=True)
+def clean_tune_state():
+    reset_cache_warnings()
+    install_tile_cache(None)
+    plan.reset_tuned_stats()
+    yield
+    reset_cache_warnings()
+    install_tile_cache(None)
+    plan.reset_tuned_stats()
+
+
+def _entry(tiles, **extra):
+    return {"tiles": list(tiles), "cores": 1, **extra}
+
+
+def _key(**over):
+    kw = dict(h=8, w=8, c=8, m=8, offset_bound=2.0, objective="forward",
+              dtype=None, cores=1, platform="interpret")
+    kw.update(over)
+    return kw
+
+
+# ---------------------------------------------------------------------------
+# Cache file round-trip + resilience contract
+# ---------------------------------------------------------------------------
+
+def test_cache_round_trip(tmp_path):
+    cache = TileCache()
+    cache.put(_entry((1, 8, 4, 4), dw_flush_every_step=False), **_key())
+    path = str(tmp_path / "TUNED_tiles.json")
+    assert cache.save(path) == path
+    loaded = TileCache.load(path)
+    assert len(loaded) == 1
+    got = loaded.lookup(**_key())
+    assert got["tiles"] == [1, 8, 4, 4]
+    assert got["dw_flush_every_step"] is False
+    # missing key -> None, not a raise
+    assert loaded.lookup(**_key(cores=2)) is None
+    # on-disk payload is versioned
+    payload = json.loads((tmp_path / "TUNED_tiles.json").read_text())
+    assert payload["version"] == CACHE_VERSION
+
+
+def test_missing_file_is_cold_and_silent(tmp_path, caplog):
+    with caplog.at_level(logging.WARNING, logger="repro.tune"):
+        assert load_tile_cache(str(tmp_path / "nope.json")) is None
+    assert not caplog.records
+
+
+def test_corrupt_cache_warns_once_and_falls_back(tmp_path, caplog):
+    path = tmp_path / "TUNED_tiles.json"
+    path.write_text("{not json")
+    with pytest.raises(TileCacheError):
+        TileCache.load(str(path))
+    with caplog.at_level(logging.WARNING, logger="repro.tune"):
+        assert load_tile_cache(str(path)) is None
+        assert load_tile_cache(str(path)) is None      # second load silent
+    warned = [r for r in caplog.records if "falling back" in r.message]
+    assert len(warned) == 1
+    # reset re-arms the warning (tests / long-lived processes)
+    reset_cache_warnings()
+    with caplog.at_level(logging.WARNING, logger="repro.tune"):
+        assert load_tile_cache(str(path)) is None
+    assert len([r for r in caplog.records
+                if "falling back" in r.message]) == 2
+    # installing a corrupt path installs no cache — analytic fallback
+    install_tile_cache(str(path))
+    assert active_tile_cache() is None
+
+
+def test_version_mismatch_falls_back(tmp_path, caplog):
+    path = tmp_path / "TUNED_tiles.json"
+    path.write_text(json.dumps({"version": CACHE_VERSION + 1,
+                                "entries": {}}))
+    with caplog.at_level(logging.WARNING, logger="repro.tune"):
+        assert load_tile_cache(str(path)) is None
+    assert any("version" in r.message for r in caplog.records)
+
+
+def test_schema_without_entries_mapping_raises(tmp_path):
+    path = tmp_path / "TUNED_tiles.json"
+    path.write_text(json.dumps({"version": CACHE_VERSION, "entries": []}))
+    with pytest.raises(TileCacheError, match="entries"):
+        TileCache.load(str(path))
+
+
+# ---------------------------------------------------------------------------
+# Platform keys + the platform switch
+# ---------------------------------------------------------------------------
+
+def test_platform_key_isolation():
+    cache = TileCache()
+    cache.put(_entry((1, 8, 4, 4)), **_key(platform="xla_ref"))
+    with tile_cache_scope(cache):
+        assert current_platform() == "interpret"
+        # an xla_ref-keyed entry is never served under interpret
+        assert plan.tile_source(8, 8, 8, 8, offset_bound=2.0,
+                                objective="forward") == "analytic"
+        with platform_scope("xla_ref"):
+            assert plan.tile_source(8, 8, 8, 8, offset_bound=2.0,
+                                    objective="forward") == "tuned"
+
+
+def test_set_platform_validates():
+    with pytest.raises(ValueError, match="unknown platform"):
+        set_platform("gpu")
+    if jax.default_backend() != "tpu":
+        with pytest.raises(ValueError, match="Mosaic"):
+            set_platform("tpu")
+
+
+def test_xla_ref_platform_parity():
+    key = jax.random.PRNGKey(3)
+    x = jax.random.normal(key, (1, 8, 8, 8), jnp.float32)
+    offs = jax.random.normal(jax.random.fold_in(key, 1),
+                             (1, 8, 8, 18), jnp.float32) * 2
+    wgt = jax.random.normal(jax.random.fold_in(key, 2),
+                            (9, 8, 8), jnp.float32) * 0.1
+
+    def loss(a, b, ww):
+        return jnp.sum(ops.deform_conv(a, b, ww, offset_bound=2.0))
+
+    y_interp = ops.deform_conv(x, offs, wgt, offset_bound=2.0)
+    g_interp = jax.grad(loss, argnums=(0, 1, 2))(x, offs, wgt)
+    with platform_scope("xla_ref"):
+        y_ref = ops.deform_conv(x, offs, wgt, offset_bound=2.0)
+        g_ref = jax.grad(loss, argnums=(0, 1, 2))(x, offs, wgt)
+    np.testing.assert_allclose(np.asarray(y_interp), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+    for gi, gr in zip(g_interp, g_ref):
+        np.testing.assert_allclose(np.asarray(gi), np.asarray(gr),
+                                   rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# resolve_tiles consumption
+# ---------------------------------------------------------------------------
+
+def test_resolve_tiles_reads_tuned_entry():
+    cache = TileCache()
+    cache.put(_entry((1, 8, 4, 4)), **_key())
+    with tile_cache_scope(cache):
+        got = plan.resolve_tiles(8, 8, 8, 8, kernel_size=3, stride=1,
+                                 dilation=1, offset_bound=2.0,
+                                 tile_h=None, tile_w=None, tile_c=None,
+                                 tile_m=None, objective="forward")
+        assert got == (1, 8, 4, 4)
+        info = plan.tile_cache_info()
+        assert info["tuned_hits"] == 1
+        assert info["tuned_cache"]["installed"]
+    # scope restored: the same resolution goes analytic again
+    plan.reset_tuned_stats()
+    analytic = plan.resolve_tiles(8, 8, 8, 8, kernel_size=3, stride=1,
+                                  dilation=1, offset_bound=2.0,
+                                  tile_h=None, tile_w=None, tile_c=None,
+                                  tile_m=None, objective="forward")
+    kt = choose_kernel_tiles(LayerShape(h=8, w=8, c_in=8, c_out=8,
+                                        offset_bound=2.0),
+                             objective="forward")
+    assert analytic == (kt.tile_h, kt.tile_w, kt.tile_c, kt.tile_m)
+    assert plan.tile_cache_info()["analytic_resolves"] == 1
+
+
+def test_explicit_tiles_beat_tuned_entry():
+    cache = TileCache()
+    cache.put(_entry((1, 8, 4, 4)), **_key())
+    with tile_cache_scope(cache):
+        got = plan.resolve_tiles(8, 8, 8, 8, kernel_size=3, stride=1,
+                                 dilation=1, offset_bound=2.0,
+                                 tile_h=2, tile_w=8, tile_c=8, tile_m=8,
+                                 objective="forward")
+    assert got == (2, 8, 8, 8)
+
+
+def test_incompatible_entry_warns_once_and_goes_analytic(caplog):
+    cache = TileCache()
+    # tile_c=3 does not divide C=8 — a stale/foreign entry
+    cache.put(_entry((1, 8, 3, 4)), **_key())
+    with tile_cache_scope(cache), \
+            caplog.at_level(logging.WARNING, logger="repro.tune"):
+        for _ in range(2):
+            plan.resolve_tiles.cache_clear()
+            got = plan.resolve_tiles(8, 8, 8, 8, kernel_size=3, stride=1,
+                                     dilation=1, offset_bound=2.0,
+                                     tile_h=None, tile_w=None, tile_c=None,
+                                     tile_m=None, objective="forward")
+        kt = choose_kernel_tiles(LayerShape(h=8, w=8, c_in=8, c_out=8,
+                                            offset_bound=2.0),
+                                 objective="forward")
+        assert got == (kt.tile_h, kt.tile_w, kt.tile_c, kt.tile_m)
+        assert plan.tile_cache_info()["tuned_incompatible"] == 2
+    assert len([r for r in caplog.records
+                if "incompatible" in r.message]) == 1
+
+
+def test_bounded_backward_reads_tuned_cadence():
+    # A tuned training entry pins dw_flush_every_step=False; the
+    # cadence-parity property (test_deform_conv_grad) makes that a pure
+    # perf knob, so the pullback must stay bit-compatible with the
+    # default-cadence pullback.
+    cache = TileCache()
+    cache.put(_entry((4, 8, 2, 2), dw_flush_every_step=False),
+              **_key(objective="training"))
+    key = jax.random.PRNGKey(5)
+    x = jax.random.normal(key, (1, 8, 8, 8), jnp.float32)
+    offs = jax.random.normal(jax.random.fold_in(key, 1),
+                             (1, 8, 8, 18), jnp.float32) * 2
+    wgt = jax.random.normal(jax.random.fold_in(key, 2),
+                            (9, 8, 8), jnp.float32) * 0.1
+
+    def grads(a, b, ww):
+        return jax.grad(lambda xx, oo, wv: jnp.sum(ops.deform_conv(
+            xx, oo, wv, offset_bound=2.0)), argnums=(0, 1, 2))(a, b, ww)
+
+    g_default = grads(x, offs, wgt)
+    with tile_cache_scope(cache):
+        g_tuned = grads(x, offs, wgt)
+        assert plan.tile_cache_info()["tuned_hits"] >= 1
+    for gd, gt in zip(g_default, g_tuned):
+        np.testing.assert_allclose(np.asarray(gd), np.asarray(gt),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_deform_conv_rejects_cadence_off_kernel_path():
+    x = jnp.zeros((1, 8, 8, 8), jnp.float32)
+    offs = jnp.zeros((1, 8, 8, 18), jnp.float32)
+    wgt = jnp.zeros((9, 8, 8), jnp.float32)
+    with pytest.raises(ValueError, match="dw_flush_every_step"):
+        ops.deform_conv(x, offs, wgt, dw_flush_every_step=True)
+
+
+# ---------------------------------------------------------------------------
+# Candidate enumeration + the tuner end-to-end
+# ---------------------------------------------------------------------------
+
+def test_neighbor_kernel_tiles_properties():
+    shape = LayerShape(h=16, w=16, c_in=32, c_out=32, offset_bound=2.0)
+    seed = choose_kernel_tiles(shape, objective="training")
+    cands = neighbor_kernel_tiles(shape, seed, objective="training")
+    assert cands[0] == KernelTiles(seed.tile_h, seed.tile_w,
+                                   seed.tile_c, seed.tile_m)
+    assert len(cands) == len(set(cands)) > 1
+    from repro.core.tiling import TileConfig, V5E_VMEM_BYTES, \
+        zerocopy_bwd_vmem_bytes
+    for kt in cands:
+        assert 32 % kt.tile_c == 0 and 32 % kt.tile_m == 0
+        t = TileConfig(kt.tile_h, kt.tile_w, kt.tile_c, kt.tile_m)
+        assert max(zerocopy_vmem_bytes(shape, t),
+                   zerocopy_bwd_vmem_bytes(shape, t)) <= V5E_VMEM_BYTES
+
+
+def test_tune_deform_conv_end_to_end():
+    cache = TileCache()
+    res = tune_deform_conv(h=8, w=8, c=8, m=8, batch=1, offset_bound=2.0,
+                           objective="forward", reps=1, max_candidates=2,
+                           cache=cache)
+    assert res["tuned_vs_analytic_ratio"] >= 1.0     # argmin incl. seed
+    assert res["platform"] == current_platform()
+    assert res["n_candidates"] >= 1
+    entry = cache.lookup(**_key(platform=current_platform()))
+    assert entry is not None and len(entry["tiles"]) == 4
+    # the persisted winner round-trips into the resolver
+    with tile_cache_scope(cache):
+        got = plan.resolve_tiles(8, 8, 8, 8, kernel_size=3, stride=1,
+                                 dilation=1, offset_bound=2.0,
+                                 tile_h=None, tile_w=None, tile_c=None,
+                                 tile_m=None, objective="forward")
+    assert list(got) == entry["tiles"]
+
+
+# ---------------------------------------------------------------------------
+# Serving engine consumption
+# ---------------------------------------------------------------------------
+
+def test_engine_warmup_reads_tuned_cache():
+    from repro.models import resnet_dcn as R
+    from repro.serve import (DCLServeConfig, DCLServingEngine,
+                             bucket_layer_dims)
+
+    bucket = 32
+    cfg = R.ResNetDCNConfig(
+        stage_sizes=(1, 1, 1, 1), widths=(16, 32, 64, 128), stem_width=8,
+        num_dcn=2, num_classes=4, img_size=bucket, offset_bound=2.0,
+        use_kernel=True)
+    params = R.init_params(jax.random.PRNGKey(0), cfg)
+    dims = bucket_layer_dims(cfg, bucket)
+    assert dims                                   # model has DCL layers
+    cache = TileCache()
+    tuned = {}
+    for name, d in dims.items():
+        shape = LayerShape(h=d["h"], w=d["w"], c_in=d["c"], c_out=d["m"],
+                           stride=d.get("stride", 1), offset_bound=2.0)
+        kt = choose_kernel_tiles(shape, objective="forward")
+        # a deliberately non-analytic (but valid) tile: halve tile_h
+        th = max(1, kt.tile_h // 2)
+        tuned[name] = (th, kt.tile_w, kt.tile_c, kt.tile_m)
+        cache.put(_entry(tuned[name]),
+                  **_key(h=d["h"], w=d["w"], c=d["c"], m=d["m"],
+                         stride=d.get("stride", 1)))
+    with tile_cache_scope(cache):
+        plan.reset_tuned_stats()
+        eng = DCLServingEngine(
+            params, cfg, DCLServeConfig(buckets=(bucket,), slots=2,
+                                        quant="fp32_kernel"))
+        tel = eng.telemetry()
+    assert eng.plans[bucket] == tuned             # warm-up read the cache
+    assert tel["plan_cache"]["tuned_hits"] >= len(dims)
+    assert tel["plan_cache"]["tuned_cache"]["installed"]
+    srcs = tel["plan_sources"][str(bucket)]
+    assert srcs and set(srcs.values()) == {"tuned"}
