@@ -319,7 +319,100 @@ def tune_records(*, smoke: bool = False,
         "reps": reps,
         "tuner_cache_path": cache_path,
     })
+    # The forward tuner sweeps the serving quant modes by default
+    # (ISSUE 10 satellite) — record each quant-keyed winner so the
+    # trajectory JSON carries the int8/int8_chain tuned plans and the
+    # tuned >= analytic gate covers them too.
+    for qmode, qrec in fwd.get("quant_sweep", {}).items():
+        out.append({
+            "name": f"tuned_deform_conv_fused_32c_{qmode}",
+            "quant": qmode,
+            "tuned_us_fwd": qrec["best"]["us"],
+            "analytic_us_fwd": qrec["analytic"]["us"],
+            "tuned_vs_analytic_ratio": qrec["tuned_vs_analytic_ratio"],
+            "tuned_tiles": qrec["best"]["tiles"],
+            "analytic_tiles": qrec["analytic"]["tiles"],
+            "platform": qrec["platform"],
+            "n_candidates": qrec["n_candidates"],
+            "reps": reps,
+            "tuner_cache_path": cache_path,
+        })
     return out
+
+
+SPATIAL_MODELED_GATE = 1.5   # modeled per-device win floor at 2 shards
+
+
+def spatial_records(*, smoke: bool = False,
+                    shards: tuple[int, ...] = (1, 2, 4)) -> list[dict]:
+    """ISSUE 10 (``run.py --spatial``): spatial-sharding records.
+
+    One *measured* record — the bounded forward at 1/2/4 height shards
+    over real (or ``--xla_force_host_platform_device_count``-virtual)
+    devices, ``us_spatial_{s}shard`` wall time plus the exchanged
+    ``halo_bytes_{s}shard`` — shard counts exceeding the available
+    device count are skipped with a note, never faked.  And one
+    *modeled* record: ``perf_model.spatial_sharding_report`` on the
+    megapixel-class default shape, carrying the per-device traffic
+    ratio and modeled speedup that ``run.py`` gates at
+    ``SPATIAL_MODELED_GATE`` for 2 shards.
+    """
+    import numpy as np
+    from jax.sharding import Mesh
+
+    from repro.core.perf_model import spatial_sharding_report
+    from repro.core.tiling import spatial_halo_bytes, spatial_halo_rows
+    from repro.distributed.sharding import use_rules
+
+    h, w, c, m = (16, 16, 16, 16) if smoke else (32, 32, 64, 64)
+    bound = 2.0
+    key = jax.random.PRNGKey(17)
+    x = jax.random.normal(key, (1, h, w, c), jnp.float32)
+    offs = jax.random.normal(jax.random.fold_in(key, 1),
+                             (1, h, w, 18), jnp.float32) * 2
+    wgt = jax.random.normal(jax.random.fold_in(key, 2),
+                            (9, c, m), jnp.float32) * 0.1
+    shape = LayerShape(h=h, w=w, c_in=c, c_out=m, offset_bound=bound)
+    rec: dict = {
+        "name": f"dcl_spatial_{c}c",
+        "offset_bound": bound,
+        "halo_rows": spatial_halo_rows(kernel_size=3, dilation=1,
+                                       offset_bound=bound),
+        "devices_available": jax.device_count(),
+        "us_unsharded": _time(
+            lambda a, b, ww: ops.deform_conv(a, b, ww, offset_bound=bound),
+            x, offs, wgt),
+    }
+    skipped = []
+    for s in shards:
+        if s > jax.device_count():
+            skipped.append(s)
+            continue
+        mesh = Mesh(np.asarray(jax.devices()[:s]), ("model",))
+        with use_rules(mesh=mesh):
+            rec[f"us_spatial_{s}shard"] = _time(
+                lambda a, b, ww: ops.deform_conv(
+                    a, b, ww, offset_bound=bound, shard_spatial=True),
+                x, offs, wgt)
+        rec[f"halo_bytes_{s}shard"] = spatial_halo_bytes(shape, shards=s)
+    if skipped:
+        rec["note"] = (
+            f"shard counts {skipped} skipped: only "
+            f"{jax.device_count()} device(s) — run under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=4 (the "
+            f"spatial-4dev CI job) for the full sweep")
+
+    modeled = spatial_sharding_report()
+    mrec: dict = {"name": "dcl_spatial_modeled_megapixel"}
+    for k, v in modeled.items():
+        if k == "shape":
+            mrec["shape"] = f"{v.h}x{v.w}x{v.c_in}->{v.c_out}" \
+                            f"@B={v.offset_bound}"
+        elif k.startswith("tiles_"):
+            mrec[k] = str(v)
+        else:
+            mrec[k] = v
+    return [rec, mrec]
 
 
 def obs_overhead_record(*, reps: int = 7) -> dict:
@@ -580,6 +673,40 @@ def run(*, smoke: bool = False, precision: str = "both",
                 f"ratio={r['tuned_vs_analytic_ratio']:.2f}x;"
                 f"tuned_tiles={tuple(r['tuned_tiles'])};"
                 f"platform={r['platform']}")
+            continue
+        if str(r.get("name", "")).startswith("tuned_deform_conv_fused_") \
+                and "quant" in r:
+            rows.append(
+                f"kernel/{r['name']},{r['tuned_us_fwd']:.0f},"
+                f"quant={r['quant']};"
+                f"analytic={r['analytic_us_fwd']:.0f}us;"
+                f"ratio={r['tuned_vs_analytic_ratio']:.2f}x;"
+                f"tuned_tiles={tuple(r['tuned_tiles'])};"
+                f"platform={r['platform']}")
+            continue
+        if str(r.get("name", "")).startswith("dcl_spatial_") \
+                and "us_unsharded" in r:
+            parts = [f"unsharded={r['us_unsharded']:.0f}us",
+                     f"halo_rows={r['halo_rows']}",
+                     f"devices={r['devices_available']}"]
+            shard_keys = sorted(k for k in r if k.startswith("us_spatial_"))
+            for k in shard_keys:
+                parts.append(f"{k.removeprefix('us_')}={r[k]:.0f}us")
+            if "note" in r:
+                parts.append("partial-sweep")
+            first = r[shard_keys[0]] if shard_keys else r["us_unsharded"]
+            rows.append(f"kernel/{r['name']},{first:.0f}," + ";".join(parts))
+            continue
+        if r.get("name") == "dcl_spatial_modeled_megapixel":
+            rows.append(
+                f"kernel/{r['name']},0,"
+                f"shape={r['shape']};halo_rows={r['halo_rows']};"
+                f"traffic_ratio_2shard={r['traffic_ratio_2shard']:.2f}x;"
+                f"modeled_speedup_2shard="
+                f"{r['modeled_speedup_2shard']:.2f}x;"
+                f"modeled_speedup_4shard="
+                f"{r['modeled_speedup_4shard']:.2f}x;"
+                f"halo_bytes_2shard={r['halo_bytes_2shard'] / 1e6:.2f}MB")
             continue
         if r.get("name") == "dcl_bwd_megacore_128c":
             rows.append(

@@ -182,6 +182,28 @@ def gate_chain_traffic(recs: list[dict]) -> int:
     return failures
 
 
+def gate_spatial(recs: list[dict]) -> int:
+    """Spatial-sharding acceptance gate (ISSUE 10): on the modeled
+    megapixel-class record, both the per-device forward traffic ratio
+    AND the modeled speedup (halo charged at ICI bandwidth) must be >=
+    SPATIAL_MODELED_GATE at 2 shards — analytic numbers, no noise
+    tolerance.  Returns #failures."""
+    from benchmarks.kernel_bench import SPATIAL_MODELED_GATE
+    failures = 0
+    for r in recs:
+        if r.get("name") != "dcl_spatial_modeled_megapixel":
+            continue
+        for metric in ("traffic_ratio_2shard", "modeled_speedup_2shard"):
+            v = r[metric]
+            ok = v >= SPATIAL_MODELED_GATE
+            print(f"bench/gate_spatial_{metric},0,"
+                  f"{metric}={v:.2f}x"
+                  f"{'>=' if ok else '<'}{SPATIAL_MODELED_GATE}x"
+                  f"{'' if ok else ';REGRESSION'}")
+            failures += 0 if ok else 1
+    return failures
+
+
 def gate_serve(payload: dict) -> int:
     """Serving throughput gates (PR 7).  Returns #failures.
 
@@ -234,6 +256,12 @@ def main(argv=None) -> None:
                     help="run the serving-engine bench instead: per-bucket "
                          "p50/p99/QPS -> BENCH_serve.json + the >= 1.3x "
                          "chained-int8 throughput gate")
+    ap.add_argument("--spatial", action="store_true",
+                    help="add the spatial-sharding records (ISSUE 10): "
+                         "us_spatial_{1,2,4}shard + halo bytes (shard "
+                         "counts above the device count are skipped with "
+                         "a note) and the modeled megapixel record with "
+                         "the >= 1.5x 2-shard gate")
     ap.add_argument("--tune", action="store_true",
                     help="run the measured-time autotuner (repro.tune): "
                          "tuned_us_*/tuned_vs_analytic_ratio records, the "
@@ -280,6 +308,9 @@ def main(argv=None) -> None:
                                                 precision=args.precision,
                                                 chain=args.chain))
         kernel_recs.append(kernel_bench.obs_overhead_record())
+        if args.spatial:
+            kernel_recs.extend(kernel_bench.spatial_records(
+                smoke=args.smoke))
         if args.tune:
             os.makedirs(args.out, exist_ok=True)
             kernel_recs.extend(kernel_bench.tune_records(
@@ -340,6 +371,7 @@ def main(argv=None) -> None:
         failures += gate_zero_copy_regression(kernel_recs)
         failures += gate_chain_traffic(kernel_recs)
         failures += gate_tuned(kernel_recs)
+        failures += gate_spatial(kernel_recs)
     except Exception:  # noqa: BLE001
         failures += 1
         print("bench/json,nan,ERROR")

@@ -29,8 +29,10 @@ import math
 from .tiling import (LayerShape, TileConfig, V5E_HBM_BW, V5E_ICI_BW,
                      choose_kernel_tiles, dcl_backward_hbm_bytes,
                      dcl_chain_hbm_bytes, dcl_dataflow_hbm_bytes,
-                     dcl_total_hbm_bytes, dcl_train_hbm_bytes,
-                     input_buffer_size, receptive_field, PAPER_TILES)
+                     dcl_spatial_hbm_bytes, dcl_total_hbm_bytes,
+                     dcl_train_hbm_bytes, input_buffer_size,
+                     receptive_field, spatial_halo_bytes,
+                     spatial_halo_rows, PAPER_TILES)
 
 # ---------------------------------------------------------------------------
 # Calibration constants
@@ -439,6 +441,71 @@ def parallel_training_report(*, h: int = 64, w: int = 64, c: int = 128,
         "modeled_step_sec_sharded": t_dev,
         "device_speedup": t_single / max(t_dev, 1e-30),
     }
+
+
+def spatial_sharding_report(shape: LayerShape | None = None, *,
+                            shards: tuple[int, ...] = (1, 2, 4),
+                            dilation: int = 1,
+                            bytes_per_elem: int = 4) -> dict:
+    """Modeled single-image latency scaling of one bounded DCL under
+    spatial (height-axis) sharding (ISSUE 10, EXPERIMENTS.md §Spatial
+    sharding).
+
+    The default shape is a megapixel-class early layer
+    (1024x1024x64 -> 64, B = 2.0) — the regime the spatial path
+    targets: batch parallelism has nothing to split at batch 1, but
+    each of ``s`` devices streams only ``H/s`` rows from its own HBM
+    plus one bounded halo exchange (``2 * halo * W * C`` bytes over
+    ICI, halo = dilation*(K//2) + ceil(B) + 1 rows per edge).
+
+    Per shard count ``s`` the report carries the per-device forward
+    HBM bytes at the *locally* resolved chooser tiles
+    (``fwd_hbm_bytes_{s}shard`` — includes the halo payload, matching
+    ``tiling.dcl_spatial_hbm_bytes``), the exchange payload
+    (``halo_bytes_{s}shard``), the single-device/per-device traffic
+    ratio (``traffic_ratio_{s}shard``), and the modeled HBM-time
+    speedup with the halo charged at ICI bandwidth
+    (``modeled_speedup_{s}shard``).  The speedup undershoots the
+    traffic ratio exactly by the ICI term — honest about the
+    communication the split buys.
+    """
+    if shape is None:
+        shape = LayerShape(h=1024, w=1024, c_in=64, c_out=64,
+                           offset_bound=2.0)
+    halo = spatial_halo_rows(kernel_size=shape.kernel_size,
+                             dilation=dilation,
+                             offset_bound=shape.offset_bound)
+    kw = dict(dataflow="zero_copy", dilation=dilation,
+              bytes_per_elem=bytes_per_elem)
+    kt1 = choose_kernel_tiles(shape, dilation=dilation,
+                              objective="forward")
+    t1 = TileConfig(t_h=kt1.tile_h, t_w=kt1.tile_w, t_n=kt1.tile_c,
+                    t_m=kt1.tile_m)
+    base = dcl_total_hbm_bytes(shape, t1, **kw)
+    t_single = base / V5E_HBM_BW
+    out = {
+        "shape": shape,
+        "halo_rows": halo,
+        "fwd_hbm_bytes_single": base,
+        "modeled_us_single": t_single * 1e6,
+    }
+    for s in shards:
+        local = dataclasses.replace(shape, h=shape.h // s)
+        ktl = choose_kernel_tiles(local, dilation=dilation,
+                                  objective="forward")
+        tl = TileConfig(t_h=ktl.tile_h, t_w=ktl.tile_w, t_n=ktl.tile_c,
+                        t_m=ktl.tile_m)
+        per_dev = dcl_spatial_hbm_bytes(shape, tl, shards=s, **kw)
+        halo_b = spatial_halo_bytes(shape, shards=s, dilation=dilation,
+                                    bytes_per_elem=bytes_per_elem)
+        t_dev = (per_dev - halo_b) / V5E_HBM_BW + halo_b / V5E_ICI_BW
+        out[f"tiles_{s}shard"] = tl
+        out[f"fwd_hbm_bytes_{s}shard"] = per_dev
+        out[f"halo_bytes_{s}shard"] = halo_b
+        out[f"traffic_ratio_{s}shard"] = base / max(per_dev, 1)
+        out[f"modeled_us_{s}shard"] = t_dev * 1e6
+        out[f"modeled_speedup_{s}shard"] = t_single / max(t_dev, 1e-30)
+    return out
 
 
 # ---------------------------------------------------------------------------

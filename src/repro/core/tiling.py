@@ -406,6 +406,74 @@ def dcl_chain_hbm_bytes(shape: LayerShape, t: TileConfig, *,
     return layers * per_layer + head_quant + tail_fp32
 
 
+def spatial_halo_rows(*, kernel_size: int, dilation: int = 1,
+                      offset_bound: float) -> int:
+    """Input rows each height-shard neighbor must contribute for the
+    spatially sharded bounded DCL (``distributed.spatial``).
+
+    An output row ``t`` of the bounded kernel samples original input
+    rows in ``[t*s - (pad + hb), t*s + pad + hb + 1]`` where
+    ``pad = dilation*(K//2)`` is the 'same' conv padding, ``hb =
+    ceil(B)`` the Eq. 5 offset bound, and the ``+1`` the bilinear
+    ``x0+1`` corner.  The symmetric halo that covers both directions is
+
+        halo = dilation*(K//2) + ceil(B) + 1
+
+    which for ``dilation=1`` and odd ``K`` is exactly the paper-derived
+    ``ceil(B) + ceil(K/2)`` bound — the same Eq. 6 locality argument
+    that sizes the on-chip band, applied across devices.  This is the
+    single source of the halo algebra: ``distributed.spatial`` and the
+    traffic model below both delegate here so the exchange and its
+    model can never disagree.
+    """
+    if kernel_size < 1 or dilation < 1:
+        raise ValueError(f"kernel_size={kernel_size}/dilation={dilation} "
+                         f"must be >= 1")
+    return dilation * (kernel_size // 2) \
+        + int(math.ceil(float(offset_bound))) + 1
+
+
+def spatial_halo_bytes(shape: LayerShape, *, shards: int,
+                       dilation: int = 1, bytes_per_elem: int = 4) -> int:
+    """Per-device halo-exchange bytes of one height-sharded DCL layer:
+    ``2 * halo_rows * W * C`` (one up + one down ``lax.ppermute`` per
+    layer; edge shards receive zeros for free).  Zero at 1 shard —
+    there is no exchange to pay."""
+    if shards < 1:
+        raise ValueError(f"shards={shards} must be >= 1")
+    if shards == 1:
+        return 0
+    halo = spatial_halo_rows(kernel_size=shape.kernel_size,
+                             dilation=dilation,
+                             offset_bound=shape.offset_bound)
+    return 2 * halo * shape.w * shape.c_in * bytes_per_elem
+
+
+def dcl_spatial_hbm_bytes(shape: LayerShape, t: TileConfig, *,
+                          shards: int, dataflow: str = "zero_copy",
+                          batch: int = 1, dilation: int = 1,
+                          bytes_per_elem: int = 4) -> int:
+    """Per-device whole-layer traffic of the height-sharded bounded DCL:
+    the per-shard layer traffic (the shard's ``H/shards`` rows through
+    ``dcl_total_hbm_bytes``) plus the ``2*halo_rows*W*C`` halo-exchange
+    bytes of the one up/down ``ppermute`` pair.  ``shape`` is the
+    GLOBAL layer shape; divisibility follows the runtime's
+    ``check_height_split`` contract (``H % (stride*shards) == 0``)."""
+    if shards < 1:
+        raise ValueError(f"shards={shards} must be >= 1")
+    if shape.h % (shape.stride * shards) != 0:
+        raise ValueError(
+            f"shards={shards} does not evenly divide H={shape.h} at "
+            f"stride={shape.stride}; the spatial shard_map needs equal "
+            f"per-device row blocks (H % (stride*shards) == 0)")
+    local = dataclasses.replace(shape, h=shape.h // shards)
+    return (dcl_total_hbm_bytes(local, t, dataflow=dataflow, batch=batch,
+                                dilation=dilation,
+                                bytes_per_elem=bytes_per_elem)
+            + spatial_halo_bytes(shape, shards=shards, dilation=dilation,
+                                 bytes_per_elem=bytes_per_elem))
+
+
 def dcl_backward_hbm_bytes(shape: LayerShape, t: TileConfig, *,
                            dataflow: str = "zero_copy", batch: int = 1,
                            dilation: int = 1,

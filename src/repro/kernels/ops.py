@@ -84,6 +84,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.deform_conv import DCLConfig, sample_patches
 from repro.distributed.sharding import batch_mesh_axes
+from repro.distributed import spatial as _spatial
 from . import plan as _plan
 from .deform_sample import deform_sample_banded, deform_sample_zerocopy
 from .matmul import matmul  # re-export  # noqa: F401
@@ -487,7 +488,7 @@ _deform_conv_sharded.defvjp(_deform_conv_sharded_fwd,
     jax.jit,
     static_argnames=("kernel_size", "stride", "dilation", "offset_bound",
                      "tile_h", "tile_w", "tile_c", "tile_m", "dataflow",
-                     "precision", "cores", "shard", "interpret",
+                     "precision", "cores", "shard", "spatial", "interpret",
                      "dw_flush_every_step"))
 def _deform_conv_impl(x: Array, offsets: Array, w: Array, *,
                       kernel_size: int, stride: int, dilation: int,
@@ -496,6 +497,7 @@ def _deform_conv_impl(x: Array, offsets: Array, w: Array, *,
                       tile_c: int | None, tile_m: int | None,
                       dataflow: str, precision: str, cores: int,
                       shard: _ShardSpec | None,
+                      spatial: _spatial.SpatialSpec | None,
                       x_scale: Array | None, w_scale: Array | None,
                       interpret: bool | None,
                       dw_flush_every_step: bool | None = None) -> Array:
@@ -510,6 +512,13 @@ def _deform_conv_impl(x: Array, offsets: Array, w: Array, *,
     if precision == "int8":
         if interpret is None:
             interpret = default_interpret()
+        if spatial is not None:
+            return _spatial.spatial_int8_forward(
+                x, offsets, w, kernel_size=kernel_size, stride=stride,
+                dilation=dilation, offset_bound=offset_bound,
+                tile_h=tile_h, tile_w=tile_w, tile_c=tile_c,
+                tile_m=tile_m, x_scale=x_scale, w_scale=w_scale,
+                interpret=interpret, sspec=spatial)
         return int8_forward(
             x, offsets, w, kernel_size=kernel_size, stride=stride,
             dilation=dilation, offset_bound=offset_bound, tile_h=tile_h,
@@ -532,6 +541,8 @@ def _deform_conv_impl(x: Array, offsets: Array, w: Array, *,
                    tile_c=tile_c, tile_m=tile_m, dataflow=dataflow,
                    interpret=interpret, cores=cores,
                    dw_flush_every_step=dw_flush_every_step)
+    if spatial is not None:
+        return _spatial.deform_conv_spatial(spec, spatial, x, offsets, w)
     if shard is not None:
         return _deform_conv_sharded(spec, shard, x, offsets, w)
     return _deform_conv_bounded(spec, x, offsets, w)
@@ -571,6 +582,7 @@ def deform_conv(x: Array, offsets: Array, w: Array, *, kernel_size: int = 3,
                 precision: str = "fp32",
                 cores: int = 1,
                 shard_batch: bool | None = None,
+                shard_spatial: bool | None = None,
                 x_scale: Array | None = None,
                 w_scale: Array | None = None,
                 interpret: bool | None = None,
@@ -610,6 +622,19 @@ def deform_conv(x: Array, offsets: Array, w: Array, *, kernel_size: int = 3,
     with calibrated values (``repro.quant.calibrate``); tiles resolve
     against the int8 dtype-aware budgets (4x Eq. 6 band density per
     VMEM byte).
+
+    ``shard_spatial=True`` (ISSUE 10) height-shards the bounded
+    zero-copy call over the mesh axis the 'spatial' logical axis maps
+    to (``distributed.spatial``): one ``lax.ppermute`` halo-exchange
+    pair of the statically bounded ``B + ceil(K/2)`` rows per call,
+    then the unmodified per-shard kernel — single-image latency
+    scaling for megapixel inputs.  Strictly opt-in (None/False = off);
+    requires an active mesh, ``H % (stride*shards) == 0``, and the
+    zero-copy dataflow.  Works for fp32 (differentiable — halo
+    gradients are returned to their owning shards and ``d_weights`` is
+    psummed) and int8 (inference, scales hoisted above the shard_map);
+    composes with ``shard_batch`` into a spatial x data 2-D mesh and
+    with the Megacore ``cores`` split.
     """
     # -- validation (always raises; never degraded) -------------------
     c, m = x.shape[-1], w.shape[-1]
@@ -633,6 +658,20 @@ def deform_conv(x: Array, offsets: Array, w: Array, *, kernel_size: int = 3,
                 f"(got {dataflow!r})")
 
     shard = None
+    spatial = None
+    if shard_spatial:
+        if offset_bound is None:
+            raise ValueError(
+                "shard_spatial=True requires a trained offset_bound — "
+                "the halo exchange is statically bounded by Eq. 5/6 "
+                "(B + ceil(K/2) rows); the unbounded gather baseline "
+                "has no bounded halo and partitions via GSPMD instead")
+        if dataflow != "zero_copy":
+            raise ValueError(
+                f"shard_spatial=True supports only the zero-copy "
+                f"dataflow (got {dataflow!r}); the legacy banded path "
+                f"materializes full-width bands and has no per-shard "
+                f"slab to run on")
     if offset_bound is not None and precision == "fp32":
         shard = resolve_batch_shard(x.shape[0], shard_batch=shard_batch,
                                     cores=cores)
@@ -657,6 +696,18 @@ def deform_conv(x: Array, offsets: Array, w: Array, *, kernel_size: int = 3,
                 f"the bounded fp32 kernel path (offset_bound set, "
                 f"precision='fp32') — it is the d_weights flush cadence "
                 f"of the fused backward kernel; pass None here")
+    if shard_spatial:
+        # Spatial sharding resolves AFTER the batch shard so a 2-D
+        # spatial x data mesh folds the batch axes into one shard_map
+        # (the SpatialSpec carries them; the plain batch path is then
+        # subsumed).  Validation (active mesh, even height split,
+        # halo-thin shards) raises inside resolve_spatial_shard.
+        spatial = _spatial.resolve_spatial_shard(
+            x.shape[1], shard_spatial=True, stride=stride,
+            kernel_size=kernel_size, dilation=dilation,
+            offset_bound=offset_bound,
+            batch_axes=shard.axes if shard is not None else ())
+        shard = None
 
     from repro.launch.platform import current_platform
     plat = current_platform()
@@ -676,7 +727,7 @@ def deform_conv(x: Array, offsets: Array, w: Array, *, kernel_size: int = 3,
             x, offsets, w, kernel_size=kernel_size, stride=stride,
             dilation=dilation, offset_bound=offset_bound, tile_h=tile_h,
             tile_w=tile_w, tile_c=tile_c, tile_m=tile_m, dataflow=dataflow,
-            precision=precision, cores=cores, shard=shard,
+            precision=precision, cores=cores, shard=shard, spatial=spatial,
             x_scale=x_scale, w_scale=w_scale, interpret=interpret,
             dw_flush_every_step=dw_flush_every_step)
 
@@ -691,7 +742,8 @@ def deform_conv(x: Array, offsets: Array, w: Array, *, kernel_size: int = 3,
             op="deform_conv", precision=precision, dataflow=dataflow,
             shape=tuple(x.shape), offset_bound=offset_bound,
             kernel_size=kernel_size, stride=stride, dilation=dilation,
-            m=m, cores=cores, platform=plat)
+            m=m, cores=cores, platform=plat,
+            spatial_shards=spatial.shards if spatial is not None else 1)
         out = _impl()
         _finish_dispatch(finish, out=out)
         return out

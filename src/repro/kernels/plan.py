@@ -209,8 +209,13 @@ def resolve_tiles(h: int, w: int, c: int, m: int, *, kernel_size: int,
         shape = LayerShape(h=h, w=w, c_in=c, c_out=m,
                            kernel_size=kernel_size, stride=stride,
                            offset_bound=offset_bound)
+        # The tuned cache keys "int8_chain" as its own quant entry
+        # (ISSUE 10 satellite — chained winners never leak onto the
+        # per-layer int8 path), but the analytic chooser's dtype-aware
+        # budgets only know element widths: chain bands are int8.
+        chooser_dtype = "int8" if dtype == "int8_chain" else dtype
         kt = choose_kernel_tiles(shape, dilation=dilation,
-                                 objective=objective, dtype=dtype,
+                                 objective=objective, dtype=chooser_dtype,
                                  cores=cores)
         tile_h = tile_h or kt.tile_h
         tile_w = tile_w or kt.tile_w
@@ -235,10 +240,33 @@ def spec_tiles(spec: DCSpec, x: Array, offsets: Array,
     return min(th, ho), min(tw, wo), tc, tm
 
 
+def _spatial_local_h(h: int, stride: int, spatial_shards: int, name: str,
+                     *, kernel_size: int, dilation: int,
+                     offset_bound: float) -> int:
+    """Per-shard height a spatially sharded layer resolves tiles at.
+    Applies the full split validation (ragged AND halo-thin) so an
+    incompatible shard count fails at plan-warming time — engine init —
+    not on the first sharded request."""
+    if spatial_shards <= 1:
+        return h
+    from repro.core.tiling import spatial_halo_rows
+    from repro.distributed.spatial import check_height_split
+    try:
+        check_height_split(
+            h, shards=spatial_shards, stride=stride,
+            min_rows=spatial_halo_rows(kernel_size=kernel_size,
+                                       dilation=dilation,
+                                       offset_bound=offset_bound))
+    except ValueError as e:
+        raise ValueError(f"layer {name!r}: {e}") from None
+    return h // spatial_shards
+
+
 def warm_tile_cache(layers, *, offset_bound: float, kernel_size: int = 3,
                     dilation: int = 1, objective: str = "forward",
-                    dtype: str | None = None,
-                    cores: int = 1) -> dict[str, tuple[int, int, int, int]]:
+                    dtype: str | None = None, cores: int = 1,
+                    spatial_shards: int = 1,
+                    ) -> dict[str, tuple[int, int, int, int]]:
     """Resolve (and memoize) the tile config for every named layer.
 
     ``layers`` maps a layer name to its dims
@@ -248,12 +276,23 @@ def warm_tile_cache(layers, *, offset_bound: float, kernel_size: int = 3,
     request), and every later ``deform_conv`` dispatch for the bucket
     hits the :func:`resolve_tiles` ``lru_cache``.  Returns
     ``{name: (tile_h, tile_w, tile_c, tile_m)}``.
+
+    ``spatial_shards > 1`` warms the plans the ISSUE 10 spatial path
+    will actually resolve: each shard sees the *local* height
+    ``h // spatial_shards``, so warming at the global height would
+    leave the per-shard plans cold (and the chooser sweep on the first
+    request).  Raises the friendly split error per layer when a height
+    does not divide.
     """
     resolved = {}
     for name, d in layers.items():
+        stride = d.get("stride", 1)
         resolved[name] = resolve_tiles(
-            d["h"], d["w"], d["c"], d["m"], kernel_size=kernel_size,
-            stride=d.get("stride", 1), dilation=dilation,
+            _spatial_local_h(d["h"], stride, spatial_shards, name,
+                             kernel_size=kernel_size, dilation=dilation,
+                             offset_bound=offset_bound),
+            d["w"], d["c"], d["m"], kernel_size=kernel_size,
+            stride=stride, dilation=dilation,
             offset_bound=offset_bound, tile_h=None, tile_w=None,
             tile_c=None, tile_m=None, objective=objective, dtype=dtype,
             cores=cores)
@@ -263,12 +302,16 @@ def warm_tile_cache(layers, *, offset_bound: float, kernel_size: int = 3,
 def tile_source(h: int, w: int, c: int, m: int, *, kernel_size: int = 3,
                 stride: int = 1, dilation: int = 1, offset_bound: float,
                 objective: str = "forward", dtype: str | None = None,
-                cores: int = 1) -> str:
+                cores: int = 1, spatial_shards: int = 1) -> str:
     """Provenance of one layer's resolved tiles: ``"tuned"`` when the
     installed tuned cache would supply them (a valid platform-keyed
     entry exists), ``"analytic"`` otherwise — the serving engine
     records this per bucket plan so telemetry shows which plans came
-    from the autotuner vs the Sec. 3.2 chooser."""
+    from the autotuner vs the Sec. 3.2 chooser.  ``spatial_shards``
+    queries the per-shard (local-height) plan the spatial path uses."""
+    h = _spatial_local_h(h, stride, spatial_shards, "tile_source",
+                         kernel_size=kernel_size, dilation=dilation,
+                         offset_bound=offset_bound)
     entry = _tuned_lookup(h, w, c, m, kernel_size=kernel_size,
                           stride=stride, dilation=dilation,
                           offset_bound=offset_bound, objective=objective,
@@ -569,7 +612,7 @@ def chain_forward(x: Array, w: Array, w_offset: Array, b_offset: Array,
         h, w_in, c, m, kernel_size=kernel_size, stride=stride,
         dilation=dilation, offset_bound=offset_bound, tile_h=tile_h,
         tile_w=tile_w, tile_c=c, tile_m=tile_m,
-        objective="forward", dtype="int8")
+        objective="forward", dtype="int8_chain")
     th, tw = min(th, ho), min(tw, wo)
     # The chooser's VMEM feasibility was evaluated at its own free
     # tile_c; chaining pins tile_c = C, so re-check the working set the

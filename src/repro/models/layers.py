@@ -511,6 +511,7 @@ def dcl_apply(params: Mapping[str, Array], x: Array, *,
               dataflow: str = "zero_copy", quant: str = "none",
               quant_scales: Mapping[str, Any] | None = None,
               cores: int = 1, shard_batch: bool | None = None,
+              shard_spatial: bool | None = None,
               dtype: Any = jnp.float32) -> tuple[Array, Array]:
     """One DCL forward pass -> (y, o_max).
 
@@ -536,6 +537,15 @@ def dcl_apply(params: Mapping[str, Array], x: Array, *,
     ``ops.deform_conv``, including under ``quant="qat"`` (the STE
     wrappers act on replicated values outside the kernel, so the
     sharded VJP's d_weights psum is exactly the cotangent they need).
+
+    Spatial sharding (PR 10): ``shard_spatial=True`` splits the height
+    axis across the mesh axis mapped from logical ``"spatial"`` with a
+    bounded halo exchange per layer (see ``distributed.spatial``) —
+    forwarded to ``ops.deform_conv`` on the fp32-kernel, ``"qat"`` and
+    ``"int8"`` kernel branches.  It requires the kernel path (the
+    reference paths have no shard_map wrap) and is rejected by
+    ``"int8_chain"``: the chained plan stages full-height fused-offset
+    bands, so spatial serve buckets ladder from ``"int8"``.
 
     ``quant`` selects the int8 datapath modes of ``repro.quant``:
 
@@ -590,11 +600,23 @@ def dcl_apply(params: Mapping[str, Array], x: Array, *,
                 f"cores={cores} applies to the fp32 training backward "
                 f"only — the chained int8 datapath is inference, pass "
                 f"cores=1")
+        if shard_spatial:
+            raise ValueError(
+                "shard_spatial=True is not supported by the chained int8 "
+                "datapath — the fused offset stage computes offsets from "
+                "the staged band, so halo rows alone cannot reproduce "
+                "them at shard seams; use quant='int8' for spatially "
+                "sharded buckets")
         return _dcl_chain_layer(params, x, kernel_size=kernel_size,
                                 stride=stride, dilation=dilation,
                                 offset_bound=offset_bound,
                                 use_kernel=use_kernel,
                                 quant_scales=quant_scales, dtype=dtype)
+    if shard_spatial and not (use_kernel and offset_bound is not None):
+        raise ValueError(
+            "shard_spatial=True requires the bounded kernel path "
+            "(use_kernel=True with a trained offset_bound) — the "
+            "reference paths have no spatial shard_map wrap")
     cin = x.shape[-1]
     cout = params["w_deform"].shape[-1]
     cfg = DCLConfig(in_channels=cin, out_channels=cout,
@@ -626,7 +648,8 @@ def dcl_apply(params: Mapping[str, Array], x: Array, *,
                                     stride=stride, dilation=dilation,
                                     offset_bound=offset_bound,
                                     dataflow=dataflow, cores=cores,
-                                    shard_batch=shard_batch)
+                                    shard_batch=shard_batch,
+                                    shard_spatial=shard_spatial)
             else:
                 y = ref.deform_conv_fused_ref(xq, offsets, wq,
                                               kernel_size=k, stride=stride,
@@ -643,7 +666,8 @@ def dcl_apply(params: Mapping[str, Array], x: Array, *,
                                     offset_bound=offset_bound,
                                     dataflow=dataflow,
                                     precision="int8", x_scale=x_scale,
-                                    w_scale=ws)
+                                    w_scale=ws,
+                                    shard_spatial=shard_spatial)
             else:
                 y = fake_quant_dcl_reference(xc, offsets, w, kernel_size=k,
                                              stride=stride,
@@ -663,7 +687,8 @@ def dcl_apply(params: Mapping[str, Array], x: Array, *,
         y = ops.deform_conv(x, offsets, w, kernel_size=k, stride=stride,
                             dilation=dilation, offset_bound=offset_bound,
                             dataflow=dataflow, cores=cores,
-                            shard_batch=shard_batch)
+                            shard_batch=shard_batch,
+                            shard_spatial=shard_spatial)
         return y + params["b_deform"].astype(x.dtype), o_max
     y, stats = dcl_forward(params, x, cfg)
     return y, stats["o_max"]

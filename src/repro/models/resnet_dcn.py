@@ -58,6 +58,11 @@ class ResNetDCNConfig:
     # batch axes: None = auto (shard when a mesh is live and divides the
     # batch), True = require (ValueError otherwise), False = never.
     shard_batch: bool | None = None
+    # Spatial shard_map of the kernel path: split the height axis over
+    # the mesh axis mapped from logical "spatial" with a bounded halo
+    # exchange per DCL (distributed.spatial).  None/False = off,
+    # True = require (ValueError when no mesh / ragged heights).
+    shard_spatial: bool | None = None
 
     @property
     def total_blocks(self) -> int:
@@ -147,7 +152,7 @@ def _apply_dcl(params, x: Array, cfg: ResNetDCNConfig, *, stride=1,
                      use_kernel=cfg.use_kernel, dataflow=cfg.dataflow,
                      quant=cfg.quant, quant_scales=quant_scales,
                      cores=cfg.bwd_cores, shard_batch=cfg.shard_batch,
-                     dtype=cfg.dtype)
+                     shard_spatial=cfg.shard_spatial, dtype=cfg.dtype)
 
 
 def _apply_block(params, x: Array, cfg: ResNetDCNConfig, *, stride: int,

@@ -177,6 +177,45 @@ class AdmissionQueue:
         """Bucket of the oldest queued request (the next step's batch)."""
         return self.queue[0].bucket if self.queue else None
 
+    def pick_bucket(self, *, slots: int, now: float,
+                    batch_window: float = 0.0) -> int | None:
+        """Deadline-aware bucket pick (ISSUE 10): the bucket whose most
+        urgent request has the earliest deadline, instead of blind
+        head-of-line order — a full queue of lax-deadline 64px requests
+        no longer starves a tight-deadline 128px request behind them.
+
+        Buckets that can fill all ``slots`` are preferred (a full static
+        batch wastes no padded rows); among them — and among the partial
+        ones — order is (earliest deadline, oldest submit), with
+        deadline-less requests sorting last (+inf).  A *partial* bucket
+        is only eligible once its oldest request has waited at least
+        ``batch_window`` seconds, so a small window trades a bounded
+        extra wait for fuller batches (``batch_window=0`` serves
+        partials immediately — the pre-ISSUE-10 behavior).  Returns
+        None when the queue is empty or every partial batch is still
+        inside its window.
+        """
+        stats: dict[int, tuple[int, float, float]] = {}
+        for req in self.queue:
+            dl = req.deadline if req.deadline is not None else float("inf")
+            sub = req.submitted_at if req.submitted_at is not None \
+                else float("inf")
+            count, best_dl, oldest = stats.get(
+                req.bucket, (0, float("inf"), float("inf")))
+            stats[req.bucket] = (count + 1, min(best_dl, dl),
+                                 min(oldest, sub))
+        if not stats:
+            return None
+        order = sorted(stats, key=lambda b: (stats[b][1], stats[b][2]))
+        for b in order:
+            if stats[b][0] >= slots:
+                return b
+        for b in order:
+            oldest = stats[b][2]
+            if batch_window <= 0.0 or now - oldest >= batch_window:
+                return b
+        return None
+
     def take(self, bucket: int, limit: int) -> list[DetRequest]:
         """Pop up to ``limit`` requests for ``bucket``, preserving FIFO
         order; requests for other buckets stay queued in place."""

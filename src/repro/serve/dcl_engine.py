@@ -40,14 +40,18 @@ collapse to trace time.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import itertools
 import time
 from typing import Any, Callable, Mapping
 
+import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh
 
+from repro.distributed.sharding import use_rules
 from repro.kernels import ops, plan
 from repro.models import resnet_dcn as R
 from repro.obs import (DispatchRecorder, DivergenceTracker, MetricsRegistry,
@@ -76,6 +80,16 @@ class DCLServeConfig:
     max_retries: int = 2             # same-rung replays before degrading
     retry_backoff: float = 0.0       # seconds; doubles per consecutive retry
     default_deadline: float | None = None   # seconds from submit; None = off
+    # Deadline-aware scheduling (ISSUE 10): a partial batch is held up
+    # to batch_window seconds for more same-bucket arrivals; 0.0 serves
+    # partials immediately (the pre-ISSUE-10 behavior).
+    batch_window: float = 0.0
+    # Spatial sharding (ISSUE 10): ((bucket, shards), ...) — the listed
+    # buckets run their kernel rungs height-sharded over `shards`
+    # devices with the bounded halo exchange (distributed.spatial).
+    # Spatial buckets ladder from "int8": the chained datapath's fused
+    # offset stage cannot be halo-split.
+    spatial_shards: tuple[tuple[int, int], ...] = ()
 
     def __post_init__(self):
         if self.quant not in LADDER:
@@ -88,6 +102,29 @@ class DCLServeConfig:
                              "static compilation needs a closed shape set")
         if self.slots < 1:
             raise ValueError(f"slots must be >= 1 (got {self.slots})")
+        if self.batch_window < 0:
+            raise ValueError(
+                f"batch_window must be >= 0 (got {self.batch_window})")
+        for entry in self.spatial_shards:
+            if len(entry) != 2:
+                raise ValueError(
+                    f"spatial_shards entries are (bucket, shards) pairs "
+                    f"(got {entry!r})")
+            b, s = entry
+            if b not in self.buckets:
+                raise ValueError(
+                    f"spatial_shards names bucket {b} which is not in "
+                    f"buckets {self.buckets}")
+            if s < 1:
+                raise ValueError(
+                    f"spatial_shards for bucket {b} must be >= 1 "
+                    f"(got {s})")
+
+    def spatial_shards_for(self, bucket: int | None) -> int:
+        for b, s in self.spatial_shards:
+            if b == bucket:
+                return s
+        return 1
 
 
 def bucket_layer_dims(cfg: R.ResNetDCNConfig, res: int) -> dict[str, dict]:
@@ -189,6 +226,26 @@ class DCLServingEngine:
                 model_cfg, quant="none", use_kernel=False),
         }
 
+        # Spatial sharding (ISSUE 10): per-bucket meshes for the
+        # height-sharded kernel rungs.  Shard counts are validated
+        # against the real device count HERE — a misconfigured engine
+        # fails at construction, not on the first sharded request.
+        self._spatial_meshes: dict[int, Mesh] = {}
+        for b, s in serve_cfg.spatial_shards:
+            if s > jax.device_count():
+                raise ValueError(
+                    f"spatial_shards={s} for bucket {b} exceeds the "
+                    f"{jax.device_count()} available device(s) — the "
+                    f"height split needs one device per shard")
+            if s > 1:
+                if model_cfg.offset_bound is None:
+                    raise ValueError(
+                        f"spatial_shards={s} for bucket {b} needs a "
+                        f"trained offset_bound on the model config — the "
+                        f"bounded halo exchange is derived from it")
+                self._spatial_meshes[b] = Mesh(
+                    np.asarray(jax.devices()[:s]), ("model",))
+
         # Per-bucket plan cache: resolve every DCL tile config now, so
         # the chooser sweep happens at engine start, not first request.
         int8ish = serve_cfg.quant in ("int8_chain", "int8")
@@ -197,22 +254,30 @@ class DCLServingEngine:
         # Per-layer plan provenance (ISSUE 9): "tuned" when the layer's
         # tiles came from the installed autotuner cache (repro.tune),
         # "analytic" for the Sec. 3.2 chooser — surfaced in telemetry()
-        # and serve_bench so a cold/ignored cache is visible.
+        # and serve_bench so a cold/ignored cache is visible.  Spatial
+        # buckets warm the per-shard (local-height) plans the sharded
+        # path actually resolves and tag the provenance with the shard
+        # count ("analytic@2shard") — ISSUE 10 satellite: warming the
+        # global-height plans would leave every sharded dispatch cold.
         self.plan_sources: dict[int, dict[str, str]] = {}
         if model_cfg.offset_bound is not None:
             for b in serve_cfg.buckets:
                 dims = bucket_layer_dims(model_cfg, b)
+                shards = serve_cfg.spatial_shards_for(b)
                 self.plans[b] = plan.warm_tile_cache(
                     dims,
                     offset_bound=model_cfg.offset_bound,
                     objective="forward",
-                    dtype=plan_dtype)
+                    dtype=plan_dtype,
+                    spatial_shards=shards)
+                suffix = f"@{shards}shard" if shards > 1 else ""
                 self.plan_sources[b] = {
                     name: plan.tile_source(
                         d["h"], d["w"], d["c"], d["m"],
                         stride=d.get("stride", 1),
                         offset_bound=model_cfg.offset_bound,
-                        objective="forward", dtype=plan_dtype)
+                        objective="forward", dtype=plan_dtype,
+                        spatial_shards=shards) + suffix
                     for name, d in dims.items()}
 
         self.queue = AdmissionQueue(AdmissionConfig(
@@ -308,12 +373,15 @@ class DCLServingEngine:
 
     # -- serving -------------------------------------------------------
     def step(self) -> int:
-        """Expire, admit one bucket's batch, serve it.  Returns the
-        number of requests retired this step."""
+        """Expire, pick the most urgent bucket (oldest-deadline-first,
+        full batches preferred — ``AdmissionQueue.pick_bucket``), serve
+        it.  Returns the number of requests retired this step."""
         before = len(self.completed)
         for req in self.queue.expire(self.clock()):
             self._retire(req)
-        bucket = self.queue.head_bucket()
+        bucket = self.queue.pick_bucket(
+            slots=self.scfg.slots, now=self.clock(),
+            batch_window=self.scfg.batch_window)
         if bucket is None:
             self._g_queue.set(len(self.queue))
             return len(self.completed) - before
@@ -340,8 +408,18 @@ class DCLServingEngine:
             images[i, :arr.shape[0], :arr.shape[1], :] = arr
         return jnp.asarray(images)
 
-    def _forward(self, rung: str, x):
+    def _forward(self, rung: str, x, bucket: int | None = None):
         cfg = self._cfgs[rung]
+        # Spatial buckets (ISSUE 10): the kernel rungs run height-
+        # sharded under the bucket's mesh; the chained rung never gets
+        # here for them (_run_batch enters the ladder at "int8") and
+        # the reference rung has no shard_map wrap.
+        shards = self.scfg.spatial_shards_for(bucket)
+        spatial = shards > 1 and rung in ("int8", "fp32_kernel")
+        if spatial:
+            cfg = dataclasses.replace(cfg, shard_spatial=True)
+        mesh_ctx = use_rules(mesh=self._spatial_meshes[bucket]) \
+            if spatial else contextlib.nullcontext()
         # Instrument every bounded dispatch in this forward: the
         # recorder chains to whatever hook is already installed (the
         # chaos harness), so injected faults still fire FIRST and abort
@@ -350,7 +428,8 @@ class DCLServingEngine:
             registry=self.metrics, tracer=self._tracer,
             tracker=self.divergence, next_hook=ops.get_dispatch_hook(),
             clock=self.clock)
-        with ops.dispatch_hook_scope(rec), ops.degradation_scope(False):
+        with mesh_ctx, ops.dispatch_hook_scope(rec), \
+                ops.degradation_scope(False):
             out, _ = R.forward(self.params, cfg, x,
                                quant_scales=self.scale_table)
         return out
@@ -358,10 +437,15 @@ class DCLServingEngine:
     def _run_batch(self, bucket: int, reqs: list[DetRequest]) -> None:
         x = self._batch_array(bucket, reqs)
         rung_idx = LADDER.index(self.scfg.quant)
+        if self.scfg.spatial_shards_for(bucket) > 1 \
+                and LADDER[rung_idx] == "int8_chain":
+            # Chained int8 cannot halo-split its fused offset stage;
+            # spatial buckets enter the ladder one rung down.
+            rung_idx = LADDER.index("int8")
         attempt = 0
         while True:
             try:
-                out = self._forward(LADDER[rung_idx], x)
+                out = self._forward(LADDER[rung_idx], x, bucket)
                 break
             except Exception as e:          # noqa: BLE001 — typed below
                 self._c_retries.inc()
@@ -429,6 +513,9 @@ class DCLServingEngine:
                 "strict_buckets": self.scfg.strict_buckets,
                 "queue_capacity": self.scfg.queue_capacity,
                 "shed_policy": self.scfg.shed_policy,
+                "batch_window": self.scfg.batch_window,
+                "spatial_shards": [list(e)
+                                   for e in self.scfg.spatial_shards],
             },
             "steps": self.steps,
             "counters": dict(self.counters),

@@ -93,28 +93,21 @@ def _cap_candidates(cands, max_candidates, traffic):
     return [cands[0]] + [rest[i] for i in idxs]
 
 
-def tune_deform_conv(*, h: int, w: int, c: int, m: int, batch: int = 1,
-                     kernel_size: int = 3, stride: int = 1,
-                     dilation: int = 1, offset_bound: float = 2.0,
-                     objective: str = "training",
-                     dtype: str | None = None,
-                     cores: int = 1,
-                     sweep_cores: tuple | None = None,
-                     reps: int = 3,
-                     max_candidates: int | None = 12,
-                     cache: TileCache | None = None,
-                     rng_seed: int = 0) -> dict:
-    """Tune one deform_conv config; returns the result record and (when
-    ``cache`` is given) writes one entry per swept cores value.
+def _tune_single(*, h: int, w: int, c: int, m: int, batch: int = 1,
+                 kernel_size: int = 3, stride: int = 1,
+                 dilation: int = 1, offset_bound: float = 2.0,
+                 objective: str = "training",
+                 dtype: str | None = None,
+                 cores: int = 1,
+                 sweep_cores: tuple | None = None,
+                 reps: int = 3,
+                 max_candidates: int | None = 12,
+                 cache: TileCache | None = None,
+                 rng_seed: int = 0) -> dict:
+    """Tune ONE (shape, objective, dtype) config — the measurement body
+    of :func:`tune_deform_conv`, which sweeps quant modes over it."""
+    import dataclasses as _dc
 
-    ``objective="training"`` measures the jitted fwd+bwd pullback
-    (``jax.grad`` through the custom-VJP zero-copy backward — the
-    Trainer's workload); ``"forward"`` the jitted inference dispatch
-    (the serving engine's).  ``cores`` is the value the *analytic*
-    dispatch would use (the baseline); ``sweep_cores`` (default
-    ``(cores,)``) expands the search.  ``dtype="int8"`` tunes the
-    quantized datapath (forward objective only).
-    """
     import jax
     import jax.numpy as jnp
 
@@ -125,14 +118,17 @@ def tune_deform_conv(*, h: int, w: int, c: int, m: int, batch: int = 1,
 
     if objective not in ("forward", "training"):
         raise ValueError(f"unknown objective {objective!r}")
-    if dtype == "int8" and objective == "training":
-        raise ValueError("dtype='int8' tunes the inference datapath — "
-                         "use objective='forward'")
+    if dtype in ("int8", "int8_chain") and objective == "training":
+        raise ValueError(f"dtype={dtype!r} tunes the inference datapath "
+                         f"— use objective='forward'")
     sweep = tuple(sweep_cores) if sweep_cores else (cores,)
     if cores not in sweep:
         sweep = (cores,) + sweep
     plat = current_platform()
     precision = "int8" if dtype == "int8" else "fp32"
+    # The analytic chooser only knows element widths (chain bands are
+    # int8); the tuned-cache entries keep the full "int8_chain" key.
+    chooser_dtype = "int8" if dtype == "int8_chain" else dtype
     shape = LayerShape(h=h, w=w, c_in=c, c_out=m, kernel_size=kernel_size,
                        stride=stride, offset_bound=offset_bound)
 
@@ -147,35 +143,69 @@ def tune_deform_conv(*, h: int, w: int, c: int, m: int, batch: int = 1,
         ko, (batch, ho, wo, 2 * k2), jnp.float32, -1.0, 1.0)
     wgt = jax.random.normal(kw, (k2, c, m), jnp.float32) * 0.1
 
-    def workload(kt, co, dwf):
-        """Jitted measurement target at EXPLICIT tiles (bypasses both
-        the memoized resolver and any installed tuned cache)."""
-        def fwd(xx, oo, ww):
-            return ops.deform_conv(
-                xx, oo, ww, kernel_size=kernel_size, stride=stride,
-                dilation=dilation, offset_bound=offset_bound,
-                tile_h=kt.tile_h, tile_w=kt.tile_w, tile_c=kt.tile_c,
-                tile_m=kt.tile_m, precision=precision,
-                cores=co if objective == "training" else 1,
-                dw_flush_every_step=dwf if objective == "training"
-                else None)
-        if objective == "training":
-            return jax.jit(jax.grad(
-                lambda xx, oo, ww: jnp.sum(fwd(xx, oo, ww)),
-                argnums=(0, 1, 2)))
-        return jax.jit(fwd)
+    if dtype == "int8_chain":
+        # Chained workload: the offset conv is fused in-kernel, so the
+        # measured dispatch takes the offset-conv weights, not offsets.
+        from repro.quant.qtypes import compute_scale
+        w_off = jax.random.normal(ko, (k2, c, 2 * k2), jnp.float32) * 0.05
+        b_off = jnp.zeros((2 * k2,), jnp.float32)
+        x_scale = compute_scale(x)
+        meas_args = (x, wgt, w_off)
+
+        def workload(kt, co, dwf):
+            def fwd(xx, ww, wo_):
+                return ops.deform_conv_chain(
+                    xx, ww, wo_, b_off, kernel_size=kernel_size,
+                    stride=stride, dilation=dilation,
+                    offset_bound=offset_bound, x_scale=x_scale,
+                    tile_h=kt.tile_h, tile_w=kt.tile_w, tile_c=kt.tile_c,
+                    tile_m=kt.tile_m, emit="fp32")
+            return jax.jit(fwd)
+    else:
+        meas_args = (x, offs, wgt)
+
+        def workload(kt, co, dwf):
+            """Jitted measurement target at EXPLICIT tiles (bypasses both
+            the memoized resolver and any installed tuned cache)."""
+            def fwd(xx, oo, ww):
+                return ops.deform_conv(
+                    xx, oo, ww, kernel_size=kernel_size, stride=stride,
+                    dilation=dilation, offset_bound=offset_bound,
+                    tile_h=kt.tile_h, tile_w=kt.tile_w, tile_c=kt.tile_c,
+                    tile_m=kt.tile_m, precision=precision,
+                    cores=co if objective == "training" else 1,
+                    dw_flush_every_step=dwf if objective == "training"
+                    else None)
+            if objective == "training":
+                return jax.jit(jax.grad(
+                    lambda xx, oo, ww: jnp.sum(fwd(xx, oo, ww)),
+                    argnums=(0, 1, 2)))
+            return jax.jit(fwd)
 
     def ctx(kt, co):
-        return dict(op="deform_conv", precision=precision,
+        return dict(op="deform_conv", precision=dtype or "fp32",
                     dataflow="zero_copy", shape=tuple(x.shape),
                     offset_bound=offset_bound, kernel_size=kernel_size,
                     stride=stride, dilation=dilation, m=m, cores=co,
                     platform=plat, tiles=(kt.tile_h, kt.tile_w,
                                           kt.tile_c, kt.tile_m))
 
+    def _pin_chain(cands):
+        """Chaining pins tile_c = C (the fused offset stage needs the
+        full channel extent staged per band) — collapse the candidate
+        list onto that plane, seed first, order preserved."""
+        out = []
+        for kt in cands:
+            kt = _dc.replace(kt, tile_c=c)
+            if kt not in out:
+                out.append(kt)
+        return out
+
     analytic_kt = choose_kernel_tiles(
         shape, batch=batch, dilation=dilation, objective=objective,
-        dtype=dtype, cores=cores)
+        dtype=chooser_dtype, cores=cores)
+    if dtype == "int8_chain":
+        analytic_kt = _dc.replace(analytic_kt, tile_c=c)
     per_cores: dict[str, dict] = {}
     analytic_us = None
     n_measured = 0
@@ -188,10 +218,13 @@ def tune_deform_conv(*, h: int, w: int, c: int, m: int, batch: int = 1,
                 continue
             seed_kt = choose_kernel_tiles(
                 shape, batch=batch, dilation=dilation, objective=objective,
-                dtype=dtype, cores=co)
+                dtype=chooser_dtype, cores=co)
             cands = neighbor_kernel_tiles(
                 shape, seed_kt, dilation=dilation, objective=objective,
-                dtype=dtype)
+                dtype=chooser_dtype)
+            if dtype == "int8_chain":
+                seed_kt = _dc.replace(seed_kt, tile_c=c)
+                cands = _pin_chain(cands)
             cands = _cap_candidates(
                 cands, max_candidates,
                 lambda kt: _traffic_key(shape, kt, batch=batch,
@@ -201,7 +234,7 @@ def tune_deform_conv(*, h: int, w: int, c: int, m: int, batch: int = 1,
             for kt in cands:
                 try:
                     s = measure_best_of(workload(kt, co, None),
-                                        (x, offs, wgt),
+                                        meas_args,
                                         context=ctx(kt, co), reps=reps)
                 except Exception as e:  # noqa: BLE001 — skip, keep tuning
                     _log.debug("tune: candidate %s at cores=%d failed "
@@ -223,7 +256,7 @@ def tune_deform_conv(*, h: int, w: int, c: int, m: int, batch: int = 1,
             if objective == "training":
                 try:
                     s_alt = measure_best_of(workload(kt, co, False),
-                                            (x, offs, wgt),
+                                            meas_args,
                                             context=ctx(kt, co), reps=reps)
                     n_measured += 1
                     dwf = True if s <= s_alt else False
@@ -283,3 +316,70 @@ def tune_deform_conv(*, h: int, w: int, c: int, m: int, batch: int = 1,
                 offset_bound=offset_bound, objective=objective,
                 dtype=dtype, cores=int(co_str), platform=plat)
     return result
+
+
+_QUANT_MODES = (None, "int8", "int8_chain")
+
+
+def tune_deform_conv(*, h: int, w: int, c: int, m: int, batch: int = 1,
+                     kernel_size: int = 3, stride: int = 1,
+                     dilation: int = 1, offset_bound: float = 2.0,
+                     objective: str = "training",
+                     dtype: str | None = None,
+                     sweep_quant: tuple | None = None,
+                     cores: int = 1,
+                     sweep_cores: tuple | None = None,
+                     reps: int = 3,
+                     max_candidates: int | None = 12,
+                     cache: TileCache | None = None,
+                     rng_seed: int = 0) -> dict:
+    """Tune one deform_conv shape; returns the result record for
+    ``dtype`` and (when ``cache`` is given) writes one entry per swept
+    (quant mode, cores) pair.
+
+    ``objective="training"`` measures the jitted fwd+bwd pullback
+    (``jax.grad`` through the custom-VJP zero-copy backward — the
+    Trainer's workload); ``"forward"`` the jitted inference dispatch
+    (the serving engine's).  ``cores`` is the value the *analytic*
+    dispatch would use (the baseline); ``sweep_cores`` (default
+    ``(cores,)``) expands the search.
+
+    Quant sweep (ISSUE 10 satellite): for ``objective="forward"`` the
+    tuner sweeps the serving quant modes **by default** — ``dtype``
+    plus ``"int8"`` and ``"int8_chain"`` (the chained mode measures the
+    fused-offset ``ops.deform_conv_chain`` dispatch with ``tile_c``
+    pinned to C) — and persists each winner under its OWN quant-keyed
+    cache entry, so the serving ladder's int8 rungs resolve tuned
+    plans, not plans measured on the fp32 kernel.  Pass
+    ``sweep_quant=(dtype,)`` to tune a single mode, or any subset of
+    ``(None, "int8", "int8_chain")``.  Training always tunes fp32 only
+    (the quantized datapaths are inference).  The sweep's extra records
+    ride along under ``result["quant_sweep"]``.
+    """
+    if objective not in ("forward", "training"):
+        raise ValueError(f"unknown objective {objective!r}")
+    if sweep_quant is None:
+        sweep_quant = (dtype, "int8", "int8_chain") \
+            if objective == "forward" else (dtype,)
+    modes: list = []
+    for dt in (dtype, *sweep_quant):
+        if dt not in _QUANT_MODES:
+            raise ValueError(
+                f"unknown quant mode {dt!r} in sweep_quant; expected a "
+                f"subset of {_QUANT_MODES}")
+        if dt not in modes:
+            modes.append(dt)
+
+    kw = dict(h=h, w=w, c=c, m=m, batch=batch, kernel_size=kernel_size,
+              stride=stride, dilation=dilation, offset_bound=offset_bound,
+              objective=objective, cores=cores, sweep_cores=sweep_cores,
+              reps=reps, max_candidates=max_candidates, cache=cache,
+              rng_seed=rng_seed)
+    results: dict[str, dict] = {}
+    for dt in modes:
+        results[dt or "fp32"] = _tune_single(dtype=dt, **kw)
+    primary = results[dtype or "fp32"]
+    extras = {k: v for k, v in results.items() if v is not primary}
+    if extras:
+        primary["quant_sweep"] = extras
+    return primary

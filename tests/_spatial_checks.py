@@ -1,0 +1,197 @@
+"""Shared body of the spatial-sharding parity tests (ISSUE 10).
+
+Same two entry modes as ``_sharded_checks.py``: in-process when the
+pytest process already sees >= 4 devices (the CI ``spatial-4dev`` job),
+else ONCE in a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` so tier-1 boxes
+still get the coverage instead of a skip.
+
+The checks cover the ISSUE 10 acceptance criteria: height-sharded
+forward parity vs the unsharded zero-copy kernel (bit-exact fp32 under
+pinned tiles, bounded int8 diff), backward grad parity through the
+halo-gradient return + dw psum, stride-2, the spatial x batch 2-D mesh
+composition, the friendly ragged/halo-thin errors at the public entry,
+and the serving engine's spatial buckets end-to-end (per-shard plan
+provenance, the int8 ladder entry, shards > devices rejected at
+construction).
+
+Note the pinned-tile discipline: the zero-copy kernels are tile-shape
+sensitive at the 1e-5 (fp32) / 1e-2 (int8 after dequant) level — the
+per-tile revisit order changes fp32 accumulation — and the sharded
+path resolves tiles at the LOCAL height.  Bitwise assertions therefore
+pin identical explicit tiles on both sides; default-tile parity is
+allclose territory by design, not a sharding defect.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+if __name__ == "__main__":       # subprocess mode: force the devices
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _max_diff(a, b) -> float:
+    return float(jnp.max(jnp.abs(jnp.asarray(a) - jnp.asarray(b))))
+
+
+def _tol_excess(a, b, *, rtol: float = 1e-4, atol: float = 2e-4) -> float:
+    a, b = jnp.asarray(a), jnp.asarray(b)
+    return float(jnp.max(jnp.abs(a - b) - (atol + rtol * jnp.abs(b))))
+
+
+def _inputs(n, h, w, c, m, k=3, seed=0):
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    x = jax.random.normal(k1, (n, h, w, c), jnp.float32)
+    offs = 2.0 * jax.random.uniform(k2, (n, h, w, 2 * k * k),
+                                    jnp.float32) - 1.0
+    wgt = 0.1 * jax.random.normal(k3, (k * k, c, m), jnp.float32)
+    return x, offs, wgt
+
+
+def run_checks() -> dict:
+    assert jax.device_count() >= 4, jax.devices()
+    from jax.sharding import Mesh
+    from repro.distributed.sharding import use_rules
+    from repro.kernels import ops
+
+    B = 2.0
+    out: dict = {"device_count": jax.device_count()}
+    x, offs, wgt = _inputs(1, 32, 32, 8, 8)
+    c = m = 8
+    mesh2 = Mesh(np.asarray(jax.devices()[:2]), ("model",))
+    mesh4 = Mesh(np.asarray(jax.devices()[:4]), ("model",))
+
+    # -- 1. fp32 forward parity, pinned tiles => bitwise ---------------
+    pin = dict(tile_h=4, tile_w=8, tile_c=c, tile_m=m)
+    ref_pin = ops.deform_conv(x, offs, wgt, offset_bound=B, **pin)
+    for label, mesh in (("2shard", mesh2), ("4shard", mesh4)):
+        with use_rules(mesh=mesh):
+            y = ops.deform_conv(x, offs, wgt, offset_bound=B,
+                                shard_spatial=True, **pin)
+        out[f"fp32_pinned_bitwise_{label}"] = bool(jnp.all(y == ref_pin))
+
+    # -- 2. fp32 default tiles: local-height tile resolution => allclose
+    ref = ops.deform_conv(x, offs, wgt, offset_bound=B)
+    with use_rules(mesh=mesh4):
+        y4 = ops.deform_conv(x, offs, wgt, offset_bound=B,
+                             shard_spatial=True)
+    out["fp32_default_diff_4shard"] = _max_diff(y4, ref)
+
+    # -- 3. int8 parity, pinned tiles ----------------------------------
+    yq_ref = ops.deform_conv(x, offs, wgt, offset_bound=B,
+                             precision="int8", **pin)
+    with use_rules(mesh=mesh4):
+        yq4 = ops.deform_conv(x, offs, wgt, offset_bound=B,
+                              precision="int8", shard_spatial=True, **pin)
+    out["int8_pinned_bitwise_4shard"] = bool(jnp.all(yq4 == yq_ref))
+    out["int8_pinned_diff_4shard"] = _max_diff(yq4, yq_ref)
+
+    # -- 4. backward: halo-gradient return + dw psum -------------------
+    def grads(fn):
+        f = lambda a, b, c_: jnp.sum(jnp.sin(fn(a, b, c_)))  # noqa: E731
+        return jax.grad(f, argnums=(0, 1, 2))(x, offs, wgt)
+
+    g_ref = grads(lambda a, b, c_: ops.deform_conv(
+        a, b, c_, offset_bound=B, **pin))
+    with use_rules(mesh=mesh4):
+        g_sh = grads(lambda a, b, c_: ops.deform_conv(
+            a, b, c_, offset_bound=B, shard_spatial=True, **pin))
+    for name, a, b in zip(("dx", "doff", "dw"), g_sh, g_ref):
+        out[f"grad_{name}_tol_excess"] = _tol_excess(a, b)
+
+    # -- 5. stride-2 (H % (stride*shards) at the entry) ----------------
+    offs2 = offs[:, ::2, ::2]
+    ref2 = ops.deform_conv(x, offs2, wgt, offset_bound=B, stride=2)
+    with use_rules(mesh=mesh4):
+        y2 = ops.deform_conv(x, offs2, wgt, offset_bound=B, stride=2,
+                             shard_spatial=True)
+    out["stride2_diff_4shard"] = _max_diff(y2, ref2)
+
+    # -- 6. spatial x batch 2-D mesh composition -----------------------
+    xb, offb, wgtb = _inputs(2, 16, 16, 8, 8, seed=3)
+    refb = ops.deform_conv(xb, offb, wgtb, offset_bound=B, **pin)
+    mesh2d = Mesh(np.asarray(jax.devices()[:4]).reshape(2, 2),
+                  ("data", "model"))
+    with use_rules(mesh=mesh2d):
+        yb = ops.deform_conv(xb, offb, wgtb, offset_bound=B,
+                             shard_batch=True, shard_spatial=True, **pin)
+    out["batch_spatial_2d_bitwise"] = bool(jnp.all(yb == refb))
+
+    # -- 7. friendly errors at the public entry ------------------------
+    with use_rules(mesh=mesh4):
+        try:
+            ops.deform_conv(x[:, :30], offs[:, :30], wgt, offset_bound=B,
+                            shard_spatial=True)
+            out["ragged_error"] = ""
+        except ValueError as e:
+            out["ragged_error"] = str(e)
+        try:
+            ops.deform_conv(x[:, :12], offs[:, :12], wgt, offset_bound=B,
+                            shard_spatial=True)
+            out["thin_error"] = ""
+        except ValueError as e:
+            out["thin_error"] = str(e)
+
+    # -- 8. serving engine spatial buckets end-to-end ------------------
+    from repro.models import resnet_dcn as R
+    from repro.quant.calibrate import calibrate_resnet_dcn
+    from repro.serve import DCLServeConfig, DCLServingEngine
+
+    # Shallow on purpose: every DCL height must satisfy
+    # h/shards >= halo (=4 at B=2, K=3) — dims are s0b0 h=8 s1,
+    # s1b0 h=8 s2, both fine at 2 shards.
+    cfg = R.ResNetDCNConfig(
+        stage_sizes=(1, 1), widths=(16, 32), stem_width=8, num_dcn=2,
+        num_classes=4, img_size=32, offset_bound=2.0, use_kernel=True)
+    params = R.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.RandomState(0)
+    table = calibrate_resnet_dcn(
+        params, cfg, [rng.randn(2, 32, 32, 3).astype(np.float32)])
+    img = np.random.RandomState(7).randn(32, 32, 3).astype(np.float32)
+
+    try:
+        DCLServingEngine(params, cfg,
+                         DCLServeConfig(buckets=(32,), slots=2,
+                                        spatial_shards=((32, 8),)),
+                         scale_table=table)
+        out["engine_overshard_error"] = ""
+    except ValueError as e:
+        out["engine_overshard_error"] = str(e)
+
+    results = {}
+    for label, shards in (("flat", ()), ("spatial", ((32, 2),))):
+        # Both engines serve the "int8" rung (the flat default would be
+        # int8_chain; the spatial bucket enters one rung down anyway),
+        # so the diff below isolates the height split + local tiles.
+        eng = DCLServingEngine(
+            params, cfg,
+            DCLServeConfig(buckets=(32,), slots=2, quant="int8",
+                           spatial_shards=shards),
+            scale_table=table)
+        r = eng.submit(img)
+        eng.run_until_drained()
+        results[label] = r
+        if label == "spatial":
+            tel = eng.telemetry()
+            out["engine_outcome"] = r.outcome
+            out["engine_ladder"] = r.ladder
+            out["engine_plan_sources"] = tel["plan_sources"]["32"]
+            out["engine_telemetry_shards"] = \
+                tel["engine"]["spatial_shards"]
+    # The flat engine serves the chained rung; the spatial bucket
+    # enters at "int8" and resolves local-height tiles — parity is
+    # model-level approximate, not bitwise.
+    out["engine_cls_diff"] = _max_diff(results["spatial"].result["cls"],
+                                       results["flat"].result["cls"])
+    return out
+
+
+if __name__ == "__main__":
+    print(json.dumps(run_checks()))

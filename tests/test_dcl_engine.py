@@ -259,3 +259,112 @@ def test_malformed_request_is_typed_not_raised(model):
     eng.submit(_img(70))
     done = eng.run_until_drained()
     assert done[-1].outcome == "ok"
+
+
+# -- deadline-aware scheduling + spatial buckets (ISSUE 10) ---------------
+
+def test_pick_bucket_orders_by_deadline_then_age():
+    from repro.serve.admission import (AdmissionConfig, AdmissionQueue,
+                                       DetRequest)
+    q = AdmissionQueue(AdmissionConfig())
+    q.queue.append(DetRequest(0, None, bucket=64, submitted_at=0.0))
+    q.queue.append(DetRequest(1, None, bucket=128, deadline=9.0,
+                              submitted_at=1.0))
+    # blind head-of-line order would starve the tight-deadline bucket
+    assert q.head_bucket() == 64
+    assert q.pick_bucket(slots=4, now=2.0) == 128
+    # ties on deadline (both None) break by oldest submit
+    q2 = AdmissionQueue(AdmissionConfig())
+    q2.queue.append(DetRequest(0, None, bucket=128, submitted_at=5.0))
+    q2.queue.append(DetRequest(1, None, bucket=64, submitted_at=3.0))
+    assert q2.pick_bucket(slots=4, now=9.0) == 64
+    assert AdmissionQueue(AdmissionConfig()).pick_bucket(
+        slots=4, now=0.0) is None
+
+
+def test_pick_bucket_prefers_full_batches_and_honors_window():
+    from repro.serve.admission import (AdmissionConfig, AdmissionQueue,
+                                       DetRequest)
+    q = AdmissionQueue(AdmissionConfig())
+    q.queue.append(DetRequest(0, None, bucket=128, deadline=1.0,
+                              submitted_at=0.0))
+    for i in (1, 2):
+        q.queue.append(DetRequest(i, None, bucket=64, submitted_at=2.0))
+    # 64 fills all slots -> preferred over the more urgent partial 128
+    assert q.pick_bucket(slots=2, now=3.0) == 64
+    # with room for both, deadline order reasserts itself
+    assert q.pick_bucket(slots=3, now=3.0) == 128
+    # partials: held inside the window, eligible after it
+    q3 = AdmissionQueue(AdmissionConfig())
+    q3.queue.append(DetRequest(0, None, bucket=64, submitted_at=10.0))
+    assert q3.pick_bucket(slots=2, now=10.5, batch_window=1.0) is None
+    assert q3.pick_bucket(slots=2, now=11.0, batch_window=1.0) == 64
+    assert q3.pick_bucket(slots=2, now=10.5) == 64   # window off
+
+
+def test_urgent_bucket_served_before_older_lax_bucket(model):
+    clock = FakeClock()
+    eng = _engine(model, buckets=(BUCKET, 64), clock=clock)
+    r_lax = eng.submit(_img(90))                     # older, no deadline
+    clock.advance(1.0)
+    r_tight = eng.submit(_img(91, side=64), deadline=100.0)
+    eng.step()
+    assert r_tight.outcome == "ok" and r_lax.outcome == "pending"
+    eng.run_until_drained()
+    assert r_lax.outcome == "ok"
+
+
+def test_full_batch_preferred_over_urgent_partial(model):
+    eng = _engine(model, buckets=(BUCKET, 64))       # slots=2
+    r1, r2 = eng.submit(_img(92)), eng.submit(_img(93))
+    ru = eng.submit(_img(94, side=64), deadline=50.0)
+    eng.step()
+    assert r1.outcome == "ok" and r2.outcome == "ok"
+    assert ru.outcome == "pending"
+    eng.run_until_drained()
+    assert ru.outcome == "ok"
+
+
+def test_batch_window_holds_partial_batches(model):
+    clock = FakeClock()
+    eng = _engine(model, batch_window=2.0, clock=clock)
+    r = eng.submit(_img(95))
+    assert eng.step() == 0 and r.outcome == "pending"
+    clock.advance(1.0)
+    assert eng.step() == 0                  # still inside the window
+    clock.advance(1.0)
+    eng.step()
+    assert r.outcome == "ok"
+    # a full batch never waits on the window
+    r1, r2 = eng.submit(_img(96)), eng.submit(_img(97))
+    eng.step()
+    assert r1.outcome == "ok" and r2.outcome == "ok"
+
+
+def test_serve_config_validates_window_and_spatial_shards():
+    with pytest.raises(ValueError) as ei:
+        DCLServeConfig(buckets=(32,), batch_window=-1.0)
+    assert "batch_window" in str(ei.value)
+    with pytest.raises(ValueError) as ei:
+        DCLServeConfig(buckets=(32,), spatial_shards=((48, 2),))
+    assert "not in buckets" in str(ei.value)
+    with pytest.raises(ValueError):
+        DCLServeConfig(buckets=(32,), spatial_shards=((32, 0),))
+    cfg = DCLServeConfig(buckets=(32, 64), spatial_shards=((32, 2),))
+    assert cfg.spatial_shards_for(32) == 2
+    assert cfg.spatial_shards_for(64) == 1
+
+
+def test_spatial_shards_beyond_devices_rejected_at_init(model):
+    too_many = jax.device_count() + 1
+    with pytest.raises(ValueError) as ei:
+        _engine(model, spatial_shards=((BUCKET, too_many),))
+    assert f"spatial_shards={too_many}" in str(ei.value)
+    assert "available device" in str(ei.value)
+
+
+def test_telemetry_reports_scheduler_config(model):
+    eng = _engine(model, batch_window=0.5)
+    tel = eng.telemetry()["engine"]
+    assert tel["batch_window"] == 0.5
+    assert tel["spatial_shards"] == []

@@ -331,3 +331,38 @@ def test_engine_warmup_reads_tuned_cache():
     assert tel["plan_cache"]["tuned_cache"]["installed"]
     srcs = tel["plan_sources"][str(bucket)]
     assert srcs and set(srcs.values()) == {"tuned"}
+
+
+def test_forward_tune_sweeps_quant_modes():
+    """ISSUE 10 satellite: a forward-objective tune sweeps the int8 and
+    chained-int8 datapaths by default, writing quant-keyed cache
+    entries, so serving buckets find measured plans on every rung."""
+    cache = TileCache()
+    res = tune_deform_conv(h=8, w=8, c=8, m=8, offset_bound=2.0,
+                           objective="forward", reps=1, max_candidates=2,
+                           cache=cache)
+    assert set(res["quant_sweep"]) == {"int8", "int8_chain"}
+    for dt in (None, "int8", "int8_chain"):
+        assert cache.lookup(**_key(dtype=dt)) is not None
+    # chain entries pin tile_c == C: the fused offset stage stages the
+    # full input depth per band
+    assert cache.lookup(**_key(dtype="int8_chain"))["tiles"][2] == 8
+    # training keeps the fp32-only sweep (the swept rungs are
+    # inference-only datapaths)
+    cache2 = TileCache()
+    res2 = tune_deform_conv(h=8, w=8, c=8, m=8, offset_bound=2.0,
+                            objective="training", reps=1,
+                            max_candidates=2, cache=cache2)
+    assert res2.get("quant_sweep", {}) == {}
+    assert cache2.lookup(**_key(objective="training")) is not None
+    assert cache2.lookup(**_key(objective="training",
+                                dtype="int8")) is None
+
+
+def test_tune_rejects_bad_quant_combos():
+    with pytest.raises(ValueError):
+        tune_deform_conv(h=8, w=8, c=8, m=8, offset_bound=2.0,
+                         objective="training", dtype="int8_chain")
+    with pytest.raises(ValueError):
+        tune_deform_conv(h=8, w=8, c=8, m=8, offset_bound=2.0,
+                         objective="forward", sweep_quant=("fp8",))
